@@ -1,0 +1,85 @@
+"""Shared benchmark scaffolding: corpora, indexes, timing, CSV rows.
+
+Scale note (DESIGN.md §6): the paper benches 10-100M-vector corpora on a
+24-core AVX2 CPU; this container is a single CPU core with TPU as the target,
+so corpora are 10^4-10^5 vectors and we validate the paper's RELATIVE claims
+(orderings, scalings, counts) plus the structural quantities that determine
+TPU cost.  Sizes are overridable via REPRO_BENCH_N / REPRO_BENCH_Q.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.index import flat, search
+
+N = int(os.environ.get("REPRO_BENCH_N", 60_000))
+D = int(os.environ.get("REPRO_BENCH_D", 128))
+NQ = int(os.environ.get("REPRO_BENCH_Q", 5))
+N_CLUSTERS = max(int(np.sqrt(N)), 16)
+
+_ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows() -> list[str]:
+    return list(_ROWS)
+
+
+@functools.lru_cache(maxsize=1)
+def corpus():
+    rng = np.random.default_rng(42)
+    x = synthetic.clustered(rng, N, D, n_centers=max(N // 200, 32))
+    qs = synthetic.queries_from(rng, x, NQ)
+    return jnp.asarray(x), jnp.asarray(qs)
+
+
+@functools.lru_cache(maxsize=1)
+def pq_index():
+    x, _ = corpus()
+    return search.build_pq_index(jax.random.key(0), x, N_CLUSTERS, n_iter=6)
+
+
+@functools.lru_cache(maxsize=1)
+def rq_index():
+    x, _ = corpus()
+    return search.build_rabitq_index(jax.random.key(0), x, N_CLUSTERS, n_iter=6)
+
+
+@functools.lru_cache(maxsize=8)
+def ground_truth(k: int):
+    x, qs = corpus()
+    ds, ids = [], []
+    for q in qs:
+        d, i = flat.search(x, q, k)
+        ds.append(np.asarray(d))
+        ids.append(np.asarray(i))
+    return np.stack(ds), np.stack(ids)
+
+
+def recall(got_ids: np.ndarray, want_ids: np.ndarray) -> float:
+    return len(set(got_ids.tolist()) & set(want_ids.tolist())) / len(want_ids)
+
+
+def timeit(fn, *args, repeats: int = 3) -> float:
+    """Median wall seconds per call (post-compile)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,33 @@
+"""Exp-2 analogue: relative distance error of retrieved results vs exact,
+across k and operating points (stays ~constant in k, drops with recall)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.index import search
+
+
+def run(ks=(500, 2000, 8000), n_probes=(16, 48)):
+    x, qs = common.corpus()
+    for k in ks:
+        if 8 * k > common.N:
+            continue
+        gt_d, gt_i = common.ground_truth(k)
+        for n_probe in n_probes:
+            errs, recs = [], []
+            for qi, q in enumerate(qs[:3]):
+                r = search.ivf_pq_search(
+                    common.pq_index(), q, k=k, n_probe=n_probe,
+                    n_cand=min(8 * k, common.N), use_bbc=True)
+                got = np.sort(np.asarray(r.dists))
+                want = gt_d[qi]
+                errs.append(np.mean(got / np.maximum(want, 1e-9) - 1.0))
+                recs.append(common.recall(np.asarray(r.ids), gt_i[qi]))
+            common.emit(f"exp2/pq_bbc/k{k}/np{n_probe}", 0.0,
+                        f"rel_err={np.mean(errs):.5f};recall={np.mean(recs):.3f}")
+    return None
+
+
+if __name__ == "__main__":
+    run()

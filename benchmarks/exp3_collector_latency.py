@@ -1,0 +1,48 @@
+"""Exp-3 analogue: isolated top-k collector latency (RB vs Heap/Sorted/Lazy
+analogues) on streams of estimated distances, k sweep + structural stats."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import collector as col
+
+
+def run(ks=(500, 2000, 8000), n_tiles=64, tile=512):
+    rng = np.random.default_rng(1)
+    d = 64
+    q = rng.standard_normal(d).astype(np.float32)
+    xs = rng.standard_normal((n_tiles * tile, d)).astype(np.float32)
+    dists = np.linalg.norm(xs - q, axis=1).reshape(n_tiles, tile)
+    s = col.StreamInput(
+        jnp.asarray(dists),
+        jnp.arange(n_tiles * tile, dtype=jnp.int32).reshape(n_tiles, tile),
+        jnp.ones((n_tiles, tile), bool))
+    n = n_tiles * tile
+    out = {}
+    for k in ks:
+        if k >= n:
+            continue
+        for name, fn in col.COLLECTORS.items():
+            jfn = jax.jit(functools.partial(fn, k=k))
+            t = common.timeit(jfn, s)
+            stats = col.collector_stats(name, k, 128, n, tile)
+            common.emit(
+                f"exp3/{name}/k{k}", t * 1e6,
+                f"state_bytes={stats['cross_tile_state_bytes']};"
+                f"sel_width={stats['final_selection_width']}")
+            out[(name, k)] = t
+    # paper claim: RB stays flat with k while heap-analogue degrades
+    for k in ks:
+        if ("bbc", k) in out and ("topk", k) in out:
+            common.emit(f"exp3/ratio_topk_over_bbc/k{k}", 0.0,
+                        f"ratio={out[('topk', k)]/out[('bbc', k)]:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

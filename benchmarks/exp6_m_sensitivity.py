@@ -1,0 +1,39 @@
+"""Exp-6 / Table 3 analogue: collection latency vs number of buckets m.
+Validates the flat optimum around the Eq.-3' value and degradation at the
+extremes (tiny m -> costly final selection; huge m -> threshold-update cost)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import buffer as rb
+from repro.core import collector as col
+
+
+def run(ms=(8, 32, 128, 256, 512), k=4000, n_tiles=64, tile=512):
+    rng = np.random.default_rng(3)
+    d = 64
+    q = rng.standard_normal(d).astype(np.float32)
+    xs = rng.standard_normal((n_tiles * tile, d)).astype(np.float32)
+    dists = np.linalg.norm(xs - q, axis=1).reshape(n_tiles, tile)
+    s = col.StreamInput(
+        jnp.asarray(dists),
+        jnp.arange(n_tiles * tile, dtype=jnp.int32).reshape(n_tiles, tile),
+        jnp.ones((n_tiles, tile), bool))
+    eq3 = rb.default_num_buckets()
+    common.emit("exp6/eq3_m", 0.0, f"m={eq3}")
+    out = {}
+    for m in ms:
+        jfn = jax.jit(functools.partial(col.bbc_collect, k=k, m=m))
+        t = common.timeit(jfn, s)
+        out[m] = t
+        common.emit(f"exp6/bbc/m{m}/k{k}", t * 1e6, "")
+    return out
+
+
+if __name__ == "__main__":
+    run()

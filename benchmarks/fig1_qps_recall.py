@@ -1,0 +1,61 @@
+"""Fig. 1 / Exp-1 analogue: QPS vs recall for each method at small and large k.
+
+Validates: (1) BBC speeds up both quantized methods at large k; (2) the gain
+grows with k; (3) no regression at small k (paper observation Exp-1(4))."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.index import flat, search
+
+
+def run(ks=(100, 2000), n_probes=(24, 48)):
+    x, qs = common.corpus()
+    results = []
+    for k in ks:
+        gt_d, gt_i = common.ground_truth(k)
+        n_cand = min(8 * k, common.N)
+        methods = {
+            "ivf+pq": lambda q: search.ivf_pq_search(
+                common.pq_index(), q, k=k, n_probe=n_probe, n_cand=n_cand),
+            "ivf+pq+bbc": lambda q: search.ivf_pq_search(
+                common.pq_index(), q, k=k, n_probe=n_probe, n_cand=n_cand,
+                use_bbc=True),
+            "ivf+rabitq": lambda q: search.ivf_rabitq_search(
+                common.rq_index(), q, k=k, n_probe=n_probe),
+            "ivf+rabitq+bbc": lambda q: search.ivf_rabitq_search(
+                common.rq_index(), q, k=k, n_probe=n_probe, use_bbc=True),
+            "bfc": lambda q: flat.search(x, q, k),
+        }
+        for n_probe in n_probes:
+            for name, fn in methods.items():
+                if name == "bfc" and n_probe != n_probes[0]:
+                    continue
+                t = common.timeit(lambda: fn(qs[0]))
+                recs = []
+                for qi, q in enumerate(qs[:3]):
+                    r = fn(q)
+                    ids = np.asarray(r[1] if isinstance(r, tuple) else r.ids)
+                    recs.append(common.recall(ids, gt_i[qi]))
+                rec = float(np.mean(recs))
+                qps = 1.0 / t
+                common.emit(
+                    f"fig1/{name}/k{k}/np{n_probe}", t * 1e6,
+                    f"recall={rec:.3f};qps={qps:.2f}")
+                results.append(dict(method=name, k=k, n_probe=n_probe,
+                                    recall=rec, qps=qps))
+    # headline: speedup of +bbc over base at the large k, matched n_probe
+    for base in ("ivf+pq", "ivf+rabitq"):
+        k = ks[-1]
+        b = [r for r in results if r["method"] == base and r["k"] == k]
+        a = [r for r in results if r["method"] == base + "+bbc" and r["k"] == k]
+        if b and a:
+            sp = np.mean([x["qps"] for x in a]) / np.mean([x["qps"] for x in b])
+            common.emit(f"fig1/speedup/{base}+bbc/k{k}", 0.0,
+                        f"speedup={sp:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

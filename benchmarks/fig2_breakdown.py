@@ -1,0 +1,70 @@
+"""Fig. 2 analogue: per-phase time breakdown (estimate / collect / re-rank)
+at small vs large k — shows collector+re-rank shares growing with k for the
+baseline and shrinking under BBC."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import buffer as rb
+from repro.core import collector as col
+from repro.index import ivf as ivf_mod
+from repro.index import pq as pq_mod
+
+
+def run(ks=(500, 8000), n_probe=48):
+    x, qs = common.corpus()
+    q = qs[0]
+    index = common.pq_index()
+
+    @jax.jit
+    def phase_estimate(q):
+        probed = ivf_mod.route(index.ivf, q, n_probe)
+        ids, valid = ivf_mod.gather_candidates(index.ivf, probed)
+        lut = pq_mod.adc_table(index.pq, q)
+        codes = index.codes[jnp.maximum(ids, 0)]
+        est = jax.vmap(lambda c: pq_mod.estimate(lut, c))(codes)
+        est = jnp.sqrt(jnp.maximum(jnp.where(valid, est, jnp.inf), 0.0))
+        return est, ids, valid
+
+    est, ids, valid = phase_estimate(q)
+    s = col.StreamInput(est, ids, valid)
+    t_est = common.timeit(phase_estimate, q)
+
+    for k in ks:
+        n_cand = min(8 * k, common.N)
+        t_collect_base = common.timeit(
+            jax.jit(functools.partial(col.topk_collect, k=n_cand)), s)
+        t_collect_bbc = common.timeit(
+            jax.jit(functools.partial(col.bbc_collect, k=n_cand)), s)
+
+        @jax.jit
+        def phase_rerank(ci):
+            v = x[jnp.maximum(ci, 0)]
+            ex = jnp.sqrt(jnp.maximum(
+                jnp.sum(v * v, -1) - 2 * (v @ q) + jnp.sum(q * q), 0))
+            neg, order = jax.lax.top_k(-jnp.where(ci >= 0, ex, jnp.inf), k)
+            return -neg, ci[order]
+
+        _, ci = col.topk_collect(s, n_cand)
+        t_rerank = common.timeit(phase_rerank, ci)
+
+        tot_base = t_est + t_collect_base + t_rerank
+        tot_bbc = t_est + t_collect_bbc + t_rerank
+        common.emit(
+            f"fig2/base/k{k}", tot_base * 1e6,
+            f"estimate={t_est/tot_base:.2f};collect={t_collect_base/tot_base:.2f};"
+            f"rerank={t_rerank/tot_base:.2f}")
+        common.emit(
+            f"fig2/bbc_collect/k{k}", tot_bbc * 1e6,
+            f"collect_share={t_collect_bbc/tot_bbc:.2f};"
+            f"collect_speedup={t_collect_base/max(t_collect_bbc,1e-9):.2f}x")
+    return None
+
+
+if __name__ == "__main__":
+    run()

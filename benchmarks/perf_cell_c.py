@@ -1,0 +1,86 @@
+"""§Perf hillclimb cell C: the BBC search pipeline itself (paper-representative).
+
+Iterations (hypothesis -> change -> measure, EXPERIMENTS.md §Perf):
+  C0 baseline : paper-faithful IVF+RaBitQ+BBC searcher (two-pass collect).
+  C1 m tuning : bucket count sweep around Eq. 3' (CPU wall-clock).
+  C2 fused    : single-pass fused kernel vs two-pass — HBM traffic per query
+                (structural; the TPU term) + collect-stage wall-clock.
+  C3 budget   : distributed survivor budget slack 2.0 -> 1.25 — collective
+                bytes per query at exactness (validated on an 8-way mesh in
+                tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import collector as col
+from repro.core import distributed as dist
+from repro.index import search
+
+
+def run(k=4000):
+    x, qs = common.corpus()
+    q = qs[0]
+    n_probe = int(np.clip(np.ceil(10 * k * common.N_CLUSTERS / common.N),
+                          16, int(common.N_CLUSTERS * 0.8)))
+
+    # ---- C0: baseline end-to-end (paper-faithful) --------------------------
+    t0 = common.timeit(lambda: search.ivf_rabitq_search(
+        common.rq_index(), q, k=k, n_probe=n_probe, use_bbc=True))
+    base = search.ivf_rabitq_search(common.rq_index(), q, k=k,
+                                    n_probe=n_probe, use_bbc=True)
+    tb = common.timeit(lambda: search.ivf_rabitq_search(
+        common.rq_index(), q, k=k, n_probe=n_probe, use_bbc=False))
+    common.emit("perfC/C0_baseline_bbc", t0 * 1e6,
+                f"vs_no_bbc={tb/t0:.2f}x;n_rerank={int(base.n_reranked)}")
+
+    # ---- C1: m sweep around Eq. 3' -----------------------------------------
+    rng = np.random.default_rng(9)
+    n_tiles, tile = 64, 512
+    d0 = np.abs(rng.standard_normal((n_tiles, tile)).astype(np.float32)) + 1
+    s = col.StreamInput(
+        jnp.asarray(d0),
+        jnp.arange(n_tiles * tile, dtype=jnp.int32).reshape(n_tiles, tile),
+        jnp.ones((n_tiles, tile), bool))
+    best = (None, np.inf)
+    for m in (32, 128, 256, 512):
+        t = common.timeit(jax.jit(functools.partial(col.bbc_collect, k=k, m=m)), s)
+        common.emit(f"perfC/C1_m{m}", t * 1e6, "")
+        if t < best[1]:
+            best = (m, t)
+    common.emit("perfC/C1_best", best[1] * 1e6, f"m={best[0]}")
+
+    # ---- C2: fused single-pass vs two-pass HBM traffic ---------------------
+    n, d, M = common.N, common.D, common.D // 4
+    # two-pass: read codes (ADC) + write/read estimates + 2nd read of fp32
+    # vectors for the early-rerank pool (gathered rows)
+    est_bytes = 4 * n
+    two_pass = n * M + 2 * est_bytes + int(0.2 * n) * d * 4
+    # fused: codes + vectors streamed once; hist stays in VMEM
+    fused = n * M + n * d * 4
+    common.emit("perfC/C2_fused_traffic", 0.0,
+                f"two_pass_bytes={two_pass};fused_bytes={fused};"
+                f"ratio={two_pass/fused:.2f}x_vs_1pass")
+    # collect-stage wall-clock (the measurable CPU component)
+    t_bbc = common.timeit(jax.jit(functools.partial(col.bbc_collect, k=k)), s)
+    t_topk = common.timeit(jax.jit(functools.partial(col.topk_collect, k=k)), s)
+    common.emit("perfC/C2_collect_stage", t_bbc * 1e6,
+                f"topk_collector={t_topk*1e6:.0f}us;speedup={t_topk/t_bbc:.2f}x")
+
+    # ---- C3: survivor budget slack -----------------------------------------
+    for slack in (2.0, 1.5, 1.25):
+        budget = dist.survivor_budget(k, 16, slack=slack)
+        cm = dist.collective_cost_model(k, 128, 16, budget=budget)
+        common.emit(f"perfC/C3_slack{slack}", 0.0,
+                    f"budget={budget};link_bytes={int(cm['bbc_bytes_per_link'])};"
+                    f"vs_naive={cm['ratio']:.1f}x")
+    return None
+
+
+if __name__ == "__main__":
+    run()

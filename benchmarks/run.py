@@ -1,0 +1,43 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.  Scale via REPRO_BENCH_N."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (common, exp2_relative_error, exp3_collector_latency,
+                            exp4_threshold_gap, exp5_rerank,
+                            exp6_m_sensitivity, fig1_qps_recall,
+                            fig2_breakdown, perf_cell_c, table4_ncand,
+                            table6_memory)
+    suites = [
+        ("fig1_qps_recall", fig1_qps_recall.run),
+        ("fig2_breakdown", fig2_breakdown.run),
+        ("exp2_relative_error", exp2_relative_error.run),
+        ("exp3_collector_latency", exp3_collector_latency.run),
+        ("exp4_threshold_gap", exp4_threshold_gap.run),
+        ("exp5_rerank", exp5_rerank.run),
+        ("exp6_m_sensitivity", exp6_m_sensitivity.run),
+        ("table4_ncand", table4_ncand.run),
+        ("table6_memory", table6_memory.run),
+        ("perf_cell_c", perf_cell_c.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.monotonic()
+        try:
+            fn()
+            print(f"# {name} done in {time.monotonic()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

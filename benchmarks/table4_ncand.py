@@ -1,0 +1,36 @@
+"""Table 4 analogue: smallest n_cand reaching the target recall per k
+(the IVF+PQ tuning knob the paper tabulates per dataset)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.index import search
+
+
+def run(ks=(500, 2000), target=0.9, n_probe=56):
+    x, qs = common.corpus()
+    for k in ks:
+        gt_d, gt_i = common.ground_truth(k)
+        found = None
+        for mult in (2, 4, 8, 12):
+            n_cand = min(mult * k, common.N)
+            recs = []
+            for qi, q in enumerate(qs[:3]):
+                r = search.ivf_pq_search(common.pq_index(), q, k=k,
+                                         n_probe=n_probe, n_cand=n_cand,
+                                         use_bbc=True)
+                recs.append(common.recall(np.asarray(r.ids), gt_i[qi]))
+            if np.mean(recs) >= target:
+                found = (n_cand, float(np.mean(recs)))
+                break
+        if found:
+            common.emit(f"table4/k{k}", 0.0,
+                        f"n_cand={found[0]};recall={found[1]:.3f}")
+        else:
+            common.emit(f"table4/k{k}", 0.0, f"n_cand>12k;target_missed")
+    return None
+
+
+if __name__ == "__main__":
+    run()

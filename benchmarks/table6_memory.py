@@ -1,0 +1,33 @@
+"""Table 5/6 analogue: BBC auxiliary state (histogram + codebook + survivor
+budget) vs k and m — negligible next to index size — plus the distributed
+collective-payload comparison (the TPU cache-miss analogue)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import collector as col
+from repro.core import distributed as dist
+
+
+def run(ks=(5000, 100_000), ms=(64, 128, 512)):
+    n = common.N
+    for m in ms:
+        for k in ks:
+            s = col.collector_stats("bbc", k, m, n, 512)
+            aux = (4 * (m + 1)            # histogram
+                   + 4 * (m + 1)         # edges
+                   + 4 * 256             # ew map
+                   + 8 * s["final_selection_width"])
+            common.emit(f"table6/bbc_aux/m{m}/k{k}", 0.0,
+                        f"aux_bytes={aux};vs_heap_bytes={8*k}")
+    for k in ks:
+        cm = dist.collective_cost_model(k=k, m=128, n_shards=16)
+        common.emit(
+            f"table6/collective/k{k}", 0.0,
+            f"bbc_link_bytes={int(cm['bbc_bytes_per_link'])};"
+            f"naive_link_bytes={int(cm['naive_bytes_per_link'])};"
+            f"ratio={cm['ratio']:.1f}x")
+    return None
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Quickstart: build a quantized ANN index and run a large-k BBC query.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.index import flat, search
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(synthetic.clustered(rng, 20_000, 64))
+queries = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), 3))
+k = 2_000
+
+print("building IVF+PQ index ...")
+index = search.build_pq_index(jax.random.key(0), x, n_clusters=141)
+
+print(f"large-k query (k={k}) with the bucket-based collector (BBC) ...")
+for i, q in enumerate(queries):
+    res = search.ivf_pq_search(index, q, k=k, n_probe=100,
+                               n_cand=min(8 * k, x.shape[0]), use_bbc=True)
+    gt_d, gt_i = flat.search(x, q, k)
+    recall = len(set(np.asarray(res.ids).tolist())
+                 & set(np.asarray(gt_i).tolist())) / k
+    print(f"  query {i}: recall@{k} = {recall:.3f}, "
+          f"re-ranked {int(res.n_reranked)} candidates "
+          f"({int(res.n_second_pass)} in the second pass)")
+print("done.")

@@ -1,0 +1,10 @@
+"""Train a small LM with the fault-tolerant driver (checkpoint/restart).
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch import train
+
+out = train.run_with_restarts(
+    arch="smollm-135m", steps=60, ckpt_dir="/tmp/repro_example_ckpt",
+    smoke=True, batch=8, seq=64, ckpt_every=20)
+print(f"final loss: {out['final_loss']:.4f}")

@@ -1,0 +1,6 @@
+"""repro — BBC (bucket-based result collector) for large-k ANN, on JAX/TPU.
+
+Layers (bottom-up): kernels (Pallas) -> index (IVF/PQ/RaBitQ) -> core (BBC)
+-> models (assigned LM architectures) -> launch (mesh/dryrun/train/serve).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""BBC core: bucket-based result collection (the paper's contribution).
+
+Public surface:
+  buffer      — result buffer primitives (codebook / bucketize / histogram /
+                threshold bucket / collect)
+  collector   — stream collectors (bbc + Exp-3 baselines)
+  rerank      — Algorithms 2-4 (minimal / greedy bounded / early re-rank)
+  distributed — shard_map BBC search step (histogram all-reduce)
+"""
+from repro.core import buffer, collector, distributed, rerank  # noqa: F401

@@ -1,0 +1,256 @@
+"""Bucket-based result buffer (paper Alg. 1) — TPU-native formulation.
+
+The paper's result buffer keeps per-bucket linear append buffers in L1 and a
+threshold bucket updated from cumulative counts.  On TPU there is no per-object
+insertion; the faithful re-expression is a *counting-sort top-k*:
+
+  1. ``build_codebook``   — per-query equal-depth 1-D quantizer over a sampled
+     prefix of estimated distances (paper: "Codebook Generation Based on
+     Estimated Distance"; 256 equal-width bins remapped to ``m`` equal-depth
+     buckets through a uint8 LUT, Eq. 6).
+  2. ``bucketize``        — Eq. 6: clamp(floor((d - d_min)/delta)) -> LUT.
+  3. ``histogram``        — the m-entry bucket histogram is the ONLY cross-tile
+     state (the VMEM/L1-residency analogue).
+  4. ``threshold_bucket`` — Alg. 1 Update: first bucket where the cumulative
+     count reaches k; its upper edge is the relaxed threshold.
+  5. ``collect``          — Alg. 1 Collect: everything in buckets < tau is in
+     the exact top-k *set* unconditionally; one small selection inside the
+     threshold bucket picks the remaining s = k - |preceding| items.  The
+     compaction uses a cumsum scatter (O(n)), never an O(n log n) sort.
+
+All functions are single-query; batch with ``jax.vmap``.  Shapes are static:
+invalid / padded lanes are carried through a ``valid`` mask.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class BucketCodebook(NamedTuple):
+    """Per-query 1-D quantizer: equal-width front end + equal-depth remap.
+
+    ``edges``  : (m + 1,) ascending bucket boundaries c_1..c_{m+1} (Eq. 1/2).
+    ``d_min``  : scalar lower edge of the equal-width range.
+    ``delta``  : scalar equal-width bin width.
+    ``ew_map`` : (n_ew,) int32 LUT mapping equal-width bin -> equal-depth
+                 bucket id (paper stores this as uint8; int32 here, the
+                 Pallas kernel packs it back down).
+    """
+
+    edges: jax.Array
+    d_min: jax.Array
+    delta: jax.Array
+    ew_map: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.edges.shape[0] - 1
+
+    @property
+    def n_ew(self) -> int:
+        return self.ew_map.shape[0]
+
+
+def default_num_buckets(
+    vmem_bytes: int = 16 * 1024 * 1024,
+    lut_bytes: int = 0,
+    code_tile_bytes: int = 0,
+    bytes_per_bucket: int = 2 * 2 * 64,
+    cap: int = 512,
+) -> int:
+    """Eq. 3 adapted to TPU (Eq. 3' in DESIGN.md).
+
+    The paper sizes m from L1 = 32KB minus quantization-code and LUT space,
+    reserving 256 B of prefetchable tail per bucket.  On TPU the analogue is
+    VMEM minus the ADC LUT and the streaming code tile; per-bucket state is a
+    histogram counter + boundary, but we keep the paper's 256 B/bucket reserve
+    so the active working set of a fused kernel instance stays VMEM-resident.
+    TPU lanes are 128 wide, so we round to a multiple of 128 and cap at 512 —
+    beyond that the threshold-update cost grows with no selection benefit
+    (paper Exp-6 shows a flat optimum).
+    """
+    m = (vmem_bytes - lut_bytes - code_tile_bytes) // bytes_per_bucket
+    m = max(128, min(int(m), cap))
+    return (m // 128) * 128
+
+
+def build_codebook(
+    sample_dists: jax.Array,
+    k: int,
+    m: int,
+    n_ew: int = 256,
+    valid: jax.Array | None = None,
+) -> BucketCodebook:
+    """Equal-depth codebook over the local top-k of a sampled prefix.
+
+    Paper: sample D_sample from the 5-10 nearest clusters, partial-sort once,
+    take [d_min, d_max] from the local top-k, then equal-depth partition via an
+    equal-width front end of ``n_ew`` bins.  ``sample_dists`` are the estimated
+    distances of the sample; ``valid`` masks padding lanes.
+    """
+    if valid is not None:
+        sample_dists = jnp.where(valid, sample_dists, INF)
+    k = min(k, sample_dists.shape[0])
+    # One partial sort over the sample (paper: "performed only once,
+    # its computational cost is negligible").
+    topk = -jax.lax.top_k(-sample_dists, k)[0]
+    d_min = topk[0]
+    d_max = topk[-1]
+    # Guard degenerate ranges (all-equal distances / tiny samples) and keep a
+    # 2% margin above d_max: the paper's argument ("the sampled d_max is
+    # necessarily farther than the true top-k distance") makes the range safe
+    # when sampling, but when the sample IS the population the k-th item sits
+    # exactly on the edge and front-end rounding could spill it to overflow.
+    span = jnp.maximum(d_max - d_min, 1e-6) * 1.02
+    delta = span / n_ew
+    # Equal-depth edges from quantiles of the local top-k.
+    qs = jnp.linspace(0.0, 1.0, m + 1)
+    edges = jnp.quantile(topk, qs)
+    # Strictly increasing edges so searchsorted is well defined under ties.
+    eps = span * 1e-7
+    edges = edges + eps * jnp.arange(m + 1, dtype=edges.dtype)
+    # Equal-width bin centers -> equal-depth bucket id.
+    centers = d_min + (jnp.arange(n_ew, dtype=jnp.float32) + 0.5) * delta
+    ew_map = jnp.clip(jnp.searchsorted(edges, centers, side="right") - 1, 0, m - 1)
+    ew_map = ew_map.astype(jnp.int32)
+    return BucketCodebook(edges=edges, d_min=d_min, delta=delta, ew_map=ew_map)
+
+
+def bucketize(cb: BucketCodebook, dists: jax.Array) -> jax.Array:
+    """Eq. 6: a_i = map[clamp(floor((d - d_min)/delta), 0, n_ew-1)].
+
+    Distances beyond the codebook range land in the overflow bucket ``m``
+    (they can never be in the top-k once the buffer holds k candidates);
+    distances below d_min land in bucket 0 (paper's boundary control).
+    """
+    n_ew = cb.n_ew
+    m = cb.m
+    bin_id = jnp.floor((dists - cb.d_min) / cb.delta)
+    overflow = bin_id >= n_ew
+    bin_id = jnp.clip(bin_id, 0, n_ew - 1).astype(jnp.int32)
+    bucket = cb.ew_map[bin_id]
+    return jnp.where(overflow, m, bucket).astype(jnp.int32)
+
+
+def histogram(bucket_ids: jax.Array, m: int, valid: jax.Array | None = None) -> jax.Array:
+    """(m + 1,)-entry bucket histogram (bucket m = overflow)."""
+    w = jnp.ones_like(bucket_ids, dtype=jnp.int32)
+    if valid is not None:
+        w = jnp.where(valid, w, 0)
+    return jnp.zeros((m + 1,), jnp.int32).at[bucket_ids].add(w)
+
+
+def threshold_bucket(hist: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Alg. 1 Update: first bucket index tau with cum-count >= k.
+
+    Returns ``(tau, n_before)`` where ``n_before`` is the number of candidates
+    in buckets strictly before tau.  If fewer than k candidates exist in total,
+    tau = m (overflow id) — "the threshold bucket is set to inf, allowing all
+    objects to be accepted".
+    """
+    m = hist.shape[0] - 1
+    cum = jnp.cumsum(hist[:m])
+    tau = jnp.searchsorted(cum, k, side="left").astype(jnp.int32)  # cum[tau] >= k
+    tau = jnp.minimum(tau, m)
+    n_before = jnp.where(tau > 0, cum[jnp.maximum(tau - 1, 0)], 0)
+    n_before = jnp.where(tau == 0, 0, n_before).astype(jnp.int32)
+    return tau, n_before
+
+
+def relaxed_threshold(cb: BucketCodebook, tau: jax.Array) -> jax.Array:
+    """Upper edge of the threshold bucket — the paper's relaxed threshold."""
+    edges_ext = jnp.concatenate([cb.edges, jnp.array([INF], cb.edges.dtype)])
+    return edges_ext[jnp.minimum(tau + 1, cb.m + 1)]
+
+
+def compact_mask(mask: jax.Array, budget: int) -> tuple[jax.Array, jax.Array]:
+    """O(n) cumsum-scatter compaction of ``mask`` into ``budget`` slots.
+
+    Returns (indices, valid): positions of the first ``budget`` set lanes, in
+    order.  This is the counting-sort primitive that replaces the paper's
+    per-bucket linear append buffers — write offsets come from a prefix sum,
+    not from a sort, so the cost is O(n) streaming.
+    """
+    n = mask.shape[0]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1  # write slot per set lane
+    take = mask & (pos < budget)
+    slots = jnp.where(take, pos, budget)  # dumps overflow in a spill slot
+    out = jnp.full((budget + 1,), n, jnp.int32).at[slots].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop"
+    )[:budget]
+    return out, out < n
+
+
+def collect(
+    cb: BucketCodebook,
+    dists: jax.Array,
+    ids: jax.Array,
+    bucket_ids: jax.Array,
+    k: int,
+    valid: jax.Array | None = None,
+    hist: jax.Array | None = None,
+    slack_buckets: int = 2,
+) -> tuple[jax.Array, jax.Array]:
+    """Alg. 1 Collect: exact top-k *set* via bucket-level order.
+
+    Buckets < tau are accepted unconditionally; a single top-s selection inside
+    the threshold bucket supplies the remaining s = k - n_before items.  The
+    survivor compaction is cumsum-based (O(n)); the only sort-like op is the
+    top-k over a ``k + slack`` sized compacted buffer, never over all n.
+
+    Returns (top-k distances ascending, top-k ids).  Padding lanes (valid =
+    False) never appear in the output provided at least k valid candidates
+    exist.
+    """
+    m = cb.m
+    if valid is None:
+        valid = jnp.ones(dists.shape, bool)
+    if hist is None:
+        hist = histogram(bucket_ids, m, valid)
+    tau, _ = threshold_bucket(hist, k)
+    # Survivors: everything at or before the threshold bucket.  Their count is
+    # in [k, k + |B_tau|]; budget covers the threshold bucket plus slack for
+    # the (rare) case the equal-depth estimate concentrated mass in one bucket.
+    survive = valid & (bucket_ids <= tau)
+    budget = _collect_budget(k, dists.shape[0], slack_buckets, m)
+    idx, in_budget = compact_mask(survive, budget)
+    cd = jnp.where(in_budget, dists[jnp.minimum(idx, dists.shape[0] - 1)], INF)
+    ci = jnp.where(in_budget, ids[jnp.minimum(idx, ids.shape[0] - 1)], -1)
+
+    def fast(_):
+        neg_d, order = jax.lax.top_k(-cd, k)
+        return -neg_d, ci[order]
+
+    def fallback(_):
+        # Exactness escape hatch: tau hit the overflow bucket (fewer than k
+        # in-range candidates) or survivors exceeded the budget (pathological
+        # tie mass in one bucket).  One full top-k keeps the result exact;
+        # this branch is compiled but not executed on the production path.
+        d = jnp.where(valid, dists, INF)
+        neg_d, order = jax.lax.top_k(-d, k)
+        return -neg_d, ids[order]
+
+    overflowed = (tau >= m) | (jnp.sum(survive) > budget)
+    return jax.lax.cond(overflowed, fallback, fast, None)
+
+
+def _collect_budget(k: int, n: int, slack_buckets: int, m: int) -> int:
+    # Expected threshold-bucket occupancy under equal-depth is ~k/m; slack
+    # covers skew.  Budget is clamped to n (can't select more than exists).
+    per_bucket = max(k // max(m, 1), 1)
+    return int(min(n, k + slack_buckets * per_bucket + 64))
+
+
+def topk_oracle(
+    dists: jax.Array, ids: jax.Array, k: int, valid: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Reference collector: full top-k (the heap-analogue baseline)."""
+    if valid is not None:
+        dists = jnp.where(valid, dists, INF)
+    neg_d, idx = jax.lax.top_k(-dists, k)
+    return -neg_d, ids[idx]

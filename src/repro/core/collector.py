@@ -1,0 +1,210 @@
+"""Top-k collectors over a stream of per-cluster candidate tiles.
+
+These mirror the paper's Exp-3 contenders, re-expressed for a tiled/vectorized
+runtime.  All collectors consume the same input layout — estimated distances
+``(n_tiles, tile)`` with a validity mask and global ids — and return the exact
+top-k (distances ascending, ids):
+
+  * ``bbc``    — the paper's result buffer (Alg. 1): codebook from a sample
+                 prefix, bucket histogram accumulated tile-by-tile with
+                 relaxed-threshold masking, one final in-threshold-bucket
+                 selection.  Cross-tile state: (m+1,) histogram.
+  * ``topk``   — "Heap" analogue: running top-k carried across tiles
+                 (concat + top_k per tile).  Cross-tile state: 2k floats+ints.
+  * ``sorted`` — "Sorted" analogue: materialize everything, full sort, slice.
+  * ``lazy``   — "Lazy" analogue: threshold-filtered append buffer, periodic
+                 partial selection (x86simdsort::qselect analogue = top_k on
+                 the buffer) when it fills.
+
+The structural quantities that determine TPU cost (bytes of cross-tile state,
+selection width) are exposed via ``collector_stats`` for the roofline story.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buffer as rb
+
+INF = jnp.inf
+
+
+class StreamInput(NamedTuple):
+    dists: jax.Array  # (n_tiles, tile) estimated distances
+    ids: jax.Array    # (n_tiles, tile) int32 global ids
+    valid: jax.Array  # (n_tiles, tile) bool
+
+
+def _flatten(s: StreamInput) -> StreamInput:
+    return StreamInput(*(x.reshape(-1) for x in s))
+
+
+# --------------------------------------------------------------------------
+# BBC collector (paper Alg. 1)
+# --------------------------------------------------------------------------
+
+def bbc_collect(
+    s: StreamInput,
+    k: int,
+    m: int = 128,
+    sample_tiles: int = 4,
+    n_ew: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Result-buffer collection: O(m) cross-tile state + one final selection.
+
+    The codebook is built from the first ``sample_tiles`` tiles (paper: the
+    5-10 nearest clusters — IVF scans clusters nearest-first, so the prefix is
+    the distance-skewed sample the paper wants).
+    """
+    n_tiles, tile = s.dists.shape
+    st = min(sample_tiles, n_tiles)
+    sample = jnp.where(s.valid[:st], s.dists[:st], INF).reshape(-1)
+    cb = rb.build_codebook(sample, k=min(k, sample.shape[0]), m=m, n_ew=n_ew)
+
+    def step(hist, xs):
+        d, v = xs
+        # Push (Alg. 1 lines 1-4): relaxed-threshold mask instead of append.
+        tau, _ = rb.threshold_bucket(hist, k)          # Update, once per tile
+        b = rb.bucketize(cb, d)
+        accept = v & (b <= tau)
+        hist = hist + rb.histogram(b, m, accept)
+        return hist, None
+
+    hist0 = jnp.zeros((m + 1,), jnp.int32)
+    hist, _ = jax.lax.scan(step, hist0, (s.dists, s.valid))
+
+    flat = _flatten(s)
+    bucket_ids = rb.bucketize(cb, flat.dists)
+    return rb.collect(cb, flat.dists, flat.ids, bucket_ids, k, flat.valid, hist=None)
+
+
+# --------------------------------------------------------------------------
+# Baseline collectors (Exp-3 contenders)
+# --------------------------------------------------------------------------
+
+def topk_collect(s: StreamInput, k: int) -> tuple[jax.Array, jax.Array]:
+    """"Heap" analogue: carry the running exact top-k across tiles."""
+
+    def step(carry, xs):
+        cd, ci = carry
+        d, i, v = xs
+        d = jnp.where(v, d, INF)
+        alld = jnp.concatenate([cd, d])
+        alli = jnp.concatenate([ci, i])
+        neg, idx = jax.lax.top_k(-alld, k)
+        return (-neg, alli[idx]), None
+
+    carry0 = (jnp.full((k,), INF, s.dists.dtype), jnp.full((k,), -1, jnp.int32))
+    (cd, ci), _ = jax.lax.scan(step, carry0, (s.dists, s.ids, s.valid))
+    order = jnp.argsort(cd)
+    return cd[order], ci[order]
+
+
+def sorted_collect(s: StreamInput, k: int) -> tuple[jax.Array, jax.Array]:
+    """"Sorted" analogue: full sort of every scanned candidate."""
+    flat = _flatten(s)
+    d = jnp.where(flat.valid, flat.dists, INF)
+    order = jnp.argsort(d)[:k]
+    return d[order], flat.ids[order]
+
+
+def lazy_collect(
+    s: StreamInput, k: int, buffer_factor: int = 2
+) -> tuple[jax.Array, jax.Array]:
+    """"Lazy" analogue: threshold filter into a linear buffer, periodic qselect.
+
+    Carries a ``buffer_factor * k`` buffer; each tile appends candidates below
+    the current threshold via cumsum compaction; when the buffer would
+    overflow, a partial selection (top_k) shrinks it back to k and tightens
+    the threshold.
+    """
+    n_tiles, tile = s.dists.shape
+    # After a shrink the buffer holds k items; one tile of appends must always
+    # fit, so cap >= k + tile.
+    cap = max(buffer_factor * k, k + tile)
+
+    def shrink(bd, bi):
+        neg, idx = jax.lax.top_k(-bd, k)
+        sd = jnp.concatenate([-neg, jnp.full((cap - k,), INF, bd.dtype)])
+        si = jnp.concatenate([bi[idx], jnp.full((cap - k,), -1, jnp.int32)])
+        return sd, si, sd[k - 1]
+
+    def step(carry, xs):
+        bd, bi, count, thresh = carry
+        d, i, v = xs
+        would = count + jnp.sum(v & (d < thresh))
+
+        # If this tile would overflow the buffer, run the partial selection
+        # first (tightens the threshold, shrinks the buffer back to k).
+        def do_shrink(args):
+            bd, bi, _ = args
+            sd, si, th = shrink(bd, bi)
+            return sd, si, jnp.int32(k), th
+
+        def no_shrink(args):
+            bd, bi, count = args
+            return bd, bi, count, thresh
+
+        bd, bi, count, thresh = jax.lax.cond(
+            would > cap, do_shrink, no_shrink, (bd, bi, count)
+        )
+        keep = v & (d < thresh)
+        pos = count + jnp.cumsum(keep.astype(jnp.int32)) - 1
+        slot = jnp.where(keep & (pos < cap), pos, cap)  # cap = spill slot
+        bd = bd.at[slot].set(d, mode="drop")
+        bi = bi.at[slot].set(i, mode="drop")
+        count = jnp.minimum(count + jnp.sum(keep), cap)
+        return (bd, bi, count, thresh), None
+
+    carry0 = (
+        jnp.full((cap,), INF, s.dists.dtype),
+        jnp.full((cap,), -1, jnp.int32),
+        jnp.int32(0),
+        jnp.array(INF, s.dists.dtype),
+    )
+    (bd, bi, _, _), _ = jax.lax.scan(step, carry0, (s.dists, s.ids, s.valid))
+    neg, idx = jax.lax.top_k(-bd, k)
+    return -neg, bi[idx]
+
+
+COLLECTORS = {
+    "bbc": bbc_collect,
+    "topk": topk_collect,
+    "sorted": sorted_collect,
+    "lazy": lazy_collect,
+}
+
+
+def collector_stats(name: str, k: int, m: int, n: int, tile: int) -> dict:
+    """Structural cost model (bytes of cross-tile state / selection width).
+
+    These are the quantities that determine TPU cost independently of the CPU
+    wall-clock this container can measure.
+    """
+    if name == "bbc":
+        return {
+            "cross_tile_state_bytes": 4 * (m + 1),
+            "final_selection_width": min(n, k + 2 * max(k // m, 1) + 64),
+            "per_tile_select_width": 0,
+        }
+    if name == "topk":
+        return {
+            "cross_tile_state_bytes": 8 * k,
+            "final_selection_width": k,
+            "per_tile_select_width": k + tile,
+        }
+    if name == "sorted":
+        return {
+            "cross_tile_state_bytes": 8 * n,
+            "final_selection_width": n,
+            "per_tile_select_width": 0,
+        }
+    if name == "lazy":
+        return {
+            "cross_tile_state_bytes": 8 * 2 * k,
+            "final_selection_width": 2 * k,
+            "per_tile_select_width": 2 * k,
+        }
+    raise ValueError(name)

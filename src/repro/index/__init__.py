@@ -1,0 +1,2 @@
+"""ANN index substrate: IVF coarse index + PQ / RaBitQ quantizers + searchers."""
+from repro.index import flat, ivf, kmeans, pq, rabitq, search  # noqa: F401

@@ -1,0 +1,337 @@
+"""End-to-end ANN searchers: IVF / IVF+PQ / IVF+RaBitQ, each ± BBC.
+
+Single-query functions, jit-compiled with static hyper-parameters; batch with
+``jax.vmap`` (small batches — intermediates are O(n_probe * cap)).  All paths
+return ``SearchResult`` with instrumentation counters used by the benchmark
+suite (re-rank counts, second-pass gathers — the TPU analogues of the paper's
+VTune/perf numbers).
+
+Method map (paper Table / Fig. 1):
+  ivf_search(use_bbc=False)          -> IVF
+  ivf_pq_search(use_bbc=False)       -> IVF+PQ          (unbounded, n_cand)
+  ivf_pq_search(use_bbc=True)        -> IVF+PQ+BBC      (Alg. 4 early rerank)
+  ivf_rabitq_search(use_bbc=False)   -> IVF+RaBitQ      (threshold rerank)
+  ivf_rabitq_search(use_bbc=True)    -> IVF+RaBitQ+BBC  (Alg. 3 greedy)
+  flat.search                        -> BFC
+(IVF+RaBitQ+MIN lives in benchmarks — host-side heap baseline, Alg. 2.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buffer as rb
+from repro.core import collector as col
+from repro.core import rerank
+from repro.index import ivf as ivf_mod
+from repro.index import pq as pq_mod
+from repro.index import rabitq as rq_mod
+
+INF = jnp.inf
+
+
+class PQIndex(NamedTuple):
+    ivf: ivf_mod.IVFIndex
+    pq: pq_mod.PQCodebook
+    codes: jax.Array    # (N, M) uint8
+    vectors: jax.Array  # (N, d) fp32 (re-rank source)
+
+
+class RabitqIndex(NamedTuple):
+    ivf: ivf_mod.IVFIndex
+    rq: rq_mod.RabitqCodes
+    vectors: jax.Array
+
+
+class SearchResult(NamedTuple):
+    dists: jax.Array
+    ids: jax.Array
+    n_reranked: jax.Array       # exact distance computations spent
+    n_second_pass: jax.Array    # re-rank gathers NOT covered inline (Alg. 4)
+
+
+# --------------------------------------------------------------------------
+# Index builders (offline)
+# --------------------------------------------------------------------------
+
+def build_pq_index(key, x, n_clusters: int, n_sub: int | None = None,
+                   n_bits: int = 4, n_iter: int = 10) -> PQIndex:
+    d = x.shape[1]
+    n_sub = n_sub or d // 4          # paper: M = d/4, B = 4
+    k1, k2 = jax.random.split(key)
+    index = ivf_mod.build(k1, x, n_clusters, n_iter)
+    cb = pq_mod.train(k2, x, n_sub, n_bits, n_iter)
+    codes = pq_mod.encode(cb, x)
+    return PQIndex(ivf=index, pq=cb, codes=codes, vectors=x)
+
+
+def build_rabitq_index(key, x, n_clusters: int, n_iter: int = 10) -> RabitqIndex:
+    k1, k2 = jax.random.split(key)
+    index = ivf_mod.build(k1, x, n_clusters, n_iter)
+    assignment = jnp.argmin(
+        jnp.sum(x * x, 1, keepdims=True)
+        - 2 * x @ index.centroids.T
+        + jnp.sum(index.centroids ** 2, 1),
+        axis=1,
+    )
+    rq = rq_mod.encode(k2, x, index.centroids, assignment)
+    return RabitqIndex(ivf=index, rq=rq, vectors=x)
+
+
+# --------------------------------------------------------------------------
+# Shared helpers
+# --------------------------------------------------------------------------
+
+def _exact_dists(vectors: jax.Array, ids: jax.Array, q: jax.Array) -> jax.Array:
+    """Exact Euclidean distances for a gathered id set (ids may contain -1
+    padding; callers mask)."""
+    v = vectors[jnp.maximum(ids, 0)]
+    return jnp.sqrt(jnp.maximum(
+        jnp.sum(v * v, -1) - 2.0 * (v @ q) + jnp.sum(q * q), 0.0))
+
+
+def _stream_from(est, ids, valid) -> col.StreamInput:
+    return col.StreamInput(dists=est, ids=ids, valid=valid)
+
+
+def _rerank_budget(k: int, cap: int) -> int:
+    b = max(8 * k, 2048)
+    return ((b + 127) // 128) * 128
+
+
+# --------------------------------------------------------------------------
+# IVF (no quantization): exact distances in-scan + collector
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "n_probe", "use_bbc", "m"))
+def ivf_search(index: ivf_mod.IVFIndex, vectors: jax.Array, q: jax.Array,
+               k: int, n_probe: int, use_bbc: bool = False,
+               m: int = 128) -> SearchResult:
+    probed = ivf_mod.route(index, q, n_probe)
+    ids, valid = ivf_mod.gather_candidates(index, probed)    # (n_probe, cap)
+    dists = jax.vmap(lambda i: _exact_dists(vectors, i, q))(ids)
+    dists = jnp.where(valid, dists, INF)
+    s = _stream_from(dists, ids, valid)
+    if use_bbc:
+        d, i = col.bbc_collect(s, k, m=m)
+    else:
+        d, i = col.topk_collect(s, k)
+    n = jnp.sum(valid)
+    return SearchResult(d, i, n, jnp.int32(0))
+
+
+# --------------------------------------------------------------------------
+# IVF + PQ (unbounded): ADC estimate -> n_cand selection -> re-rank
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_probe", "n_cand", "use_bbc", "m", "early_slack"),
+)
+def ivf_pq_search(
+    index: PQIndex,
+    q: jax.Array,
+    k: int,
+    n_probe: int,
+    n_cand: int,
+    use_bbc: bool = False,
+    m: int = 128,
+    early_slack: float = 4.0,
+) -> SearchResult:
+    """IVF+PQ (baseline) and IVF+PQ+BBC (Alg. 4 early re-rank).
+
+    Baseline: running top-n_cand by estimate across cluster tiles ("Heap"
+    collector), then one gather+exact pass over the n_cand selection.
+
+    +BBC: bucket collector for the n_cand selection, plus early re-ranking —
+    per cluster tile, objects whose estimate bucketizes at or below tau_pred
+    have exact distances computed inline while the cluster's vectors are
+    resident (TPU: same VMEM tile; see kernels/fused_scan.py).  The second
+    gather pass only covers the few selected-but-not-predicted stragglers
+    (``n_second_pass`` — the cache-miss analogue the paper counts in Table 2).
+    """
+    ivf = index.ivf
+    probed = ivf_mod.route(ivf, q, n_probe)
+    ids, valid = ivf_mod.gather_candidates(ivf, probed)       # (n_probe, cap)
+    cap = ids.shape[1]
+    lut = pq_mod.adc_table(index.pq, q)
+
+    codes = index.codes[jnp.maximum(ids, 0)]                  # (n_probe, cap, M)
+    est = jax.vmap(lambda c: pq_mod.estimate(lut, c))(codes)  # squared dists
+    est = jnp.sqrt(jnp.maximum(jnp.where(valid, est, INF), 0.0))
+
+    flat_est = est.reshape(-1)
+    flat_ids = ids.reshape(-1)
+    flat_valid = valid.reshape(-1)
+
+    if not use_bbc:
+        # ---- baseline: heap-analogue selection, full second-pass re-rank --
+        s = _stream_from(est, ids, valid)
+        cd, ci = col.topk_collect(s, n_cand)
+        ex = _exact_dists(index.vectors, ci, q)
+        ex = jnp.where(ci >= 0, ex, INF)
+        neg, order = jax.lax.top_k(-ex, k)
+        return SearchResult(-neg, ci[order], jnp.int32(n_cand),
+                            jnp.int32(n_cand))
+
+    # ---- BBC path (Alg. 4) ------------------------------------------------
+    n_sample_tiles = min(4, n_probe)
+    sample = jnp.where(valid[:n_sample_tiles],
+                       est[:n_sample_tiles], INF).reshape(-1)
+    n_total = flat_valid.shape[0]
+    plan = rerank.early_rerank_plan(
+        sample, n_cand=n_cand, n_sample=sample.shape[0],
+        n_total=n_total, m=m)
+
+    # Early re-rank: per-cluster inline exact for predicted survivors.
+    early_budget = int(min(cap, max(128, round(n_cand / n_probe * early_slack))))
+    early_budget = ((early_budget + 127) // 128) * 128
+    early_budget = min(early_budget, cap)
+
+    positions = jnp.arange(n_total, dtype=jnp.int32)
+    flat_pos_matrix = positions.reshape(n_probe, cap)
+
+    def per_cluster(c_est, c_ids, c_valid, row_pos):
+        """Inline exact distances for predicted survivors of one cluster tile
+        (Alg. 4 lines 9-11: the vectors are 'hot' — on TPU, the fused kernel
+        streams them in the same VMEM tile as the codes)."""
+        pred = rerank.early_rerank_mask(plan, c_est) & c_valid
+        pos, ok = rb.compact_mask(pred, early_budget)
+        safe = jnp.minimum(pos, cap - 1)
+        e_ids = jnp.where(ok, c_ids[safe], -1)
+        e_d = jnp.where(ok, _exact_dists(index.vectors, e_ids, q), INF)
+        tgt = jnp.where(ok, row_pos[safe], n_total)  # flat scatter targets
+        return e_d, tgt, jnp.sum(ok)
+
+    e_d, e_tgt, e_counts = jax.vmap(per_cluster)(est, ids, valid, flat_pos_matrix)
+    n_early = jnp.sum(e_counts)
+    flat_e_d = jnp.full((n_total + 1,), INF, est.dtype)
+    flat_e_d = flat_e_d.at[e_tgt.reshape(-1)].set(e_d.reshape(-1), mode="drop")
+    flat_e_d = flat_e_d[:n_total]
+
+    # n_cand selection by estimate with the bucket collector (Alg. 1 Collect).
+    bucket_ids = rb.bucketize(plan.cb, flat_est)
+    _, sel_pos = rb.collect(
+        plan.cb, flat_est, positions, bucket_ids, n_cand, flat_valid)
+    sel_ids = flat_ids[jnp.maximum(sel_pos, 0)]
+    sel_ids = jnp.where(sel_pos >= 0, sel_ids, -1)
+
+    # Inline results cover most of the selection; one small second pass for
+    # the stragglers (n_second_pass ~ the paper's Table-2 cache-miss story).
+    have = jnp.isfinite(flat_e_d[jnp.maximum(sel_pos, 0)]) & (sel_pos >= 0)
+    miss = ~have & (sel_ids >= 0)
+    second = jnp.sum(miss)
+    miss_d = _exact_dists(index.vectors, jnp.where(miss, sel_ids, 0), q)
+    ex = jnp.where(have, flat_e_d[jnp.maximum(sel_pos, 0)],
+                   jnp.where(miss, miss_d, INF))
+
+    neg, order = jax.lax.top_k(-ex, k)
+    return SearchResult(-neg, sel_ids[order],
+                        (n_early + second).astype(jnp.int32),
+                        second.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# IVF + RaBitQ (bounded): estimate+bounds -> rerank
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_probe", "use_bbc", "m", "eps0"),
+)
+def ivf_rabitq_search(
+    index: RabitqIndex,
+    q: jax.Array,
+    k: int,
+    n_probe: int,
+    use_bbc: bool = False,
+    m: int = 128,
+    eps0: float = 3.0,
+) -> SearchResult:
+    """IVF+RaBitQ baseline (per-cluster threshold re-rank) and +BBC (Alg. 3
+    closed-form greedy on two result buffers)."""
+    ivf = index.ivf
+    probed = ivf_mod.route(ivf, q, n_probe)
+    ids, valid = ivf_mod.gather_candidates(ivf, probed)
+    n_probe_, cap = ids.shape
+    rq = index.rq
+
+    def est_cluster(cid, c_ids, c_valid):
+        qf = rq_mod.query_factors(rq, q, ivf.centroids[cid])
+        c = rq.codes[jnp.maximum(c_ids, 0)]
+        no = rq.norm_o[jnp.maximum(c_ids, 0)]
+        fo = rq.f_o[jnp.maximum(c_ids, 0)]
+        est, lb, ub = rq_mod.estimate(c, no, fo, qf, eps0)
+        bad = ~c_valid
+        return (jnp.where(bad, INF, est), jnp.where(bad, INF, lb),
+                jnp.where(bad, INF, ub))
+
+    est, lb, ub = jax.vmap(est_cluster)(probed, ids, valid)
+
+    if not use_bbc:
+        # ---- baseline: per-cluster threshold re-ranking -------------------
+        budget = min(cap, _rerank_budget(k, cap))
+
+        def step(carry, xs):
+            pool_d, pool_i, n_rr = carry
+            c_lb, c_ids, c_valid = xs
+            thresh = pool_d[k - 1]
+            mask = c_valid & (c_lb < thresh)
+            pos, ok = rb.compact_mask(mask, budget)
+            safe = jnp.minimum(pos, cap - 1)
+            r_ids = jnp.where(ok, c_ids[safe], -1)
+            r_d = _exact_dists(index.vectors, r_ids, q)
+            r_d = jnp.where(ok, r_d, INF)
+            alld = jnp.concatenate([pool_d, r_d])
+            alli = jnp.concatenate([pool_i, r_ids])
+            neg, idx = jax.lax.top_k(-alld, k)
+            return (-neg, alli[idx], n_rr + jnp.sum(ok)), None
+
+        pool0 = (jnp.full((k,), INF, est.dtype), jnp.full((k,), -1, jnp.int32),
+                 jnp.int32(0))
+        (pd, pi, n_rr), _ = jax.lax.scan(step, pool0, (lb, ids, valid))
+        order = jnp.argsort(pd)
+        return SearchResult(pd[order], pi[order], n_rr, n_rr)
+
+    # ---- BBC path (Alg. 3, two-phase greedy) -------------------------------
+    flat_lb, flat_ub = lb.reshape(-1), ub.reshape(-1)
+    flat_est = est.reshape(-1)
+    flat_ids, flat_valid = ids.reshape(-1), valid.reshape(-1)
+    n_flat = flat_ids.shape[0]
+    plan = rerank.greedy_rerank_plan(flat_lb, flat_ub, k, flat_valid, m=m)
+
+    exact_flat = jnp.full((n_flat,), INF, est.dtype)
+
+    def eval_mask(mask, budget, exact_flat):
+        """Exact distances for up to ``budget`` masked lanes (est-priority)."""
+        key_est = jnp.where(mask, flat_est, INF)
+        _, pos = jax.lax.top_k(-key_est, budget)
+        ok = jnp.isfinite(key_est[pos])
+        safe = jnp.minimum(pos, n_flat - 1)
+        r_ids = jnp.where(ok, flat_ids[safe], -1)
+        r_d = jnp.where(ok, _exact_dists(index.vectors, r_ids, q), INF)
+        exact_flat = exact_flat.at[jnp.where(ok, safe, n_flat)].set(
+            r_d, mode="drop")
+        return exact_flat, r_d, jnp.sum(ok)
+
+    # Phase 1: likely-in items (ub at/below the k-th-ub bucket).  Their exact
+    # distances tighten the threshold, as in the paper's iterative loop.
+    p1 = rerank.phase1_mask(plan)
+    budget1 = min(n_flat, ((k + 1024 + 127) // 128) * 128)
+    exact_flat, p1_d, n1 = eval_mask(p1, budget1, exact_flat)
+    t2 = rerank.phase2_threshold(plan, p1_d, k)
+
+    # Phase 2: remaining uncertain items whose lower bound is under the
+    # tightened threshold (anything above is certainly out).
+    p2 = plan.rerank_mask & ~p1 & jnp.isinf(exact_flat) & (flat_lb <= t2)
+    budget2 = min(n_flat, _rerank_budget(k, cap))
+    exact_flat, _, n2 = eval_mask(p2, budget2, exact_flat)
+
+    res = rerank.greedy_rerank_finalize(
+        plan, exact_flat, jnp.where(flat_valid, flat_lb, INF), flat_ids, k,
+        est=flat_est)
+    n_evals = (n1 + n2).astype(jnp.int32)
+    return SearchResult(res.topk_dists, res.topk_ids, n_evals, n_evals)

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: tiled exact ||q - x|| for the re-rank pool.
+
+Straight MXU matvec per tile with the norm identity — the exact-distance
+hot spot of every re-rank phase.  Included so the whole search inner loop
+(estimate -> bucketize -> select -> re-rank) runs on Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _l2_kernel(x_ref, q_ref, scal_ref, out_ref):
+    x = x_ref[...]                     # (TILE, d)
+    q = q_ref[...]                     # (1, d)
+    q_sq = scal_ref[...][0, 0]
+    xv = jax.lax.dot_general(
+        x, q.reshape(-1, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    x_sq = jnp.sum(x * x, axis=1)
+    out_ref[...] = jnp.sqrt(jnp.maximum(x_sq - 2.0 * xv + q_sq, 0.0))[None, :]
+
+
+def l2_pallas(x: jax.Array, q: jax.Array, tile: int = TILE,
+              interpret: bool = True) -> jax.Array:
+    n, d = x.shape
+    g = n // tile
+    scal = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(jnp.sum(q * q))
+    out = pl.pallas_call(
+        _l2_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, tile), jnp.float32),
+        interpret=interpret,
+    )(x, q.reshape(1, d), scal)
+    return out.reshape(n)

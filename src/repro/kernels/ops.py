@@ -1,0 +1,115 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile/lane multiples, dtype plumbing, and the
+interpret-mode switch (CPU containers execute the kernel bodies in Python via
+``interpret=True``; on TPU the same calls compile to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bucket_hist as _bh
+from repro.kernels import fused_scan as _fs
+from repro.kernels import l2_rerank as _l2
+from repro.kernels import pq_adc as _adc
+from repro.kernels import rabitq_est as _rq
+
+INF = jnp.inf
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _pad_rows(x: jax.Array, mult: int, fill) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width, constant_values=fill)
+
+
+def _pad_cols(x: jax.Array, mult: int, fill) -> jax.Array:
+    c = x.shape[1]
+    pad = (-c) % mult
+    if pad == 0:
+        return x
+    width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, width, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "mc"))
+def pq_adc(codes: jax.Array, lut: jax.Array, tile: int = _adc.TILE,
+           mc: int = _adc.MC) -> jax.Array:
+    """(n, M) codes, (M, K) LUT -> (n,) squared-distance estimates."""
+    n = codes.shape[0]
+    codes_p = _pad_cols(_pad_rows(codes.astype(jnp.int32), tile, 0), mc, 0)
+    lut_p = jnp.pad(lut, ((0, codes_p.shape[1] - lut.shape[0]), (0, 0)))
+    out = _adc.adc_pallas(codes_p, lut_p, tile=tile, mc=mc,
+                          interpret=_interpret())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("eps0", "tile"))
+def rabitq_est(codes: jax.Array, norm_o: jax.Array, f_o: jax.Array,
+               v: jax.Array, norm_q: jax.Array, eps0: float = 3.0,
+               tile: int = _rq.TILE):
+    """±1 codes (n, d) -> (est, lb, ub), matching kernels.ref.rabitq_est."""
+    n, d = codes.shape
+    codes_p = _pad_cols(_pad_rows(codes, tile, 0), 128, 0)
+    v_p = jnp.pad(v, (0, codes_p.shape[1] - d))
+    norm_p = _pad_rows(norm_o, tile, 0.0)
+    f_p = _pad_rows(f_o, tile, 1.0)
+    est, lb, ub = _rq.rabitq_est_pallas(
+        codes_p, norm_p, f_p, v_p, norm_q, d_logical=d, eps0=eps0,
+        tile=tile, interpret=_interpret())
+    return est[:n], lb[:n], ub[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile"))
+def bucket_hist(dists: jax.Array, valid: jax.Array, d_min: jax.Array,
+                delta: jax.Array, ew_map: jax.Array, m: int,
+                tile: int = _bh.TILE):
+    """(n,) distances -> (bucket_ids (n,), hist (m+1,))."""
+    n = dists.shape[0]
+    d_p = _pad_rows(dists, tile, jnp.inf)
+    v_p = _pad_rows(valid, tile, False)
+    bucket, hist = _bh.bucket_hist_pallas(
+        d_p, v_p, d_min, delta, ew_map.astype(jnp.int32), m, tile=tile,
+        interpret=_interpret())
+    return bucket[:n], hist
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile", "mc"))
+def fused_scan(codes: jax.Array, vectors: jax.Array, valid: jax.Array,
+               lut: jax.Array, q: jax.Array, d_min: jax.Array,
+               delta: jax.Array, ew_map: jax.Array, m: int,
+               tau_pred: jax.Array, tile: int = _fs.TILE, mc: int = _fs.MC):
+    """Fused estimate+bucketize+hist+early-exact over a candidate block."""
+    n, d = vectors.shape
+    codes_p = _pad_cols(_pad_rows(codes.astype(jnp.int32), tile, 0), mc, 0)
+    lut_p = jnp.pad(lut, ((0, codes_p.shape[1] - lut.shape[0]), (0, 0)))
+    vecs_p = _pad_cols(_pad_rows(vectors, tile, 0.0), 128, 0.0)
+    q_p = jnp.pad(q, (0, vecs_p.shape[1] - d))
+    valid_p = _pad_rows(valid, tile, False)
+    est, bucket, hist, early = _fs.fused_scan_pallas(
+        codes_p, vecs_p, valid_p, lut_p, q_p, d_min, delta,
+        ew_map.astype(jnp.int32), m, tau_pred, tile=tile, mc=mc,
+        interpret=_interpret())
+    return est[:n], bucket[:n], hist, early[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def l2_exact(x: jax.Array, q: jax.Array, tile: int = _l2.TILE) -> jax.Array:
+    n, d = x.shape
+    x_p = _pad_cols(_pad_rows(x, tile, 0.0), 128, 0.0)
+    q_p = jnp.pad(q, (0, x_p.shape[1] - d))
+    return _l2.l2_pallas(x_p, q_p, tile=tile, interpret=_interpret())[:n]

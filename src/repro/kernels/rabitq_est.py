@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: RaBitQ bounded estimator.
+
+CPU RaBitQ computes bitwise dot products via popcount; the MXU analogue is a
+(TILE, d) x (d, 1) matmul of the ±1 int8 code block against the rotated unit
+query residual.  Per-object factors (norm_o, f_o) stream alongside; scalars
+(norm_q, eps0, 1/sqrt(d), d-1) arrive packed in a (1, 128) fp32 lane so the
+kernel has no SMEM dependencies (portable to interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _rq_kernel(codes_ref, norm_ref, f_ref, v_ref, scal_ref,
+               est_ref, lb_ref, ub_ref):
+    codes = codes_ref[...].astype(jnp.float32)      # (TILE, d)
+    v = v_ref[...]                                   # (1, d)
+    no = norm_ref[...][0]                            # (TILE,)
+    fo = f_ref[...][0]                               # (TILE,)
+    s = scal_ref[...]                                # (1, 128)
+    nq, eps0, inv_sqrt_d, dm1 = s[0, 0], s[0, 1], s[0, 2], s[0, 3]
+
+    xv = jax.lax.dot_general(
+        codes, v.reshape(-1, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0] * inv_sqrt_d
+    ip = xv / fo
+    err = eps0 * jnp.sqrt((1.0 - fo * fo) / (fo * fo * dm1))
+    scale = 2.0 * nq * no
+    base = nq * nq + no * no
+    zero = jnp.zeros_like(base)
+    est_ref[...] = jnp.sqrt(jnp.maximum(base - scale * ip, zero))[None, :]
+    lb_ref[...] = jnp.sqrt(jnp.maximum(base - scale * (ip + err), zero))[None, :]
+    ub_ref[...] = jnp.sqrt(jnp.maximum(base - scale * (ip - err), zero))[None, :]
+
+
+def rabitq_est_pallas(
+    codes: jax.Array,    # (n, d) int8, n % tile == 0, d lane-padded with 0s
+    norm_o: jax.Array,   # (n,)
+    f_o: jax.Array,      # (n,)
+    v: jax.Array,        # (d,)
+    norm_q: jax.Array,   # scalar
+    d_logical: int,      # true dimensionality (before lane padding)
+    eps0: float = 3.0,
+    tile: int = TILE,
+    interpret: bool = True,
+):
+    n, d = codes.shape
+    g = n // tile
+    scal = jnp.zeros((1, 128), jnp.float32)
+    scal = scal.at[0, 0].set(norm_q.astype(jnp.float32))
+    scal = scal.at[0, 1].set(eps0)
+    scal = scal.at[0, 2].set(1.0 / jnp.sqrt(jnp.float32(d_logical)))
+    scal = scal.at[0, 3].set(jnp.float32(d_logical - 1))
+    out_sds = jax.ShapeDtypeStruct((g, tile), jnp.float32)
+    est, lb, ub = pl.pallas_call(
+        _rq_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        ],
+        out_shape=[out_sds, out_sds, out_sds],
+        interpret=interpret,
+    )(codes, norm_o.reshape(1, n), f_o.reshape(1, n), v.reshape(1, d), scal)
+    return est.reshape(n), lb.reshape(n), ub.reshape(n)

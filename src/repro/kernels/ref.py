@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_adc(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """ADC estimate: est[n] = sum_m lut[m, codes[n, m]] (squared distance)."""
+    take = jax.vmap(lambda l, c: l[c], in_axes=(0, 1), out_axes=1)(
+        lut, codes.astype(jnp.int32))
+    return jnp.sum(take, axis=1)
+
+
+def rabitq_est(
+    codes: jax.Array,   # (n, d) int8 {-1,+1}
+    norm_o: jax.Array,  # (n,)
+    f_o: jax.Array,     # (n,)
+    v: jax.Array,       # (d,) rotated unit query residual
+    norm_q: jax.Array,  # scalar
+    eps0: float = 3.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    d = codes.shape[1]
+    xv = (codes.astype(jnp.float32) @ v) / jnp.sqrt(jnp.float32(d))
+    ip = xv / f_o
+    err = eps0 * jnp.sqrt((1.0 - f_o ** 2) / (f_o ** 2 * (d - 1)))
+    scale = 2.0 * norm_q * norm_o
+    base = norm_q ** 2 + norm_o ** 2
+    z = jnp.zeros_like(base)
+    est = jnp.sqrt(jnp.maximum(base - scale * ip, z))
+    lb = jnp.sqrt(jnp.maximum(base - scale * (ip + err), z))
+    ub = jnp.sqrt(jnp.maximum(base - scale * (ip - err), z))
+    return est, lb, ub
+
+
+def bucketize(dists: jax.Array, d_min: jax.Array, delta: jax.Array,
+              ew_map: jax.Array, m: int) -> jax.Array:
+    """Eq. 6 bucket ids with overflow bucket m."""
+    n_ew = ew_map.shape[0]
+    bin_id = jnp.floor((dists - d_min) / delta)
+    overflow = bin_id >= n_ew
+    bin_id = jnp.clip(bin_id, 0, n_ew - 1).astype(jnp.int32)
+    bucket = ew_map[bin_id]
+    return jnp.where(overflow, m, bucket).astype(jnp.int32)
+
+
+def bucket_hist(dists: jax.Array, valid: jax.Array, d_min, delta,
+                ew_map: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:
+    b = bucketize(dists, d_min, delta, ew_map, m)
+    w = jnp.where(valid, 1, 0).astype(jnp.int32)
+    hist = jnp.zeros((m + 1,), jnp.int32).at[b].add(w)
+    return b, hist
+
+
+def l2_exact(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Exact Euclidean distance of rows of x to q."""
+    return jnp.sqrt(jnp.maximum(
+        jnp.sum(x * x, -1) - 2.0 * (x @ q) + jnp.sum(q * q), 0.0))
+
+
+def fused_scan(
+    codes: jax.Array,    # (n, M) uint8/int32 PQ codes
+    vectors: jax.Array,  # (n, d) fp32
+    valid: jax.Array,    # (n,)
+    lut: jax.Array,      # (M, K)
+    q: jax.Array,        # (d,)
+    d_min, delta,
+    ew_map: jax.Array,   # (n_ew,)
+    m: int,
+    tau_pred: jax.Array, # scalar int32
+):
+    """Oracle for the fused estimate+bucketize+hist+early-exact kernel.
+
+    Returns (est, bucket, hist, early_exact) where early_exact[i] is the exact
+    distance when bucket[i] <= tau_pred (and valid), else +inf.
+    """
+    est2 = pq_adc(codes, lut)
+    est = jnp.sqrt(jnp.maximum(est2, 0.0))
+    est = jnp.where(valid, est, jnp.inf)
+    b = bucketize(est, d_min, delta, ew_map, m)
+    w = jnp.where(valid, 1, 0).astype(jnp.int32)
+    hist = jnp.zeros((m + 1,), jnp.int32).at[b].add(w)
+    ex = l2_exact(vectors, q)
+    early = jnp.where(valid & (b <= tau_pred), ex, jnp.inf)
+    return est, b, hist, early

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the full-size config, abstract params/optimizer
+state (ShapeDtypeStruct — nothing is allocated), the production mesh and
+sharding specs, then runs jit(...).lower(...).compile() and records
+memory_analysis / cost_analysis / parsed collective bytes into a JSON file
+consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k [--multi-pod] [--out out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all  # full 40-cell matrix
+"""
+import argparse
+import json
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import mesh as mesh_mod
+from repro.launch import roofline
+from repro.models import model as model_mod
+from repro.optim import adamw
+
+SHAPES = {
+    "train_4k": dict(mode="train", seq=4096, batch=256),
+    "prefill_32k": dict(mode="prefill", seq=32768, batch=32),
+    "decode_32k": dict(mode="decode", seq=32768, batch=128),
+    "long_500k": dict(mode="decode", seq=524288, batch=1),
+}
+
+# long_500k needs sub-quadratic decode state growth: SSM / hybrid only.
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if sh["mode"] in ("train", "prefill"):
+        batch = {"tokens": tok, "targets": tok}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            batch = {"tokens": tok, "targets": tok,
+                     "frames": jax.ShapeDtypeStruct(
+                         (b, cfg.n_frames, cfg.d_model), cfg.dtype)}
+        if sh["mode"] == "prefill":
+            batch.pop("targets")
+        return batch
+    batch = {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frames, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    sh = SHAPES[shape_name]
+    cfg = configs.get(arch)
+    if shape_name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip",
+                "reason": "full-attention arch: O(S^2) attention / O(S) KV "
+                          "state per token makes 500k-decode quadratic; run "
+                          "only for ssm/hybrid (DESIGN.md §Arch-applicability)"}
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = model_mod.build(cfg)
+
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    p_specs = mesh_mod.param_specs(params_sds, cfg, mesh)
+    p_shard = mesh_mod.to_shardings(p_specs, mesh)
+    batch_sds = input_specs(cfg, shape_name)
+    b_specs = mesh_mod.batch_specs(cfg, mesh, sh["batch"], sh["mode"])
+    b_shard = mesh_mod.to_shardings(b_specs, mesh)
+
+    if sh["mode"] == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        o_specs = mesh_mod.opt_state_specs(opt_sds, p_specs)
+        o_shard = mesh_mod.to_shardings(o_specs, mesh)
+        # Microbatched grad accumulation: 8 microbatches bounds activation
+        # transients to ~1-2 sequences per chip per microbatch at these
+        # global batch sizes (production default for the big archs).
+        step_fn = model_mod.make_train_step(model, opt_cfg, n_microbatches=8)
+        metric_shard = mesh_mod.to_shardings(
+            {"grad_norm": jax.sharding.PartitionSpec(),
+             "lr": jax.sharding.PartitionSpec(),
+             "loss": jax.sharding.PartitionSpec()}, mesh)
+        fn = jax.jit(step_fn,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, metric_shard),
+                     donate_argnums=(0, 1))   # params/opt buffers alias in->out
+        args = (params_sds, opt_sds, batch_sds)
+    elif sh["mode"] == "prefill":
+        fn = jax.jit(model.prefill, in_shardings=(p_shard, b_shard))
+        args = (params_sds, batch_sds)
+    else:  # decode
+        caches_sds = jax.eval_shape(
+            lambda: model.init_caches(sh["batch"], sh["seq"]))
+        c_specs = mesh_mod.cache_specs(cfg, mesh, sh["batch"])
+        c_shard = mesh_mod.to_shardings(c_specs, mesh)
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(p_shard, b_shard, c_shard),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(2,))     # KV/SSM caches update in place
+        args = (params_sds, batch_sds, caches_sds)
+
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    n_mb = 8 if sh["mode"] == "train" else 1
+    coll = roofline.collective_bytes_nested(
+        hlo, roofline.depth_trips_for(cfg, sh["mode"], sh["seq"], n_mb))
+    mf = roofline.model_flops(cfg, sh["mode"], sh["seq"], sh["batch"])
+    af = roofline.analytic_flops(cfg, sh["mode"], sh["seq"], sh["batch"])
+    ab = roofline.analytic_bytes(cfg, sh["mode"], sh["seq"], sh["batch"],
+                                 n_chips, n_mb)
+    rf = roofline.roofline_terms(cost, coll, n_chips, mf,
+                                 analytic_flops_global=af,
+                                 analytic_bytes_chip=ab)
+
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_d[attr] = getattr(mem, attr, None)
+    args_b = mem_d.get("argument_size_in_bytes") or 0
+    tmp_b = mem_d.get("temp_size_in_bytes") or 0
+    mem_d["per_chip_total_bytes"] = args_b + tmp_b
+    mem_d["fits_16gb_hbm"] = bool(args_b + tmp_b < 16e9)
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": int(n_chips),
+        "status": "ok",
+        "memory": mem_d,
+        "roofline": rf,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        arch_ids = list(configs.ALIASES.keys())
+        shapes = list(SHAPES)
+    else:
+        arch_ids = [args.arch]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    results = []
+    out_path = args.out or "dryrun_results.json"
+    for arch in arch_ids:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                print(f"=== {tag}", flush=True)
+                try:
+                    r = run_cell(arch, shape, mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "multi" if mp else "single",
+                         "status": "error", "error": repr(e)[:2000]}
+                results.append(r)
+                print(json.dumps(r, indent=None, default=str)[:600], flush=True)
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"DONE ok={n_ok} skip={n_skip} error={n_err} -> {out_path}")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Production mesh + sharding rules for the assigned architecture matrix.
+
+Mesh axes:
+  single-pod : (16, 16)      ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16)   ("pod", "data", "model") = 512 chips
+
+Sharding policy (universal, divisibility-guarded — every arch must compile on
+the SAME mesh, including awkward head counts like qwen2's 14 q-heads):
+
+  * weights: the last axis divisible by |model| shards over "model"
+    (output-feature / expert / vocab preference), and one further divisible
+    axis shards over "data" (FSDP/ZeRO pattern — required to fit dbrx-132b's
+    optimizer state); 1-D tensors replicate.  Layer-stacked leading axes are
+    scan-carried and never sharded.
+  * MoE expert stacks prefer the expert axis for "model" (EP).
+  * optimizer state (m, v) mirrors its parameter's spec.
+  * batch: global batch shards over ("pod", "data") when divisible, else
+    ("data",), else replicated (long_500k has batch 1 — its big tensor is the
+    KV/SSM cache, which shards over sequence/heads instead).
+  * KV caches: batch -> batch axes; kv-heads or head_dim -> "model";
+    sequence -> "data" when batch could not use it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before importing jax (launch/dryrun.py does this)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+def _leaf_spec(path, leaf, model_n: int, data_n: int, hybrid: bool) -> P:
+    keys = [getattr(p, "key", "") for p in path]
+    shape = leaf.shape
+    ndim = len(shape)
+    prefix = 0
+    if "layers" in keys:
+        prefix = 2 if hybrid else 1
+    dims: list[Any] = [None] * ndim
+
+    def divisible(ax, n):
+        return shape[ax] >= n and shape[ax] % n == 0
+
+    # prefer the expert axis for EP
+    name = keys[-1] if keys else ""
+    cand_model = list(range(ndim - 1, prefix - 1, -1))
+    if name in ("w_gate", "w_up", "w_down") and ndim - prefix >= 3:
+        cand_model = [prefix] + cand_model          # expert axis first
+    for ax in cand_model:
+        if dims[ax] is None and divisible(ax, model_n):
+            dims[ax] = "model"
+            break
+    for ax in range(prefix, ndim):
+        if dims[ax] is None and divisible(ax, data_n):
+            dims[ax] = "data"
+            break
+    return P(*dims)
+
+
+def param_specs(params_shapes, cfg, mesh: Mesh):
+    model_n = axis_size(mesh, "model")
+    data_n = axis_size(mesh, "data")
+    hybrid = cfg.family == "hybrid"
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, model_n, data_n, hybrid),
+        params_shapes)
+
+
+def opt_state_specs(opt_shapes, p_specs):
+    """m/v mirror params; step replicates."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=p_specs, v=p_specs)
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+def batch_axes_for(global_batch: int, mesh: Mesh):
+    pod_n = axis_size(mesh, "pod")
+    data_n = axis_size(mesh, "data")
+    if pod_n > 1 and global_batch % (pod_n * data_n) == 0:
+        return ("pod", "data")
+    if global_batch % data_n == 0:
+        return ("data",)
+    return None
+
+
+def batch_specs(cfg, mesh: Mesh, global_batch: int, mode: str):
+    ba = batch_axes_for(global_batch, mesh)
+    tok = P(ba, None)
+    if mode == "train" or mode == "prefill":
+        specs = {"tokens": tok, "targets": tok}
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = P(ba, None, None)
+        if cfg.family == "encdec":
+            specs = {"tokens": tok, "targets": tok,
+                     "frames": P(ba, None, None)}
+        if mode == "prefill":
+            specs.pop("targets")
+        return specs
+    # decode
+    specs = {"token": P(ba), "pos": P(ba)}
+    if cfg.family == "encdec":
+        specs["enc_out"] = P(ba, None, None)
+    return specs
+
+
+def cache_specs(cfg, mesh: Mesh, global_batch: int):
+    """Specs for init_decode_caches output (family-dependent)."""
+    model_n = axis_size(mesh, "model")
+    data_n = axis_size(mesh, "data")
+    ba = batch_axes_for(global_batch, mesh)
+    seq_axis = None if ba is not None else ("data" if data_n > 1 else None)
+
+    def kv_spec(n_lead):  # (lead..., B, S, kv, hd)
+        kv_ax = "model" if cfg.n_kv % model_n == 0 else None
+        hd_ax = None
+        if kv_ax is None and cfg.hd % model_n == 0:
+            hd_ax = "model"
+        return P(*([None] * n_lead), ba, seq_axis, kv_ax, hd_ax)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        out = {"k": kv_spec(1), "v": kv_spec(1)}
+        if cfg.kv_quant:
+            out["k_scale"] = P(None, ba, seq_axis)
+            out["v_scale"] = P(None, ba, seq_axis)
+        return out
+    sd = cfg.ssm_dims()
+
+    def ssm_h_spec(n_lead):  # (lead..., B, H, P, N)
+        h_ax = "model" if sd.n_heads % model_n == 0 else None
+        return P(*([None] * n_lead), ba, h_ax, None, None)
+
+    def conv_spec(n_lead):  # (lead..., B, W-1, C)
+        c_ax = "model" if sd.d_conv_ch % model_n == 0 else None
+        return P(*([None] * n_lead), ba, None, c_ax)
+
+    if cfg.family == "ssm":
+        return {"h": ssm_h_spec(1), "conv": conv_spec(1)}
+    if cfg.family == "hybrid":
+        return {"h": ssm_h_spec(2), "conv": conv_spec(2),
+                "k": kv_spec(1), "v": kv_spec(1)}
+    if cfg.family == "encdec":
+        return {"k": kv_spec(1), "v": kv_spec(1)}
+    raise ValueError(cfg.family)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,454 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per (arch, shape, mesh) cell; see EXPERIMENTS.md §Roofline):
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw              (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw      (~50 GB/s/link ICI)
+
+cost_analysis() runs on the PARTITIONED module, so flops/bytes are already
+per-chip.  Collective bytes are not in cost_analysis — we parse the
+compiled HLO text and sum *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (all-gather operands are
+output/group_size; reduce-scatter operands are the unscattered input).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_GROUPS_V1 = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind operand bytes summed over the module (per-chip module)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        nbytes = _shape_bytes(type_str)
+        gs = _group_size(line)
+        if kind == "all-gather":
+            nbytes = nbytes // max(gs, 1)       # operand = output / group
+        elif kind == "reduce-scatter":
+            nbytes = nbytes * max(gs, 1)        # operand = output * group
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["op_counts"] = counts
+    return out
+
+
+def collective_bytes_nested(hlo_text: str, depth_trips: list[int]) -> dict:
+    """Collective operand bytes with while-nesting multipliers.
+
+    Ops inside while bodies execute once per trip; HLO text shows them once.
+    We build the computation graph via ``body=%name`` references from while
+    instructions, walk it from ENTRY, and scale each computation's
+    collectives by the product of enclosing loop trip counts taken from
+    ``depth_trips`` (index = loop nesting depth; clamped to the last entry).
+    Computations unreachable via while chains (cond branches etc.) get the
+    depth-1 multiplier.
+    """
+    comp_re = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+    body_ref = re.compile(r"body=%?([\w.\-]+)")
+    comps: dict[str, dict] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        m = comp_re.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = {"coll": [], "bodies": []}
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        cm = _COLL_RE.match(line)
+        if cm and "-done(" not in line:
+            type_str, kind = cm.group(1), cm.group(2)
+            nbytes = _shape_bytes(type_str)
+            gs = _group_size(line)
+            if kind == "all-gather":
+                nbytes //= max(gs, 1)
+            elif kind == "reduce-scatter":
+                nbytes *= max(gs, 1)
+            comps[cur]["coll"].append((kind, nbytes))
+        for b in body_ref.findall(line):
+            comps[cur]["bodies"].append(b)
+
+    def trip(depth: int) -> int:
+        return depth_trips[min(depth, len(depth_trips) - 1)]
+
+    mult: dict[str, float] = {}
+
+    def walk(name: str, depth: int, m: float):
+        if name not in comps:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for b in comps[name]["bodies"]:
+            walk(b, depth + 1, m * trip(depth + 1))
+
+    if entry:
+        walk(entry, 0, 1.0)
+    default_m = float(trip(1))
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for name, c in comps.items():
+        m = mult.get(name, default_m if c["coll"] else 0.0)
+        for kind, nbytes in c["coll"]:
+            out[kind] += nbytes * m
+            counts[kind] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["op_counts"] = counts
+    return out
+
+
+def depth_trips_for(cfg, mode: str, seq: int, n_mb: int = 8) -> list[int]:
+    """Loop-nest trip counts for collective scaling (see DESIGN §Roofline).
+    depth 0 = entry; deeper entries estimated from the scan structure."""
+    if cfg.family == "hybrid":
+        l1, l2 = cfg.n_segments, cfg.ssm_per_segment
+    else:
+        l1, l2 = _layer_count(cfg), max(seq // 1024, 1)
+    if mode == "train":
+        return [1, n_mb, l1, l2, max(seq // 1024, 1)]
+    return [1, l1, l2, max(seq // 1024, 1)]
+
+
+def roofline_terms(cost: dict[str, Any], coll: dict, n_chips: int,
+                   model_flops_global: float,
+                   analytic_flops_global: float | None = None,
+                   analytic_bytes_chip: float | None = None) -> dict:
+    hlo_flops = float(cost.get("flops", 0.0) or 0.0)
+    hlo_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    # primary terms from the analytic model (cost_analysis undercounts scan
+    # bodies — measured values retained as the cross-check)
+    flops_chip = (analytic_flops_global / n_chips
+                  if analytic_flops_global else hlo_flops)
+    bytes_chip = (analytic_bytes_chip
+                  if analytic_bytes_chip is not None else hlo_bytes)
+    compute_s = flops_chip / PEAK_FLOPS
+    memory_s = bytes_chip / HBM_BW
+    coll_s = coll["total"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "analytic_flops_per_chip": flops_chip,
+        "analytic_bytes_per_chip": bytes_chip,
+        "hlo_flops_per_chip_measured": hlo_flops,
+        "hlo_bytes_per_chip_measured": hlo_bytes,
+        "collective_bytes_per_chip": coll["total"],
+        "collective_breakdown": {k: v for k, v in coll.items()
+                                 if k not in ("total", "op_counts")},
+        "collective_op_counts": coll["op_counts"],
+        "model_flops_global": model_flops_global,
+        "useful_flops_ratio": (model_flops_global / (flops_chip * n_chips)
+                               if flops_chip else 0.0),
+        "roofline_fraction": (model_flops_global / n_chips / PEAK_FLOPS
+                              / max(max(terms.values()), 1e-30)),
+    }
+
+
+# --------------------------------------------------------------------------
+# Analytic cost model (primary source for the roofline terms)
+#
+# XLA's cost_analysis() counts while/scan bodies ONCE (verified empirically:
+# an 8-step scanned matmul reports 1/8 the flops of its unrolled twin), and
+# every model here is scan-over-layers by design.  We therefore derive FLOPs
+# exactly from the einsum inventory (we wrote every matmul) and memory bytes
+# from a principled traffic model; cost_analysis is kept as a per-body
+# cross-check and memory_analysis (loop-aware) for capacity.
+# --------------------------------------------------------------------------
+
+def _attn_layer_flops(cfg, B, S, S_kv, causal_full=True):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    proj = 2 * B * S * d * (2 * h * hd) + 2 * B * S * d * (2 * kv * hd)
+    # flash computes the full S x S_kv block grid (masked lanes included)
+    attn = 2 * 2 * B * h * S * S_kv * hd
+    return proj + attn
+
+
+def _dense_mlp_flops(cfg, B, S, n_mats=3):
+    return 2 * B * S * cfg.d_model * cfg.d_ff * n_mats
+
+
+def _moe_mlp_flops(cfg, B, S):
+    cf = cfg.capacity_factor
+    router = 2 * B * S * cfg.d_model * cfg.n_experts
+    tokens = B * S * cfg.top_k * cf           # E * C dispatch slots
+    experts = 2 * tokens * cfg.d_model * cfg.d_ff * 3
+    return router + experts
+
+
+def _ssm_layer_flops(cfg, B, S):
+    sd = cfg.ssm_dims()
+    d = cfg.d_model
+    lc = min(cfg.ssm_chunk, S)
+    f = 2 * B * S * d * sd.d_in_proj                       # in_proj
+    f += 2 * B * S * sd.d_conv_ch * sd.conv_width          # conv
+    f += 2 * B * S * lc * sd.d_state                       # CB scores
+    f += 2 * B * S * lc * sd.n_heads * sd.headdim          # intra mat @ x
+    f += 2 * 2 * B * S * sd.d_state * sd.n_heads * sd.headdim  # inter+state
+    f += 2 * B * S * sd.d_inner * d                        # out_proj
+    return f
+
+
+def _ssm_decode_flops(cfg, B):
+    sd = cfg.ssm_dims()
+    f = 2 * B * cfg.d_model * sd.d_in_proj
+    f += 2 * 2 * B * sd.n_heads * sd.headdim * sd.d_state  # state upd + read
+    f += 2 * B * sd.d_inner * cfg.d_model
+    return f
+
+
+def forward_flops(cfg, B: int, S: int, S_kv: int | None = None) -> float:
+    """Exact global forward FLOPs for one pass (decode: S=1, S_kv=cache)."""
+    S_kv = S_kv if S_kv is not None else S
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        # vlm: patches extend the sequence in train/prefill only; during
+        # decode they are already in the cache (S == 1)
+        pat = cfg.n_patches if (fam == "vlm" and S > 1) else 0
+        S_eff = S + pat
+        Skv_eff = S_kv + pat if S_kv == S else S_kv
+        per = _attn_layer_flops(cfg, B, S_eff, Skv_eff) + _dense_mlp_flops(
+            cfg, B, S_eff)
+        return cfg.n_layers * per
+    if fam == "moe":
+        per = _attn_layer_flops(cfg, B, S, S_kv) + _moe_mlp_flops(cfg, B, S)
+        return cfg.n_layers * per
+    if fam == "ssm":
+        if S == 1 and S_kv > 1:
+            return cfg.n_layers * _ssm_decode_flops(cfg, B)
+        return cfg.n_layers * _ssm_layer_flops(cfg, B, S)
+    if fam == "hybrid":
+        if S == 1 and S_kv > 1:
+            ssm = cfg.n_layers * _ssm_decode_flops(cfg, B)
+        else:
+            ssm = cfg.n_layers * _ssm_layer_flops(cfg, B, S)
+        shared = cfg.n_segments * (
+            _attn_layer_flops(cfg, B, S, S_kv) + _dense_mlp_flops(cfg, B, S))
+        return ssm + shared
+    if fam == "encdec":
+        F = cfg.n_frames
+        dec_n = cfg.dec_layers or cfg.n_layers
+        enc = cfg.n_layers * (_attn_layer_flops(cfg, B, F, F)
+                              + _dense_mlp_flops(cfg, B, F, n_mats=2))
+        d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+        self_a = _attn_layer_flops(cfg, B, S, S_kv)
+        cross = (2 * B * S * d * 2 * h * hd           # q, o at S
+                 + 2 * B * F * d * 2 * kv * hd        # k, v at F
+                 + 2 * 2 * B * h * S * F * hd)        # scores + pv
+        dec = dec_n * (self_a + cross + _dense_mlp_flops(cfg, B, S, n_mats=2))
+        if S == 1 and S_kv > 1:
+            enc = 0.0  # decode step consumes a precomputed encoder output
+        return enc + dec
+    raise ValueError(fam)
+
+
+def head_flops(cfg, B, S, mode) -> float:
+    if mode == "train":
+        return 2 * B * S * cfg.d_model * cfg.vocab
+    return 2 * B * cfg.d_model * cfg.vocab  # last-token logits
+
+
+def analytic_flops(cfg, mode: str, seq: int, batch: int) -> float:
+    """Global FLOPs for one step."""
+    if mode == "train":
+        fwd = forward_flops(cfg, batch, seq) + head_flops(cfg, batch, seq, mode)
+        mult = 4.0 if cfg.remat else 3.0   # fwd + 2x bwd (+1x remat recompute)
+        opt = 12.0 * _total_params(cfg)
+        return fwd * mult + opt
+    if mode == "prefill":
+        return forward_flops(cfg, batch, seq) + head_flops(cfg, batch, seq, mode)
+    # decode: one token against a seq-long cache
+    return (forward_flops(cfg, batch, 1, S_kv=seq)
+            + head_flops(cfg, batch, 1, mode))
+
+
+def _total_params(cfg) -> int:
+    emb = cfg.vocab * cfg.d_model * 2
+    if cfg.family == "moe":
+        d, ff = cfg.d_model, cfg.d_ff
+        per = (2 * cfg.d_model * cfg.hd * (cfg.n_heads + cfg.n_kv)
+               + 3 * d * ff * cfg.n_experts + d * cfg.n_experts)
+        return emb + cfg.n_layers * per
+    dense_eq = active_param_count(cfg)
+    return emb + dense_eq
+
+
+def _dtype_bytes(cfg) -> int:
+    import jax.numpy as jnp
+    return 2 if cfg.dtype == jnp.bfloat16 else 4
+
+
+def _act_layer_bytes(cfg, B, S) -> float:
+    """HBM bytes written+read for one layer's major intermediates, one pass.
+    Flash attention scores stay in VMEM (fused) by design — q/k/v/out only."""
+    dt = _dtype_bytes(cfg)
+    d, ff, h, kv, hd = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv, cfg.hd)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        qkvo = B * S * hd * (2 * h + 2 * kv)
+        if fam == "moe":
+            mlp = B * S * cfg.top_k * cfg.capacity_factor * (2 * ff + 2 * d)
+        else:
+            mlp = B * S * 3 * ff
+        resid = 4 * B * S * d
+        return 2 * dt * (qkvo + mlp + resid)     # write + read
+    sd = cfg.ssm_dims()
+    inner = B * S * (sd.d_in_proj + sd.d_conv_ch + 2 * sd.d_inner)
+    return 2 * dt * (inner + 2 * B * S * d)
+
+
+def analytic_bytes(cfg, mode: str, seq: int, batch: int, n_chips: int,
+                   n_mb: int = 8) -> float:
+    """Per-chip HBM traffic for one step (the memory roofline term)."""
+    dt = _dtype_bytes(cfg)
+    n_par = _total_params(cfg)
+    par_chip = n_par * dt / n_chips          # fully sharded (model x data)
+    if mode == "train":
+        layer_passes = 3.0 if cfg.remat else 2.0   # fwd + recompute + bwd≈1
+        # weights: re-read per microbatch per pass + grad write/read + Adam
+        w = par_chip * (layer_passes * n_mb) + 2 * par_chip + 20 * (
+            n_par / n_chips)
+        acts = (_act_layer_bytes(cfg, batch, seq) * _layer_count(cfg)
+                * (1 + layer_passes)) / n_chips
+        head = 3 * batch * seq * cfg.vocab * dt / n_chips  # chunked loss
+        return w + acts + head
+    if mode == "prefill":
+        acts = (_act_layer_bytes(cfg, batch, seq) * _layer_count(cfg)) / n_chips
+        return par_chip + acts
+    # decode: weights + full cache read + small writes
+    cache = _cache_bytes(cfg, batch, seq)
+    return par_chip + cache / n_chips + (
+        _act_layer_bytes(cfg, batch, 1) * _layer_count(cfg)) / n_chips
+
+
+def _layer_count(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers + cfg.n_segments
+    if cfg.family == "encdec":
+        return cfg.n_layers + (cfg.dec_layers or cfg.n_layers)
+    return cfg.n_layers
+
+
+def _cache_bytes(cfg, batch, seq) -> float:
+    dt = _dtype_bytes(cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        per = cfg.n_layers * batch * seq * 2 * cfg.n_kv * cfg.hd
+        if getattr(cfg, "kv_quant", False):
+            return per + cfg.n_layers * batch * seq * 2 * 4  # int8 + scales
+        return per * dt
+    sd = cfg.ssm_dims() if cfg.d_state else None
+    if cfg.family == "ssm":
+        return cfg.n_layers * batch * sd.n_heads * sd.headdim * sd.d_state * 4
+    if cfg.family == "hybrid":
+        ssm = cfg.n_layers * batch * sd.n_heads * sd.headdim * sd.d_state * 4
+        attn = cfg.n_segments * batch * seq * 2 * cfg.n_kv * cfg.hd * dt
+        return ssm + attn
+    if cfg.family == "encdec":
+        dec_n = cfg.dec_layers or cfg.n_layers
+        return dec_n * batch * seq * 2 * cfg.n_kv * cfg.hd * dt
+    raise ValueError(cfg.family)
+
+
+def model_flops(cfg, mode: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params.
+
+    N excludes embedding tables (standard convention); MoE uses active
+    experts only.  D = total tokens processed by the step."""
+    n = active_param_count(cfg)
+    if mode == "train":
+        per_tok = 6 * n
+        d_tok = batch * seq
+    elif mode == "prefill":
+        per_tok = 2 * n
+        d_tok = batch * seq
+    else:  # decode: one token per sequence
+        per_tok = 2 * n
+        d_tok = batch
+    return float(per_tok) * float(d_tok)
+
+
+def active_param_count(cfg) -> int:
+    """Backbone parameters touched per token (analytic, excl. embeddings)."""
+    d, ff, L_ = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd = cfg.hd
+    attn = d * hd * cfg.n_heads * 2 + d * hd * cfg.n_kv * 2   # q,o + k,v
+    mlp = 3 * d * ff                                           # swiglu
+    if cfg.family == "dense" or cfg.family == "vlm":
+        return L_ * (attn + mlp)
+    if cfg.family == "moe":
+        active_mlp = 3 * d * ff * cfg.top_k + d * cfg.n_experts
+        return L_ * (attn + active_mlp)
+    if cfg.family == "ssm":
+        sd = cfg.ssm_dims()
+        ssm = (d * sd.d_in_proj + sd.d_inner * d
+               + sd.conv_width * sd.d_conv_ch)
+        return L_ * ssm
+    if cfg.family == "hybrid":
+        sd = cfg.ssm_dims()
+        ssm = (d * sd.d_in_proj + sd.d_inner * d
+               + sd.conv_width * sd.d_conv_ch)
+        shared = attn + mlp
+        return L_ * ssm + cfg.n_segments * shared
+    if cfg.family == "encdec":
+        dec_n = cfg.dec_layers or cfg.n_layers
+        enc = cfg.n_layers * (attn + 2 * d * ff)
+        dec = dec_n * (2 * attn + 2 * d * ff)
+        return enc + dec
+    raise ValueError(cfg.family)

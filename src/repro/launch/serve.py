@@ -1,0 +1,91 @@
+"""Batched large-k retrieval serving driver (the paper's workload).
+
+Builds a quantized ANN index over a corpus and serves batched large-k
+queries through the BBC search path.  This is the end-to-end driver for the
+paper's kind of system (serving); ``examples/serve_retrieval.py`` wires an
+LM encoder in front of it.
+
+  PYTHONPATH=src python -m repro.launch.serve --n 100000 --d 96 --k 5000 \
+      --method ivfpq_bbc --queries 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.index import flat, search
+
+
+METHODS = ("ivfpq", "ivfpq_bbc", "ivfrabitq", "ivfrabitq_bbc", "flat")
+
+
+def build_index(method: str, x, n_clusters: int, seed: int = 0):
+    key = jax.random.key(seed)
+    if method.startswith("ivfpq"):
+        return search.build_pq_index(key, x, n_clusters)
+    if method.startswith("ivfrabitq"):
+        return search.build_rabitq_index(key, x, n_clusters)
+    return None
+
+
+def make_searcher(method: str, index, x, k: int, n_probe: int, n_cand: int):
+    if method == "flat":
+        return lambda q: flat.search(x, q, k)[:2]
+    if method.startswith("ivfpq"):
+        return lambda q: search.ivf_pq_search(
+            index, q, k=k, n_probe=n_probe, n_cand=n_cand,
+            use_bbc=method.endswith("bbc"))[:2]
+    return lambda q: search.ivf_rabitq_search(
+        index, q, k=k, n_probe=n_probe,
+        use_bbc=method.endswith("bbc"))[:2]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=96)
+    ap.add_argument("--k", type=int, default=5_000)
+    ap.add_argument("--method", choices=METHODS, default="ivfpq_bbc")
+    ap.add_argument("--n-probe", type=int, default=64)
+    ap.add_argument("--n-clusters", type=int, default=316)
+    ap.add_argument("--queries", type=int, default=20)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(synthetic.clustered(rng, args.n, args.d))
+    qs = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), args.queries))
+    n_cand = min(8 * args.k, args.n)
+
+    t0 = time.monotonic()
+    index = build_index(args.method, x, args.n_clusters)
+    print(f"[serve] index built in {time.monotonic()-t0:.1f}s", flush=True)
+
+    searcher = make_searcher(args.method, index, x, args.k, args.n_probe,
+                             n_cand)
+    # warmup / compile
+    d, i = searcher(qs[0])
+    jax.block_until_ready((d, i))
+
+    t0 = time.monotonic()
+    for q in qs:
+        d, i = searcher(q)
+    jax.block_until_ready((d, i))
+    dt = time.monotonic() - t0
+    qps = args.queries / dt
+    # recall vs exact on the last query
+    gt_d, gt_i = flat.search(x, qs[-1], args.k)
+    recall = len(set(np.asarray(i).tolist())
+                 & set(np.asarray(gt_i).tolist())) / args.k
+    print(json.dumps({"method": args.method, "k": args.k, "qps": round(qps, 2),
+                      "ms_per_query": round(1e3 / qps, 2),
+                      "recall_sample": round(recall, 4)}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment the modality frontend is a STUB: ``input_specs`` supplies
+precomputed frame embeddings (B, n_frames, d) instead of the mel+conv stack.
+Encoder: bidirectional attention + GELU MLP, sinusoidal positions, LayerNorm.
+Decoder: causal self-attention + cross-attention + GELU MLP, learned
+positions.  Layer-stacked with lax.scan like the decoder-only stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import sharding as shard
+from repro.models.transformer import LMConfig
+
+Params = dict
+
+
+def _sinusoid(n: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1).astype(dtype)
+
+
+def init_encdec(key, cfg: LMConfig) -> Params:
+    dt = cfg.dtype
+    ks = jax.random.split(key, 6)
+    dims = cfg.attn_dims()
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dt), "lb1": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt), "lb2": jnp.zeros((cfg.d_model,), dt),
+            "attn": L.init_attn(k1, dims, dt),
+            "mlp": L.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dt), "lb1": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt), "lb2": jnp.zeros((cfg.d_model,), dt),
+            "ln3": jnp.ones((cfg.d_model,), dt), "lb3": jnp.zeros((cfg.d_model,), dt),
+            "self_attn": L.init_attn(k1, dims, dt),
+            "cross_attn": L.init_attn(k2, dims, dt),
+            "mlp": L.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    dec_n = cfg.dec_layers or cfg.n_layers
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), dt) * 0.02,
+        "pos_dec": jax.random.normal(ks[1], (40960, cfg.d_model), dt) * 0.01,
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(ks[2], cfg.n_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(ks[3], dec_n)),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "enc_norm_b": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm_b": jnp.zeros((cfg.d_model,), dt),
+        "unembed": jax.random.normal(ks[4], (cfg.d_model, cfg.vocab), dt)
+        * (float(cfg.d_model) ** -0.5),
+    }
+
+
+def encode(params: Params, cfg: LMConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, n_frames, d) precomputed embeddings (frontend stub)."""
+    b, s, d = frames.shape
+    x = frames + _sinusoid(s, d, frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, lp):
+        z = L.layer_norm(h, lp["ln1"], lp["lb1"])
+        h = h + L.attn_forward(lp["attn"], z, cfg.attn_dims(), positions,
+                               causal=False, use_rope=False)
+        z = L.layer_norm(h, lp["ln2"], lp["lb2"])
+        h = h + L.gelu_mlp(lp["mlp"], z)
+        return shard.constrain(h, ("pod", "data"), "model", None), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layer_norm(x, params["enc_norm"], params["enc_norm_b"])
+
+
+def decode_train(params: Params, cfg: LMConfig, enc_out: jax.Array,
+                 tokens: jax.Array) -> jax.Array:
+    """Teacher-forced decoder: tokens (B, S_dec) -> logits."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_dec"][:s][None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), (b, enc_out.shape[1]))
+
+    def body(h, lp):
+        z = L.layer_norm(h, lp["ln1"], lp["lb1"])
+        h = h + L.attn_forward(lp["self_attn"], z, cfg.attn_dims(), positions,
+                               causal=True, use_rope=False)
+        z = L.layer_norm(h, lp["ln2"], lp["lb2"])
+        h = h + _cross_attn(lp["cross_attn"], z, enc_out, cfg)
+        z = L.layer_norm(h, lp["ln3"], lp["lb3"])
+        return h + L.gelu_mlp(lp["mlp"], z), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.layer_norm(x, params["final_norm"], params["final_norm_b"])
+    return x @ params["unembed"]
+
+
+def _cross_attn(p: Params, x: jax.Array, enc_out: jax.Array, cfg: LMConfig):
+    b, s, _ = x.shape
+    dims = cfg.attn_dims()
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (enc_out @ p["wk"]).reshape(b, -1, kv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, -1, kv, hd)
+    o = L.attention_scores(q, L.repeat_kv(k, h // kv), L.repeat_kv(v, h // kv),
+                           causal=False)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def _dec_hidden(params: Params, cfg: LMConfig, enc_out: jax.Array,
+                tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_dec"][:s][None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, lp):
+        z = L.layer_norm(h, lp["ln1"], lp["lb1"])
+        h = h + L.attn_forward(lp["self_attn"], z, cfg.attn_dims(), positions,
+                               causal=True, use_rope=False)
+        z = L.layer_norm(h, lp["ln2"], lp["lb2"])
+        h = h + _cross_attn(lp["cross_attn"], z, enc_out, cfg)
+        z = L.layer_norm(h, lp["ln3"], lp["lb3"])
+        h = h + L.gelu_mlp(lp["mlp"], z)
+        return shard.constrain(h, ("pod", "data"), "model", None), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return L.layer_norm(x, params["final_norm"], params["final_norm_b"])
+
+
+def prefill_last_logits(params: Params, cfg: LMConfig, frames: jax.Array,
+                        tokens: jax.Array) -> jax.Array:
+    enc = encode(params, cfg, frames)
+    x = _dec_hidden(params, cfg, enc, tokens)
+    return x[:, -1, :] @ params["unembed"]
+
+
+LOSS_CHUNK = 1024
+
+
+def loss(params: Params, cfg: LMConfig, frames: jax.Array, tokens: jax.Array,
+         targets: jax.Array) -> jax.Array:
+    enc = encode(params, cfg, frames)
+    x = _dec_hidden(params, cfg, enc, tokens)
+    b, s, d = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def body(tot, xs):
+        xc, tc = xs
+        logits = (xc @ params["unembed"]).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(ll), None
+
+    xcs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tcs = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    # Remat per chunk: (B, chunk, V) logits are recomputed in the backward.
+    tot, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                          (xcs, tcs))
+    return -tot / (b * s)
+
+
+def init_decode_caches(cfg: LMConfig, batch: int, max_seq: int,
+                       enc_out: jax.Array | None = None):
+    dt = cfg.dtype
+    dims = cfg.attn_dims()
+    dec_n = cfg.dec_layers or cfg.n_layers
+    caches = {
+        "k": jnp.zeros((dec_n, batch, max_seq, dims.n_kv, dims.head_dim), dt),
+        "v": jnp.zeros((dec_n, batch, max_seq, dims.n_kv, dims.head_dim), dt),
+    }
+    return caches
+
+
+def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
+                caches: Params, pos: jax.Array, enc_out: jax.Array):
+    """One decoder step with cross-attention over the (precomputed) encoder
+    output."""
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :]
+    x = x + params["pos_dec"][pos][:, None, :]
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        z = L.layer_norm(h, lp["ln1"], lp["lb1"])
+        att, (nk, nv) = _self_attn_decode(lp["self_attn"], z, cfg, ck, cv, pos)
+        h = h + att
+        z = L.layer_norm(h, lp["ln2"], lp["lb2"])
+        h = h + _cross_attn(lp["cross_attn"], z, enc_out, cfg)
+        z = L.layer_norm(h, lp["ln3"], lp["lb3"])
+        return h + L.gelu_mlp(lp["mlp"], z), (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["k"], caches["v"]))
+    x = L.layer_norm(x, params["final_norm"], params["final_norm_b"])
+    return (x @ params["unembed"])[:, 0, :], {"k": nk, "v": nv}
+
+
+def _self_attn_decode(p, x, cfg, ck, cv, pos):
+    dims = cfg.attn_dims()
+    b = x.shape[0]
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, kv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, kv, hd)
+    b_idx = jnp.arange(b, dtype=jnp.int32)
+    ck = ck.at[b_idx, pos].set(k[:, 0])
+    cv = cv.at[b_idx, pos].set(v[:, 0])
+    kv_valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+    o = L.attention_scores(q, L.repeat_kv(ck, h // kv), L.repeat_kv(cv, h // kv),
+                           causal=False, kv_valid=kv_valid)
+    return o.reshape(b, 1, h * hd) @ p["wo"], (ck, cv)

@@ -1,0 +1,295 @@
+"""Shared layer primitives: norms, RoPE, GQA attention, MLPs.
+
+Conventions:
+  * params are plain dicts of jnp arrays; layer-stacked weights carry a
+    leading (L, ...) axis consumed by lax.scan (keeps HLO O(1 layer),
+    essential for the 512-device SPMD compiles).
+  * activations default to bf16-ready fp32 (dtype passed by config); all
+    reductions in fp32.
+  * attention supports three modes: full causal (train/prefill), cached
+    decode (one token vs a seq_len cache), and bidirectional (encoders).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * scale + bias).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(..., S, n_kv, hd) -> (..., S, n_kv * n_rep, hd) (GQA head sharing)."""
+    if n_rep == 1:
+        return x
+    b = x.shape[:-2]
+    s_kv, hd = x.shape[-2], x.shape[-1]
+    x = jnp.broadcast_to(x[..., :, None, :], (*b, s_kv, n_rep, hd))
+    return x.reshape(*b[:-1], b[-1], s_kv * n_rep, hd)
+
+
+def attention_scores(
+    q: jax.Array,            # (B, S_q, H, hd)
+    k: jax.Array,            # (B, S_k, H, hd)
+    v: jax.Array,            # (B, S_k, H, hd)
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    kv_valid: jax.Array | None = None,   # (B, S_k) cache-validity mask
+) -> jax.Array:
+    """Plain softmax attention (fp32 softmax).  Returns (B, S_q, H, hd)."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    s_q, s_k = q.shape[1], k.shape[1]
+    if causal:
+        qpos = jnp.arange(s_q)[:, None] + q_offset
+        kpos = jnp.arange(s_k)[None, :]
+        mask = kpos <= qpos                     # (S_q, S_k)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    if kv_valid is not None:
+        logits = jnp.where(kv_valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (trace-time)."""
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def flash_attention(
+    q: jax.Array,            # (B, S_q, H, hd)
+    k: jax.Array,            # (B, S_k, H, hd)
+    v: jax.Array,
+    causal: bool,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-efficient attention: online-softmax over KV chunks, scanned over
+    Q chunks.  Peak live tensor is (B, H, q_chunk, kv_chunk) instead of
+    (B, H, S, S) — required for the 32k-sequence shapes.  Pure jnp (the TPU
+    deployment can swap a Pallas flash kernel; the dry-run lowers this)."""
+    b, s_q, h, hd = q.shape
+    s_k = k.shape[1]
+    q_chunk = _pick_chunk(s_q, q_chunk)
+    kv_chunk = _pick_chunk(s_k, kv_chunk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    nq, nk = s_q // q_chunk, s_k // kv_chunk
+
+    qs = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,hd)
+    ks = k.reshape(b, nk, kv_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, kv_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_body(_, qi_idx):
+        qi, iq = qi_idx
+        m0 = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+
+        def kv_body(carry, kj_idx):
+            m, l, acc = carry
+            kj, vj, jk = kj_idx
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            if causal:
+                qpos = iq * q_chunk + jnp.arange(q_chunk)
+                kpos = jk * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None],
+                              s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        # Remat per KV block: real flash attention never stores the (qc, kc)
+        # score/probability blocks — the backward recomputes them.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), (m0, l0, a0),
+            (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    # (nq, B, H, qc, hd) -> (B, S_q, H, hd)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, s_q, h, hd)
+
+
+FLASH_THRESHOLD = 2048  # use chunked attention at/above this sequence length
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+
+
+def init_attn(key, dims: AttnDims, dtype=jnp.float32) -> Params:
+    d, h, kv, hd = dims.d_model, dims.n_heads, dims.n_kv, dims.head_dim
+    ks = jax.random.split(key, 4)
+    scale = float(d) ** -0.5  # python float: weak type, preserves bf16
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dtype) * scale,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), dtype) * scale,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), dtype) * scale,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dtype) * scale,
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def attn_forward(
+    p: Params,
+    x: jax.Array,                    # (B, S, d)
+    dims: AttnDims,
+    positions: jax.Array,            # (B, S)
+    causal: bool = True,
+    use_rope: bool = True,
+) -> jax.Array:
+    b, s, d = x.shape
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if use_rope:
+        q = rope(q, positions, dims.rope_theta)
+        k = rope(k, positions, dims.rope_theta)
+    k = repeat_kv(k, h // kv)
+    v = repeat_kv(v, h // kv)
+    if s >= FLASH_THRESHOLD:
+        o = flash_attention(q, k, v, causal=causal)
+    else:
+        o = attention_scores(q, k, v, causal=causal)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def attn_prefill(p: Params, x: jax.Array, dims: AttnDims, positions: jax.Array):
+    """Like attn_forward but also returns the (k, v) cache (pre-repeat)."""
+    b, s, d = x.shape
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = rope(q, positions, dims.rope_theta)
+    k = rope(k, positions, dims.rope_theta)
+    o = attention_scores(q, repeat_kv(k, h // kv), repeat_kv(v, h // kv),
+                         causal=True)
+    return o.reshape(b, s, h * hd) @ p["wo"], (k, v)
+
+
+def attn_decode(
+    p: Params,
+    x: jax.Array,                    # (B, 1, d) new token
+    dims: AttnDims,
+    cache_k: jax.Array,              # (B, S_max, kv, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,                  # (B,) current position
+):
+    """One-token decode against a static-size cache (in-place dynamic update)."""
+    b, _, d = x.shape
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kv, hd)
+    v = v.reshape(b, 1, kv, hd)
+    q = rope(q, pos[:, None], dims.rope_theta)
+    k = rope(k, pos[:, None], dims.rope_theta)
+    # scatter the new kv at position pos (indexed update: in-place with
+    # donated caches; a one-hot blend would read+write the full cache)
+    b_idx = jnp.arange(b, dtype=jnp.int32)
+    cache_k = cache_k.at[b_idx, pos].set(k[:, 0])
+    cache_v = cache_v.at[b_idx, pos].set(v[:, 0])
+    kv_valid = jnp.arange(cache_k.shape[1])[None, :] <= pos[:, None]
+    o = attention_scores(
+        q, repeat_kv(cache_k, h // kv), repeat_kv(cache_v, h // kv),
+        causal=False, kv_valid=kv_valid)
+    return o.reshape(b, 1, h * hd) @ p["wo"], (cache_k, cache_v)
+
+
+# ------------------------------- MLPs -------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    s1 = float(d_model) ** -0.5
+    s2 = float(d_ff) ** -0.5
+    return {
+        "w_gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s1,
+        "w_up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * s1,
+        "w_down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * s2,
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    s1 = float(d_model) ** -0.5
+    s2 = float(d_ff) ** -0.5
+    return {
+        "w_up": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s1,
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": jax.random.normal(ks[1], (d_ff, d_model), dtype) * s2,
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]

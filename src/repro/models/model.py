@@ -1,0 +1,145 @@
+"""Unified model API: build(config) -> init / train_step / serve steps.
+
+``train_step`` is the object the dry-run lowers for ``train_4k``;
+``decode_step`` (token + caches) for ``decode_32k`` / ``long_500k``;
+``forward`` for ``prefill_32k`` (prefill compute == forward; cache export is
+a layout copy the serving runtime owns — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf
+from repro.models.transformer import LMConfig
+from repro.optim import adamw
+
+
+class Model(NamedTuple):
+    cfg: LMConfig
+    init: Any
+    loss_fn: Any
+    forward: Any
+    prefill: Any            # full-seq backbone, last-token logits
+    decode_step: Any
+    init_caches: Any
+
+
+def build(cfg: LMConfig) -> Model:
+    if cfg.family == "encdec":
+        def init(key):
+            return encdec_mod.init_encdec(key, cfg)
+
+        def loss_fn(params, batch):
+            return encdec_mod.loss(params, cfg, batch["frames"],
+                                   batch["tokens"], batch["targets"])
+
+        def forward(params, batch):
+            enc = encdec_mod.encode(params, cfg, batch["frames"])
+            return encdec_mod.decode_train(params, cfg, enc, batch["tokens"])
+
+        def decode_step(params, batch, caches):
+            return encdec_mod.decode_step(
+                params, cfg, batch["token"], caches, batch["pos"],
+                batch["enc_out"])
+
+        def prefill(params, batch):
+            return encdec_mod.prefill_last_logits(
+                params, cfg, batch["frames"], batch["tokens"])
+
+        def init_caches(batch, max_seq):
+            return encdec_mod.init_decode_caches(cfg, batch, max_seq)
+
+        return Model(cfg, init, loss_fn, forward, prefill, decode_step,
+                     init_caches)
+
+    def init(key):
+        return tf.init_lm(key, cfg)
+
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, cfg, batch["tokens"], batch["targets"],
+                          batch.get("patch_embeds"))
+
+    def forward(params, batch):
+        return tf.forward(params, cfg, batch["tokens"],
+                          batch.get("patch_embeds"))
+
+    def decode_step(params, batch, caches):
+        return tf.decode_step(params, cfg, batch["token"], caches,
+                              batch["pos"])
+
+    def prefill(params, batch):
+        return tf.prefill_last_logits(params, cfg, batch["tokens"],
+                                      batch.get("patch_embeds"))
+
+    def init_caches(batch, max_seq):
+        return tf.init_decode_caches(cfg, batch, max_seq)
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step,
+                 init_caches)
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    n_microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``n_microbatches > 1`` enables gradient accumulation: the global batch is
+    split along its leading axis and scanned, so per-microbatch activation
+    transients (flash blocks, MoE expert buffers, saved carries) shrink by
+    the microbatch factor while the optimizer semantics are unchanged.
+    """
+    if n_microbatches == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            params, opt_state, metrics = adamw.update(
+                grads, opt_state, params, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        return train_step
+
+    from repro.models import sharding as shard
+
+    def split(x):
+        mb = n_microbatches
+        y = x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+        # keep the microbatch shards on the batch axes after the reshape
+        return shard.constrain(
+            y, None, ("pod", "data"), *([None] * (y.ndim - 2)))
+
+    def train_step(params, opt_state, batch):
+        mbs = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            g_acc, l_acc = acc
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (g_sum, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / n_microbatches, g_sum)
+        params, opt_state, metrics = adamw.update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss_sum / n_microbatches
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """(params, batch, caches) -> (logits, new_caches) — one decode token."""
+
+    def serve_step(params, batch, caches):
+        return model.decode_step(params, batch, caches)
+
+    return serve_step
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))

@@ -1,0 +1,58 @@
+"""Activation-sharding hints usable from inside model code.
+
+``constrain(x, *axes)`` applies ``with_sharding_constraint`` only when a mesh
+is ambient (jit under ``with mesh:``), the named axes exist on it, and every
+constrained dimension is divisible by its axis size — so model code stays
+mesh-agnostic and runs unchanged in single-device smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        m = jax._src.mesh.thread_resources.env.physical_mesh  # noqa: SLF001
+        if m is not None and not m.empty:
+            return m
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.shape_tuple:
+            return m
+    except Exception:  # noqa: BLE001
+        pass
+    return None
+
+
+def constrain(x: jax.Array, *axes):
+    """axes: one entry per dim — an axis name, a tuple of names, or None."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if hasattr(
+        mesh, "devices") else dict(mesh.shape_tuple)
+
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        group = ax if isinstance(ax, tuple) else (ax,)
+        # keep the axes that exist on this mesh (e.g. "pod" is absent on the
+        # single-pod mesh — the rest of the group still applies)
+        group = tuple(a for a in group if a in names)
+        if not group:
+            spec.append(None)
+            continue
+        total = 1
+        for a in group:
+            total *= sizes[a]
+        if dim % total == 0 and dim >= total:
+            spec.append(group if len(group) > 1 else group[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

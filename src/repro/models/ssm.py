@@ -1,0 +1,199 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan +
+O(1)-per-token recurrent decode.
+
+Shapes follow the Mamba2 paper: d_inner = expand * d_model, H = d_inner /
+headdim heads, shared (ngroups=1) B/C of size N = d_state, scalar-per-head A,
+softplus dt with bias, width-4 causal depthwise conv on (x, B, C), gated
+RMSNorm output.
+
+Train/prefill use the SSD block decomposition with chunk length L: the
+intra-chunk term is an (L x L) masked "attention" per head (materialized per
+scan step only — live memory O(B*H*L^2)), the inter-chunk term propagates the
+(B, H, P, N) state through a lax.scan.  Decode is the recurrence
+    h <- h * exp(dt*A) + dt * (x ⊗ B);   y = C·h + D*x
+which is what makes the ``long_500k`` decode shape feasible (state is O(1) in
+sequence length).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def d_conv_ch(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def init_ssm(key, dims: SSMDims, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    s = float(dims.d_model) ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (dims.d_model, dims.d_in_proj), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (dims.conv_width, dims.d_conv_ch), dtype) * 0.2,
+        "conv_b": jnp.zeros((dims.d_conv_ch,), dtype),
+        "a_log": jnp.zeros((dims.n_heads,), jnp.float32),          # A = -exp(0) = -1
+        "d_skip": jnp.ones((dims.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((dims.n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((dims.d_inner,), dtype),
+        "out_proj": jax.random.normal(
+            ks[2], (dims.d_inner, dims.d_model), dtype) * (float(dims.d_inner) ** -0.5),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: jax.Array | None = None):
+    """Depthwise causal conv over S.  xbc: (B, S, C), w: (W, C).
+    Returns (out (B,S,C), new_cache (B, W-1, C))."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, xbc], axis=1)      # (B, S+W-1, C)
+    out = sum(xp[:, i: i + xbc.shape[1], :] * w[i] for i in range(width))
+    new_cache = xp[:, -(width - 1):, :]
+    return jax.nn.silu(out + b), new_cache
+
+
+def _split_proj(p: Params, x: jax.Array, dims: SSMDims):
+    zxbcdt = x @ p["in_proj"]
+    di, n, h = dims.d_inner, dims.d_state, dims.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt
+
+
+def ssd_chunked(
+    xh: jax.Array,    # (B, S, H, P)
+    bm: jax.Array,    # (B, S, N)
+    cm: jax.Array,    # (B, S, N)
+    dt: jax.Array,    # (B, S, H) fp32
+    a: jax.Array,     # (H,) fp32 (negative)
+    h0: jax.Array | None = None,   # (B, H, P, N)
+    chunk: int = 128,
+):
+    """SSD dual-form scan.  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = xh.reshape(b, nc, chunk, h, p)
+    bc = bm.reshape(b, nc, chunk, n)
+    cc = cm.reshape(b, nc, chunk, n)
+    dtc = dt.reshape(b, nc, chunk, h)
+    da = dtc * a                                   # (B, nc, L, H), <= 0
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hstate, xs):
+        xcs, bcs, ccs, dacs, dtcs = xs             # per-chunk (B, L, ...)
+        lcs = jnp.cumsum(dacs, axis=1)             # (B, L, H)
+        # --- intra-chunk (masked attention form) ---
+        cb = jnp.einsum("bin,bjn->bij", ccs.astype(jnp.float32),
+                        bcs.astype(jnp.float32))   # (B, L, L)
+        dmat = lcs[:, :, None, :] - lcs[:, None, :, :]        # (B, L, L, H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        mat = jnp.where(causal[None, :, :, None],
+                        jnp.exp(dmat) * dtcs[:, None, :, :], 0.0)
+        mat = mat * cb[..., None]                  # (B, L, L, H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", mat, xcs.astype(jnp.float32))
+        # --- inter-chunk (carry state in) ---
+        y_inter = jnp.einsum("bin,bhpn->bihp", ccs.astype(jnp.float32), hstate)
+        y_inter = y_inter * jnp.exp(lcs)[:, :, :, None]     # decay since entry
+        # --- state update ---
+        total = lcs[:, -1, :]                      # (B, H)
+        decay_to_end = jnp.exp(total[:, None, :] - lcs)       # (B, L, H)
+        contrib = jnp.einsum(
+            "bjhp,bjn->bhpn",
+            xcs.astype(jnp.float32) * (dtcs * decay_to_end)[..., None],
+            bcs.astype(jnp.float32))
+        hnew = hstate * jnp.exp(total)[:, :, None, None] + contrib
+        return hnew, (y_intra + y_inter)
+
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        bc.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+        da.transpose(1, 0, 2, 3),
+        dtc.transpose(1, 0, 2, 3),
+    )
+    # Remat per chunk: the (B, L, L, H) intra-chunk tensors are recomputed
+    # in the backward instead of being saved for every chunk.
+    h_final, ys = jax.lax.scan(jax.checkpoint(step), h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssm_forward(p: Params, x: jax.Array, dims: SSMDims, chunk: int = 128,
+                h0=None, conv_cache=None, return_state: bool = False):
+    """Full Mamba2 block, train/prefill mode.  x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    di, n, h, pd = dims.d_inner, dims.d_state, dims.n_heads, dims.headdim
+    z, xbc, dt = _split_proj(p, x, dims)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xi = xbc[..., :di].reshape(b, s, h, pd)
+    bm = xbc[..., di: di + n]
+    cm = xbc[..., di + n:]
+    a = -jnp.exp(p["a_log"])
+    y, h_final = ssd_chunked(xi, bm, cm, dt, a, h0=h0, chunk=min(chunk, s))
+    y = y + p["d_skip"][None, None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (h_final, new_conv)
+    return out
+
+
+def ssm_decode(p: Params, x: jax.Array, dims: SSMDims,
+               h: jax.Array, conv_cache: jax.Array):
+    """One-token decode.  x: (B, 1, d_model); h: (B, H, P, N);
+    conv_cache: (B, W-1, C)."""
+    b = x.shape[0]
+    di, n, hh, pd = dims.d_inner, dims.d_state, dims.n_heads, dims.headdim
+    z, xbc, dt = _split_proj(p, x, dims)          # (B, 1, ...)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xi = xbc[:, 0, :di].reshape(b, hh, pd)
+    bm = xbc[:, 0, di: di + n]
+    cm = xbc[:, 0, di + n:]
+    dt0 = dt[:, 0]                                 # (B, H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt0 * a)                       # (B, H)
+    contrib = jnp.einsum("bhp,bn->bhpn", xi.astype(jnp.float32) * dt0[..., None],
+                         bm.astype(jnp.float32))
+    h = h * decay[:, :, None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", h, cm.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], (h, new_conv)

@@ -1,0 +1,447 @@
+"""Decoder-only LM stack covering dense / MoE / SSM / hybrid families.
+
+All layer weights are stacked with a leading (L, ...) axis and consumed by
+``lax.scan`` — the HLO contains ONE layer body regardless of depth, which is
+what keeps the 512-device SPMD dry-run compiles tractable.  Hybrid models
+(Zamba2) scan over segments: ``ssm_per_segment`` stacked Mamba2 layers plus a
+single SHARED attention block applied once per segment (weight re-use, as in
+the Zamba2 paper).
+
+Modes:
+  forward(tokens | embeds)     -> logits            (train / prefill compute)
+  prefill(tokens)              -> logits, caches    (builds decode state)
+  decode(token, caches, pos)   -> logits, caches    (one step)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import sharding as shard
+from repro.models import ssm as ssm_mod
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    d_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    # hybrid (Zamba2-style shared attention)
+    ssm_per_segment: int = 0    # >0 => hybrid: scan segments of ssm + shared attn
+    # frontends (vlm / audio stubs)
+    n_patches: int = 0          # vlm: prepended image patch embeddings
+    n_frames: int = 0           # audio: encoder frame count (encdec only)
+    dec_layers: int = 0         # encdec: decoder depth (n_layers = encoder)
+    dtype: Any = jnp.float32
+    remat: bool = False         # activation checkpointing per layer
+    kv_quant: bool = False      # int8 KV cache (decode path), per-position scale
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_dims(self) -> L.AttnDims:
+        return L.AttnDims(self.d_model, self.n_heads, self.n_kv, self.hd,
+                          self.qkv_bias, self.rope_theta)
+
+    def ssm_dims(self) -> ssm_mod.SSMDims:
+        return ssm_mod.SSMDims(self.d_model, self.d_state, self.ssm_expand,
+                               self.ssm_headdim)
+
+    @property
+    def n_segments(self) -> int:
+        assert self.ssm_per_segment > 0
+        return self.n_layers // self.ssm_per_segment
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stack_init(key, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_lm(key, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = cfg.dtype
+    p: Params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), dt) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "unembed": jax.random.normal(ks[1], (cfg.d_model, cfg.vocab), dt)
+        * (float(cfg.d_model) ** -0.5),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        def one_layer(k):
+            k1, k2 = jax.random.split(k)
+            lp = {
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "ln2": jnp.ones((cfg.d_model,), dt),
+                "attn": L.init_attn(k1, cfg.attn_dims(), dt),
+            }
+            if cfg.family == "moe":
+                lp["moe"] = moe_mod.init_moe(k2, cfg.d_model, cfg.d_ff,
+                                             cfg.n_experts, dt)
+            else:
+                lp["mlp"] = L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dt)
+            return lp
+
+        p["layers"] = _stack_init(ks[2], cfg.n_layers, one_layer)
+    elif cfg.family == "ssm":
+        def one_layer(k):
+            return {
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "ssm": ssm_mod.init_ssm(k, cfg.ssm_dims(), dt),
+            }
+        p["layers"] = _stack_init(ks[2], cfg.n_layers, one_layer)
+    elif cfg.family == "hybrid":
+        def one_ssm(k):
+            return {
+                "ln1": jnp.ones((cfg.d_model,), dt),
+                "ssm": ssm_mod.init_ssm(k, cfg.ssm_dims(), dt),
+            }
+        nseg, per = cfg.n_segments, cfg.ssm_per_segment
+        p["layers"] = jax.vmap(
+            lambda k: _stack_init(k, per, one_ssm)
+        )(jax.random.split(ks[2], nseg))            # (nseg, per, ...)
+        k1, k2 = jax.random.split(ks[3])
+        p["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "attn": L.init_attn(k1, cfg.attn_dims(), dt),
+            "mlp": L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dt),
+        }
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        # frontend stub: projection applied to precomputed patch embeddings
+        p["patch_proj"] = jax.random.normal(
+            ks[4], (cfg.d_model, cfg.d_model), dt) * 0.02
+    return p
+
+
+# --------------------------------------------------------------------------
+# layer bodies
+# --------------------------------------------------------------------------
+
+def _sp_out(y):
+    """Constrain a block-branch output to the sequence-parallel layout so the
+    TP partial-sum lands as a reduce-scatter, not all-reduce+slice
+    (EXPERIMENTS.md §Perf cell B)."""
+    return shard.constrain(y, ("pod", "data"), "model", None)
+
+
+def _attn_block(lp, x, cfg: LMConfig, positions, causal=True):
+    att = L.attn_forward(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                         cfg.attn_dims(), positions, causal=causal)
+    h = x + _sp_out(att)
+    z = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        return h + _sp_out(moe_mod.moe_forward(lp["moe"], z, cfg.top_k,
+                                               cfg.capacity_factor))
+    return h + _sp_out(L.swiglu(lp["mlp"], z))
+
+
+def _ssm_block(lp, x, cfg: LMConfig):
+    return x + ssm_mod.ssm_forward(
+        lp["ssm"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg.ssm_dims(),
+        chunk=cfg.ssm_chunk)
+
+
+def _maybe_remat(fn, cfg: LMConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill compute)
+# --------------------------------------------------------------------------
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array,
+            patch_embeds: jax.Array | None = None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, vocab).  For vlm, ``patch_embeds``
+    (B, n_patches, d) are projected and prepended (their logits are produced
+    too; the loss masks them)."""
+    return _hidden(params, cfg, tokens, patch_embeds) @ params["unembed"]
+
+
+def _hidden(params: Params, cfg: LMConfig, tokens: jax.Array,
+            patch_embeds: jax.Array | None = None) -> jax.Array:
+    """Backbone without the unembed projection (shared by loss / prefill)."""
+    x = params["embed"][tokens]
+    if cfg.family == "vlm":
+        assert patch_embeds is not None
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def _sp(h):
+        # Sequence-parallel carry sharding (Megatron SP analogue): the layer
+        # scan saves its carry per layer for the backward; sharding the
+        # sequence axis over "model" cuts that saved-activation footprint by
+        # |model| (XLA inserts the all-gather at layer entry / reduce-scatter
+        # at exit).  No-op when S is indivisible or no mesh is ambient.
+        return shard.constrain(h, ("pod", "data"), "model", None)
+
+    x = _sp(x)
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, lp):
+            return _sp(_maybe_remat(
+                lambda hh: _attn_block(lp, hh, cfg, positions), cfg)(h)), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            return _sp(_maybe_remat(
+                lambda hh: _ssm_block(lp, hh, cfg), cfg)(h)), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def seg_body(h, seg_lp):
+            def inner(hh, lp):
+                return _sp(_ssm_block(lp, hh, cfg)), None
+            h, _ = jax.lax.scan(inner, h, seg_lp)
+            h = _sp(_maybe_remat(
+                lambda hh: _attn_block(shared, hh, cfg, positions), cfg)(h))
+            return h, None
+
+        x, _ = jax.lax.scan(seg_body, x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def prefill_last_logits(params: Params, cfg: LMConfig, tokens: jax.Array,
+                        patch_embeds: jax.Array | None = None) -> jax.Array:
+    """Inference-prefill step: full-sequence backbone compute, logits for the
+    LAST position only (the serving runtime owns the KV-cache export; the
+    dominant cost — the backbone — is what this lowers)."""
+    x = _hidden(params, cfg, tokens, patch_embeds)
+    return x[:, -1, :] @ params["unembed"]
+
+
+LOSS_CHUNK = 1024  # sequence chunk for the cross-entropy (bounds (B,c,V) temp)
+
+
+def lm_loss(params: Params, cfg: LMConfig, tokens: jax.Array,
+            targets: jax.Array, patch_embeds: jax.Array | None = None) -> jax.Array:
+    x = _hidden(params, cfg, tokens, patch_embeds)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_patches:, :]
+    b, s, d = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def body(tot, xs):
+        xc, tc = xs                                  # (B, c, d), (B, c)
+        logits = (xc @ params["unembed"]).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(ll), None
+
+    xcs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tcs = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    # Remat per chunk: (B, chunk, V) logits are recomputed in the backward.
+    tot, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                          (xcs, tcs))
+    return -tot / (b * s)
+
+
+# --------------------------------------------------------------------------
+# decode path (serve_step)
+# --------------------------------------------------------------------------
+
+def init_decode_caches(cfg: LMConfig, batch: int, max_seq: int) -> Params:
+    """Static-shape decode state: KV caches for attention layers, (h, conv)
+    state for SSM layers."""
+    dt = cfg.dtype
+    hd, kv = cfg.hd, cfg.n_kv
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.kv_quant:
+            return {
+                "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), jnp.int8),
+                "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), jnp.int8),
+                "k_scale": jnp.zeros((cfg.n_layers, batch, max_seq), jnp.float32),
+                "v_scale": jnp.zeros((cfg.n_layers, batch, max_seq), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dt),
+        }
+    sd = cfg.ssm_dims()
+    if cfg.family == "ssm":
+        return {
+            "h": jnp.zeros((cfg.n_layers, batch, sd.n_heads, sd.headdim,
+                            sd.d_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, sd.conv_width - 1,
+                               sd.d_conv_ch), dt),
+        }
+    if cfg.family == "hybrid":
+        nseg, per = cfg.n_segments, cfg.ssm_per_segment
+        return {
+            "h": jnp.zeros((nseg, per, batch, sd.n_heads, sd.headdim,
+                            sd.d_state), jnp.float32),
+            "conv": jnp.zeros((nseg, per, batch, sd.conv_width - 1,
+                               sd.d_conv_ch), dt),
+            # shared attention block: one cache per segment invocation
+            "k": jnp.zeros((nseg, batch, max_seq, kv, hd), dt),
+            "v": jnp.zeros((nseg, batch, max_seq, kv, hd), dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: Params, cfg: LMConfig, token: jax.Array,
+                caches: Params, pos: jax.Array):
+    """token (B,) -> (logits (B, vocab), new caches).  pos (B,) is the index
+    the new token occupies (caches valid strictly before it)."""
+    x = params["embed"][token][:, None, :]           # (B, 1, d)
+    b = x.shape[0]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        # KV caches ride the scan CARRY with dynamic-index updates so XLA can
+        # alias the (donated) cache buffers in place; passing them as scan
+        # xs/ys materializes a full-cache copy for the stacked outputs.
+        quant = cfg.kv_quant
+
+        def body(carry, lp):
+            if quant:
+                h, ck_all, cv_all, ks_all, vs_all, i = carry
+                ck_q = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+                cv_q = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+                ks = jax.lax.dynamic_index_in_dim(ks_all, i, 0, keepdims=False)
+                vs = jax.lax.dynamic_index_in_dim(vs_all, i, 0, keepdims=False)
+                # dequantize per position (on TPU a fused kernel dequantizes
+                # in registers; the dry-run lowers the jnp form)
+                ck = (ck_q.astype(cfg.dtype)
+                      * ks[..., None, None].astype(cfg.dtype))
+                cv = (cv_q.astype(cfg.dtype)
+                      * vs[..., None, None].astype(cfg.dtype))
+            else:
+                h, ck_all, cv_all, i = carry
+                ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            z = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            att, (nk, nv) = L.attn_decode(lp["attn"], z, cfg.attn_dims(),
+                                          ck, cv, pos)
+            h = h + att
+            z2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                h = h + moe_mod.moe_forward(lp["moe"], z2, cfg.top_k,
+                                            cfg.capacity_factor)
+            else:
+                h = h + L.swiglu(lp["mlp"], z2)
+            if quant:
+                # quantize ONLY the new position back into the int8 cache
+                b_idx = jnp.arange(h.shape[0], dtype=jnp.int32)
+                new_k = nk[b_idx, pos]                     # (B, kv, hd)
+                new_v = nv[b_idx, pos]
+                sk = jnp.max(jnp.abs(new_k.astype(jnp.float32)),
+                             axis=(-2, -1)) / 127.0 + 1e-9
+                sv = jnp.max(jnp.abs(new_v.astype(jnp.float32)),
+                             axis=(-2, -1)) / 127.0 + 1e-9
+                qk = jnp.clip(jnp.round(new_k.astype(jnp.float32)
+                                        / sk[:, None, None]), -127, 127
+                              ).astype(jnp.int8)
+                qv = jnp.clip(jnp.round(new_v.astype(jnp.float32)
+                                        / sv[:, None, None]), -127, 127
+                              ).astype(jnp.int8)
+                ck_q = ck_q.at[b_idx, pos].set(qk)
+                cv_q = cv_q.at[b_idx, pos].set(qv)
+                ks = ks.at[b_idx, pos].set(sk)
+                vs = vs.at[b_idx, pos].set(sv)
+                ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck_q, i, 0)
+                cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv_q, i, 0)
+                ks_all = jax.lax.dynamic_update_index_in_dim(ks_all, ks, i, 0)
+                vs_all = jax.lax.dynamic_update_index_in_dim(vs_all, vs, i, 0)
+                return (h, ck_all, cv_all, ks_all, vs_all, i + 1), None
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, nk, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, nv, i, 0)
+            return (h, ck_all, cv_all, i + 1), None
+
+        if quant:
+            carry0 = (x, caches["k"], caches["v"], caches["k_scale"],
+                      caches["v_scale"], jnp.int32(0))
+            (x, nk, nv, nks, nvs, _), _ = jax.lax.scan(body, carry0,
+                                                       params["layers"])
+            new_caches = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+        else:
+            carry0 = (x, caches["k"], caches["v"], jnp.int32(0))
+            (x, nk, nv, _), _ = jax.lax.scan(body, carry0, params["layers"])
+            new_caches = {"k": nk, "v": nv}
+    elif cfg.family == "ssm":
+        def body(h, lp_cache):
+            lp, hs, conv = lp_cache
+            z = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            y, (nh, nconv) = ssm_mod.ssm_decode(lp["ssm"], z, cfg.ssm_dims(),
+                                                hs, conv)
+            return h + y, (nh, nconv)
+
+        x, (nh, nconv) = jax.lax.scan(
+            body, x, (params["layers"], caches["h"], caches["conv"]))
+        new_caches = {"h": nh, "conv": nconv}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def seg_body(carry, xs):
+            h, ck_all, cv_all, i = carry
+            seg_lp, hs, conv = xs
+
+            def inner(hh, ys):
+                lp, hs1, conv1 = ys
+                z = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+                y, (nh1, nconv1) = ssm_mod.ssm_decode(
+                    lp["ssm"], z, cfg.ssm_dims(), hs1, conv1)
+                return hh + y, (nh1, nconv1)
+
+            h, (nh, nconv) = jax.lax.scan(inner, h, (seg_lp, hs, conv))
+            ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+            z = L.rms_norm(h, shared["ln1"], cfg.norm_eps)
+            att, (nk, nv) = L.attn_decode(shared["attn"], z, cfg.attn_dims(),
+                                          ck, cv, pos)
+            h = h + att
+            z2 = L.rms_norm(h, shared["ln2"], cfg.norm_eps)
+            h = h + L.swiglu(shared["mlp"], z2)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, nk, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, nv, i, 0)
+            return (h, ck_all, cv_all, i + 1), (nh, nconv)
+
+        carry0 = (x, caches["k"], caches["v"], jnp.int32(0))
+        (x, nk, nv, _), (nh, nconv) = jax.lax.scan(
+            seg_body, carry0,
+            (params["layers"], caches["h"], caches["conv"]))
+        new_caches = {"h": nh, "conv": nconv, "k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["unembed"])[:, 0, :]
+    return logits, new_caches

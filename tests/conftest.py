@@ -1,0 +1,13 @@
+import os
+
+# Tests and benches see the single real CPU device; ONLY launch/dryrun.py sets
+# the 512-placeholder-device flag (see system design).  Keep x64 off; fp32.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

