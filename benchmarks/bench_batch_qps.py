@@ -1,0 +1,147 @@
+"""Batched-engine QPS: search_batch vs sequential single-query calls.
+
+Acceptance benchmark for the batched fused-kernel search engine: B=32
+queries through ``search_batch`` must reach >= 3x the QPS of 32 sequential
+single-query calls at identical settings, with the same top-k id sets.
+Emits CSV rows and writes ``BENCH_batch_qps.json`` next to the repo root
+(override with REPRO_BENCH_OUT).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+from repro.index import ivf as ivf_mod
+from repro.index import search
+
+B = int(os.environ.get("REPRO_BENCH_B", 32))
+K = int(os.environ.get("REPRO_BENCH_K", 5000))
+N_PROBE = int(os.environ.get("REPRO_BENCH_NPROBE", 64))
+
+
+def _queries(b: int) -> jax.Array:
+    x, _ = common.corpus()
+    rng = np.random.default_rng(7)
+    return jnp.asarray(synthetic.queries_from(rng, np.asarray(x), b))
+
+
+def _time_sequential(fn, qs) -> float:
+    r = fn(qs[0])
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for q in qs:
+        r = fn(q)
+    jax.block_until_ready(r)
+    return time.perf_counter() - t0
+
+
+def _time_batch(fn, qs, repeats: int = 3) -> float:
+    r = fn(qs)
+    jax.block_until_ready(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(qs)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _id_set_match(batch_ids: np.ndarray, single_ids: list[np.ndarray]) -> float:
+    """Fraction of queries whose top-k id SET matches exactly.  (Elementwise
+    order can differ between the paths only where exact distances tie within
+    float accumulation error.)"""
+    hits = 0
+    for bi, si in enumerate(single_ids):
+        hits += set(batch_ids[bi].tolist()) == set(si.tolist())
+    return hits / len(single_ids)
+
+
+def run(b: int = B, k: int = K, n_probe: int = N_PROBE):
+    x, _ = common.corpus()
+    qs = _queries(b)
+    n_cand = min(8 * k, common.N)
+    results = []
+
+    pq_index = common.pq_index()
+    rq_index = common.rq_index()
+    ivf_index = pq_index.ivf       # reuse the routing index for plain IVF
+    layout = ivf_mod.flat_layout(ivf_index)
+    rq_layout = ivf_mod.flat_layout(rq_index.ivf)  # its OWN cluster layout
+
+    methods = {
+        "ivf_bbc": (
+            lambda q: search.ivf_search(ivf_index, x, q, k=k,
+                                        n_probe=n_probe, use_bbc=True),
+            lambda Q: search.ivf_search_batch(ivf_index, x, Q, layout, k=k,
+                                              n_probe=n_probe, use_bbc=True),
+        ),
+        "ivfpq_bbc": (
+            lambda q: search.ivf_pq_search(pq_index, q, k=k, n_probe=n_probe,
+                                           n_cand=n_cand, use_bbc=True),
+            lambda Q: search.ivf_pq_search_batch(pq_index, Q, layout, k=k,
+                                                 n_probe=n_probe,
+                                                 n_cand=n_cand, use_bbc=True),
+        ),
+        "ivfrabitq_bbc": (
+            lambda q: search.ivf_rabitq_search(rq_index, q, k=k,
+                                               n_probe=n_probe, use_bbc=True),
+            lambda Q: search.ivf_rabitq_search_batch(rq_index, Q, rq_layout,
+                                                     k=k, n_probe=n_probe,
+                                                     use_bbc=True),
+        ),
+    }
+
+    for name, (single, batch) in methods.items():
+        t_seq = _time_sequential(single, qs)
+        t_batch = _time_batch(batch, qs)
+        speedup = t_seq / t_batch
+        qps_seq = b / t_seq
+        qps_batch = b / t_batch
+        # parity: batch ids vs the sequential per-query ids
+        br = batch(qs)
+        singles = [np.asarray(single(qs[i]).ids) for i in range(b)]
+        match = _id_set_match(np.asarray(br.ids), singles)
+        common.emit(
+            f"batch_qps/{name}/B{b}/k{k}/np{n_probe}",
+            t_batch / b * 1e6,
+            f"speedup={speedup:.2f}x;qps_batch={qps_batch:.2f};"
+            f"qps_seq={qps_seq:.2f};idset_match={match:.3f}")
+        results.append(dict(
+            method=name, B=b, k=k, n_probe=n_probe,
+            seconds_sequential=round(t_seq, 4),
+            seconds_batch=round(t_batch, 4),
+            qps_sequential=round(qps_seq, 2),
+            qps_batch=round(qps_batch, 2),
+            speedup=round(speedup, 2),
+            topk_idset_match=round(match, 4),
+        ))
+
+    out_path = os.environ.get("REPRO_BENCH_OUT", "BENCH_batch_qps.json")
+    payload = {
+        "bench": "batch_qps",
+        "corpus": {"n": common.N, "d": common.D},
+        "config": {"B": b, "k": k, "n_probe": n_probe, "n_cand": n_cand},
+        "platform": jax.devices()[0].platform,
+        "results": results,
+        "acceptance": {
+            "min_speedup": min(r["speedup"] for r in results),
+            "target": 3.0,
+            "pass": all(r["speedup"] >= 3.0 for r in results),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,5 +1,10 @@
 """Exp-3 analogue: isolated top-k collector latency (RB vs Heap/Sorted/Lazy
-analogues) on streams of estimated distances, k sweep + structural stats."""
+analogues) on streams of estimated distances, k sweep + structural stats.
+
+Two sections: the single-query contenders (including the tile-serial
+"streamed" variants the paper benches, vs the single-pass rewrites the
+search hot path now uses), and the batched collectors over a (B, n) stream —
+per-query amortized latency of one batched collection vs B single ones."""
 from __future__ import annotations
 
 import functools
@@ -12,7 +17,7 @@ from benchmarks import common
 from repro.core import collector as col
 
 
-def run(ks=(500, 2000, 8000), n_tiles=64, tile=512):
+def run(ks=(500, 2000, 8000), n_tiles=64, tile=512, batch=16):
     rng = np.random.default_rng(1)
     d = 64
     q = rng.standard_normal(d).astype(np.float32)
@@ -41,6 +46,29 @@ def run(ks=(500, 2000, 8000), n_tiles=64, tile=512):
         if ("bbc", k) in out and ("topk", k) in out:
             common.emit(f"exp3/ratio_topk_over_bbc/k{k}", 0.0,
                         f"ratio={out[('topk', k)]/out[('bbc', k)]:.2f}")
+
+    # ---- batched collectors: one (B, n) stream, per-query amortization ----
+    qb = rng.standard_normal((batch, d)).astype(np.float32)
+    db = np.linalg.norm(xs[None, :, :] - qb[:, None, :], axis=-1)
+    dists_b = jnp.asarray(db)
+    ids_b = jnp.arange(n, dtype=jnp.int32)
+    valid_b = jnp.ones((batch, n), bool)
+    for k in ks:
+        if k >= n:
+            continue
+        jb = jax.jit(functools.partial(col.bbc_collect_batch, k=k))
+        tb = common.timeit(jb, dists_b, ids_b, valid_b)
+        jt = jax.jit(functools.partial(col.topk_collect_batch, k=k))
+        tt = common.timeit(jt, dists_b, ids_b, valid_b)
+        t1 = out.get(("bbc", k))
+        amort = tb / batch
+        common.emit(
+            f"exp3/bbc_batch/B{batch}/k{k}", amort * 1e6,
+            f"batch_total_us={tb * 1e6:.1f};"
+            f"vs_single={'%.2f' % (t1 / amort) if t1 else 'n/a'}x")
+        common.emit(f"exp3/topk_batch/B{batch}/k{k}", tt / batch * 1e6,
+                    f"batch_total_us={tt * 1e6:.1f}")
+        out[("bbc_batch", k)] = amort
     return out
 
 

@@ -99,6 +99,18 @@ def build_codebook(
     # One partial sort over the sample (paper: "performed only once,
     # its computational cost is negligible").
     topk = -jax.lax.top_k(-sample_dists, k)[0]
+    return build_codebook_from_topk(topk, m, n_ew)
+
+
+def build_codebook_from_topk(
+    topk: jax.Array,
+    m: int,
+    n_ew: int = 256,
+) -> BucketCodebook:
+    """Codebook from an ALREADY-SELECTED ascending local top-k of sampled
+    distances.  Split out of ``build_codebook`` so callers that need the
+    top-k values for other purposes (e.g. order-statistic threshold buckets
+    in the batched planner) run the selection once."""
     d_min = topk[0]
     d_max = topk[-1]
     # Guard degenerate ranges (all-equal distances / tiny samples) and keep a
@@ -106,11 +118,17 @@ def build_codebook(
     # necessarily farther than the true top-k distance") makes the range safe
     # when sampling, but when the sample IS the population the k-th item sits
     # exactly on the edge and front-end rounding could spill it to overflow.
+    k = topk.shape[0]
     span = jnp.maximum(d_max - d_min, 1e-6) * 1.02
     delta = span / n_ew
-    # Equal-depth edges from quantiles of the local top-k.
-    qs = jnp.linspace(0.0, 1.0, m + 1)
-    edges = jnp.quantile(topk, qs)
+    # Equal-depth edges from quantiles of the local top-k.  ``topk`` is
+    # sorted ascending, so the (linear-interpolation) quantiles are direct
+    # index arithmetic — no second sort.
+    pos = jnp.linspace(0.0, k - 1.0, m + 1)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, k - 1)
+    frac = (pos - lo).astype(topk.dtype)
+    edges = topk[lo] + (topk[hi] - topk[lo]) * frac
     # Strictly increasing edges so searchsorted is well defined under ties.
     eps = span * 1e-7
     edges = edges + eps * jnp.arange(m + 1, dtype=edges.dtype)

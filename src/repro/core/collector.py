@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import buffer as rb
+from repro.kernels import ops
 
 INF = jnp.inf
 
@@ -54,10 +55,38 @@ def bbc_collect(
 ) -> tuple[jax.Array, jax.Array]:
     """Result-buffer collection: O(m) cross-tile state + one final selection.
 
+    Single-pass formulation: one vectorized bucketize over the whole stream,
+    one histogram, one in-threshold-bucket selection — no serialized
+    ``lax.scan`` and no per-tile selection (the cross-tile state is exactly
+    the (m+1,) histogram, as in the paper; see bucket_hist.py for the kernel
+    that materializes this pass on TPU).
+
     The codebook is built from the first ``sample_tiles`` tiles (paper: the
     5-10 nearest clusters — IVF scans clusters nearest-first, so the prefix is
     the distance-skewed sample the paper wants).
     """
+    n_tiles, tile = s.dists.shape
+    st = min(sample_tiles, n_tiles)
+    sample = jnp.where(s.valid[:st], s.dists[:st], INF).reshape(-1)
+    cb = rb.build_codebook(sample, k=min(k, sample.shape[0]), m=m, n_ew=n_ew)
+    flat = _flatten(s)
+    bucket_ids = rb.bucketize(cb, flat.dists)
+    hist = rb.histogram(bucket_ids, m, flat.valid)
+    return rb.collect(cb, flat.dists, flat.ids, bucket_ids, k, flat.valid,
+                      hist=hist)
+
+
+def bbc_collect_streamed(
+    s: StreamInput,
+    k: int,
+    m: int = 128,
+    sample_tiles: int = 4,
+    n_ew: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Tile-serial variant of ``bbc_collect`` (the paper's CPU streaming
+    formulation: per-tile threshold update + relaxed-threshold masking).
+    Kept as an Exp-3 contender to quantify what the single-pass rewrite
+    saves; results are identical."""
     n_tiles, tile = s.dists.shape
     st = min(sample_tiles, n_tiles)
     sample = jnp.where(s.valid[:st], s.dists[:st], INF).reshape(-1)
@@ -77,7 +106,8 @@ def bbc_collect(
 
     flat = _flatten(s)
     bucket_ids = rb.bucketize(cb, flat.dists)
-    return rb.collect(cb, flat.dists, flat.ids, bucket_ids, k, flat.valid, hist=None)
+    return rb.collect(cb, flat.dists, flat.ids, bucket_ids, k, flat.valid,
+                      hist=None)
 
 
 # --------------------------------------------------------------------------
@@ -85,6 +115,18 @@ def bbc_collect(
 # --------------------------------------------------------------------------
 
 def topk_collect(s: StreamInput, k: int) -> tuple[jax.Array, jax.Array]:
+    """Single-pass exact top-k: one flat selection over the whole stream.
+
+    Replaces the tile-serial scan + per-tile (k + tile)-wide ``top_k`` on the
+    search hot path; ``topk_collect_streamed`` keeps the old structure as the
+    Exp-3 "Heap" contender."""
+    flat = _flatten(s)
+    d = jnp.where(flat.valid, flat.dists, INF)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, flat.ids[idx]
+
+
+def topk_collect_streamed(s: StreamInput, k: int) -> tuple[jax.Array, jax.Array]:
     """"Heap" analogue: carry the running exact top-k across tiles."""
 
     def step(carry, xs):
@@ -169,9 +211,96 @@ def lazy_collect(
     return -neg, bi[idx]
 
 
+# --------------------------------------------------------------------------
+# Batched (multi-query) collectors
+# --------------------------------------------------------------------------
+
+def bbc_collect_batch(
+    dists: jax.Array,        # (B, n) estimated distances
+    ids: jax.Array,          # (n,) shared candidate ids
+    valid: jax.Array,        # (B, n) per-query validity
+    k: int,
+    m: int = 128,
+    sample: jax.Array | None = None,        # (B, w) codebook sample, or None
+    sample_valid: jax.Array | None = None,  # (B, w)
+    n_ew: int = 256,
+    slack_buckets: int = 2,
+    backend: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Bucket collection for a query batch over a shared candidate stream.
+
+    Per-query codebooks are built from ``sample`` (or the full masked row);
+    bucketize + histogram run through the batched kernel path
+    (``ops.bucket_hist_batch``), and the final in-threshold-bucket selection
+    is one batched ``top_k`` over a (B, k + slack) compacted buffer.  The
+    exactness escape hatch (overflow / fewer than k in-range) is a single
+    batch-level ``lax.cond``, so the full-width selection compiles but only
+    runs when some query actually overflows.
+    """
+    b, n = dists.shape
+    if sample is None:
+        sample, sample_valid = dists, valid
+    k_cb = min(k, sample.shape[1])
+    cbs = jax.vmap(
+        lambda sd, sv: rb.build_codebook(sd, k=k_cb, m=m, n_ew=n_ew, valid=sv)
+    )(sample, sample_valid)
+    dv = jnp.where(valid, dists, INF)
+    bucket, hist = ops.bucket_hist_batch(
+        dv, valid, cbs.d_min, cbs.delta, cbs.ew_map, m, backend=backend)
+    return collect_batch(dists, ids, valid, bucket, hist, k, m,
+                         slack_buckets=slack_buckets)
+
+
+def collect_batch(
+    dists: jax.Array,    # (B, n)
+    ids: jax.Array,      # (n,) shared candidate ids
+    valid: jax.Array,    # (B, n)
+    bucket: jax.Array,   # (B, n) bucket ids
+    hist: jax.Array,     # (B, m+1)
+    k: int,
+    m: int,
+    slack_buckets: int = 2,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched Alg. 1 Collect over precomputed bucket ids + histograms."""
+    b, n = dists.shape
+    tau, _ = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(hist, k)
+    survive = valid & (bucket <= tau[:, None])
+    budget = rb._collect_budget(k, n, slack_buckets, m)
+    idx, ok = jax.vmap(rb.compact_mask, in_axes=(0, None))(survive, budget)
+    safe = jnp.minimum(idx, n - 1)
+    cd = jnp.where(ok, jnp.take_along_axis(dists, safe, axis=1), INF)
+    ci = jnp.where(ok, ids[safe], -1)
+
+    def fast(_):
+        neg, order = jax.lax.top_k(-cd, k)
+        return -neg, jnp.take_along_axis(ci, order, axis=1)
+
+    def fallback(_):
+        d = jnp.where(valid, dists, INF)
+        neg, order = jax.lax.top_k(-d, k)
+        return -neg, jnp.where(jnp.isfinite(-neg), ids[order], -1)
+
+    overflowed = jnp.any((tau >= m) | (jnp.sum(survive, axis=1) > budget))
+    return jax.lax.cond(overflowed, fallback, fast, None)
+
+
+def topk_collect_batch(
+    dists: jax.Array, ids: jax.Array, valid: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Batched flat top-k over the shared stream (heap-analogue baseline).
+
+    Under-filled slots (fewer than k live lanes) come back as (+inf, -1),
+    matching the padded-table single-query collectors."""
+    d = jnp.where(valid, dists, INF)
+    neg, order = jax.lax.top_k(-d, k)
+    return -neg, jnp.where(jnp.isfinite(-neg), ids[order], -1)
+
+
 COLLECTORS = {
     "bbc": bbc_collect,
-    "topk": topk_collect,
+    "bbc_streamed": bbc_collect_streamed,
+    "topk": topk_collect_streamed,
+    "topk_flat": topk_collect,
     "sorted": sorted_collect,
     "lazy": lazy_collect,
 }
@@ -181,9 +310,11 @@ def collector_stats(name: str, k: int, m: int, n: int, tile: int) -> dict:
     """Structural cost model (bytes of cross-tile state / selection width).
 
     These are the quantities that determine TPU cost independently of the CPU
-    wall-clock this container can measure.
+    wall-clock this container can measure.  ``topk`` models the streaming
+    heap analogue (the paper's contender); ``topk_flat`` is the single-pass
+    flat selection the search hot path uses when not collecting via buckets.
     """
-    if name == "bbc":
+    if name in ("bbc", "bbc_streamed"):
         return {
             "cross_tile_state_bytes": 4 * (m + 1),
             "final_selection_width": min(n, k + 2 * max(k // m, 1) + 64),
@@ -194,6 +325,12 @@ def collector_stats(name: str, k: int, m: int, n: int, tile: int) -> dict:
             "cross_tile_state_bytes": 8 * k,
             "final_selection_width": k,
             "per_tile_select_width": k + tile,
+        }
+    if name == "topk_flat":
+        return {
+            "cross_tile_state_bytes": 8 * n,
+            "final_selection_width": n,
+            "per_tile_select_width": 0,
         }
     if name == "sorted":
         return {

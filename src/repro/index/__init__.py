@@ -1,2 +1,3 @@
-"""ANN index substrate: IVF coarse index + PQ / RaBitQ quantizers + searchers."""
-from repro.index import flat, ivf, kmeans, pq, rabitq, search  # noqa: F401
+"""ANN index substrate: IVF coarse index + PQ / RaBitQ quantizers + searchers
+(single-query and natively batched) + the batched serving engine."""
+from repro.index import engine, flat, ivf, kmeans, pq, rabitq, search  # noqa: F401

@@ -1,0 +1,96 @@
+"""Batched fused-kernel search engine: the serving-side entry point.
+
+Wraps a built index (IVF / IVF+PQ / IVF+RaBitQ) together with the compact
+``ivf.FlatLayout`` candidate stream and static search hyper-parameters, and
+serves query batches through the natively batched searchers in
+``index.search`` (Pallas kernels on TPU, their jnp mirrors on CPU).
+
+    eng = engine.SearchEngine.build(index, k=5000, n_probe=64, use_bbc=True)
+    res = eng.search(qs)            # (B, d) -> SearchResult with (B, k) rows
+    res = eng.search(q)             # (d,)   -> single-query SearchResult
+
+The layout (and the one-time host-side packing it needs) is computed once at
+engine construction, so steady-state serving is one jit-compiled call per
+batch shape.  The engine is deliberately thin: all numerics live in
+``search.py`` so the batched functions stay directly testable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+
+from repro.index import ivf as ivf_mod
+from repro.index import search as search_mod
+
+
+@dataclass(frozen=True)
+class SearchEngine:
+    index: Any                       # IVFIndex | PQIndex | RabitqIndex
+    layout: ivf_mod.FlatLayout
+    kind: str                        # "ivf" | "ivfpq" | "ivfrabitq"
+    k: int
+    n_probe: int
+    n_cand: int | None = None
+    use_bbc: bool = True
+    m: int = 128
+    backend: str | None = None
+    vectors: jax.Array | None = None  # required for kind == "ivf"
+
+    @staticmethod
+    def build(index, k: int, n_probe: int, n_cand: int | None = None,
+              use_bbc: bool = True, m: int = 128,
+              backend: str | None = None, vectors=None) -> "SearchEngine":
+        if isinstance(index, search_mod.PQIndex):
+            kind, ivf = "ivfpq", index.ivf
+            if n_cand is None:
+                n_cand = min(8 * k, int(index.vectors.shape[0]))
+        elif isinstance(index, search_mod.RabitqIndex):
+            kind, ivf = "ivfrabitq", index.ivf
+        elif isinstance(index, ivf_mod.IVFIndex):
+            kind, ivf = "ivf", index
+            if vectors is None:
+                raise ValueError("kind 'ivf' needs the corpus vectors")
+        else:
+            raise TypeError(f"unsupported index type: {type(index)!r}")
+        layout = ivf_mod.flat_layout(ivf)
+        return SearchEngine(index=index, layout=layout, kind=kind, k=k,
+                            n_probe=n_probe, n_cand=n_cand, use_bbc=use_bbc,
+                            m=m, backend=backend, vectors=vectors)
+
+    # -- query-time ---------------------------------------------------------
+
+    def search(self, qs: jax.Array) -> search_mod.SearchResult:
+        """(B, d) batch or (d,) single query -> SearchResult."""
+        if qs.ndim == 1:
+            return self.search_one(qs)
+        return self.search_batch(qs)
+
+    def search_batch(self, qs: jax.Array) -> search_mod.SearchResult:
+        if self.kind == "ivfpq":
+            return search_mod.ivf_pq_search_batch(
+                self.index, qs, self.layout, k=self.k, n_probe=self.n_probe,
+                n_cand=self.n_cand, use_bbc=self.use_bbc, m=self.m,
+                backend=self.backend)
+        if self.kind == "ivfrabitq":
+            return search_mod.ivf_rabitq_search_batch(
+                self.index, qs, self.layout, k=self.k, n_probe=self.n_probe,
+                use_bbc=self.use_bbc, m=self.m, backend=self.backend)
+        return search_mod.ivf_search_batch(
+            self.index, self.vectors, qs, self.layout, k=self.k,
+            n_probe=self.n_probe, use_bbc=self.use_bbc, m=self.m,
+            backend=self.backend)
+
+    def search_one(self, q: jax.Array) -> search_mod.SearchResult:
+        if self.kind == "ivfpq":
+            return search_mod.ivf_pq_search(
+                self.index, q, k=self.k, n_probe=self.n_probe,
+                n_cand=self.n_cand, use_bbc=self.use_bbc, m=self.m)
+        if self.kind == "ivfrabitq":
+            return search_mod.ivf_rabitq_search(
+                self.index, q, k=self.k, n_probe=self.n_probe,
+                use_bbc=self.use_bbc, m=self.m)
+        return search_mod.ivf_search(
+            self.index, self.vectors, q, k=self.k, n_probe=self.n_probe,
+            use_bbc=self.use_bbc, m=self.m)

@@ -58,6 +58,26 @@ def route(index: IVFIndex, q: jax.Array, n_probe: int) -> jax.Array:
     return jax.lax.top_k(-d2, n_probe)[1].astype(jnp.int32)
 
 
+def route_batch_d2(index: IVFIndex, qs: jax.Array,
+                   n_probe: int) -> tuple[jax.Array, jax.Array]:
+    """(B, n_probe) nearest-first probed clusters + the (B, C) squared
+    query-centroid distances — one shared routing pass.
+
+    Uses the same per-query distance expression as ``route`` (broadcast
+    difference, not the norm-identity matmul) so the probed sets match the
+    single-query path bit-for-bit; the centroid table is small enough that
+    the (B, C, d) broadcast is cheap.  ``d2`` is returned so estimators that
+    need the query-centroid norms (RaBitQ) don't rebuild the broadcast.
+    """
+    d2 = jnp.sum((index.centroids[None, :, :] - qs[:, None, :]) ** 2, axis=-1)
+    return jax.lax.top_k(-d2, n_probe)[1].astype(jnp.int32), d2
+
+
+def route_batch(index: IVFIndex, qs: jax.Array, n_probe: int) -> jax.Array:
+    """(B, n_probe) probed clusters (see ``route_batch_d2``)."""
+    return route_batch_d2(index, qs, n_probe)[0]
+
+
 def gather_candidates(
     index: IVFIndex, probed: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
@@ -65,6 +85,94 @@ def gather_candidates(
     ids = index.member_ids[probed]
     valid = index.member_valid[probed]
     return ids, valid
+
+
+# --------------------------------------------------------------------------
+# Compact flat layout (batched search substrate)
+# --------------------------------------------------------------------------
+
+class FlatLayout(NamedTuple):
+    """Corpus ids re-ordered by cluster, with zero per-cluster padding.
+
+    The padded (n_clusters, cap) member table wastes (cap - |cluster|) lanes
+    per probed cluster — on skewed corpora that is most of the scan.  The
+    flat layout is the batched-search substrate: the candidate stream is
+    gathered ONCE per batch in cluster order, and each query selects its
+    probed lanes with a boolean mask (``probe_mask``).  Only the stream tail
+    is padded (to the lane width).
+
+    ``order``      : (n_flat,) int32 corpus ids, cluster-major.
+    ``cluster_of`` : (n_flat,) int32 owning cluster; ``n_clusters`` on the
+                     padding tail (maps to the always-False probe-mask slot).
+    ``offsets``    : (n_clusters + 1,) int32 start offset of each cluster.
+    ``valid``      : (n_flat,) bool, False on the padding tail.
+    """
+
+    order: jax.Array
+    cluster_of: jax.Array
+    offsets: jax.Array
+    valid: jax.Array
+
+    @property
+    def n_flat(self) -> int:
+        return self.order.shape[0]
+
+
+def flat_layout(index: IVFIndex, lane: int = 128) -> FlatLayout:
+    """Host-side packing of the member table into a FlatLayout (offline)."""
+    ids = np.asarray(index.member_ids)
+    sizes = np.asarray(index.cluster_sizes).astype(np.int64)
+    n_clusters = ids.shape[0]
+    n = int(sizes.sum())
+    n_flat = ((n + lane - 1) // lane) * lane
+    order = np.zeros(n_flat, np.int32)
+    cluster_of = np.full(n_flat, n_clusters, np.int32)
+    offsets = np.zeros(n_clusters + 1, np.int32)
+    pos = 0
+    for c in range(n_clusters):
+        sz = int(sizes[c])
+        offsets[c] = pos
+        order[pos:pos + sz] = ids[c, :sz]
+        cluster_of[pos:pos + sz] = c
+        pos += sz
+    offsets[n_clusters] = pos
+    valid = np.arange(n_flat) < n
+    return FlatLayout(
+        order=jnp.asarray(order),
+        cluster_of=jnp.asarray(cluster_of),
+        offsets=jnp.asarray(offsets),
+        valid=jnp.asarray(valid),
+    )
+
+
+def probe_mask(layout: FlatLayout, probed: jax.Array,
+               n_clusters: int) -> jax.Array:
+    """(B, n_flat) lane mask: lane j is live for query b iff its cluster is
+    in ``probed[b]`` (and j is not stream-tail padding)."""
+    b = probed.shape[0]
+    hit = jnp.zeros((b, n_clusters + 1), bool)
+    hit = hit.at[jnp.arange(b, dtype=jnp.int32)[:, None], probed].set(True)
+    hit = hit.at[:, n_clusters].set(False)   # padding-tail slot stays dead
+    return hit[:, layout.cluster_of] & layout.valid[None, :]
+
+
+def tile_positions(layout: FlatLayout, clusters: jax.Array,
+                   cap: int) -> tuple[jax.Array, jax.Array]:
+    """Stream positions of the members of ``clusters`` (B, t), padded to
+    ``cap`` lanes per cluster.
+
+    Returns (positions (B, t * cap) int32, valid (B, t * cap)).  Used to
+    gather per-query views (codebook samples, per-cluster re-rank tiles)
+    out of batched (B, n_flat) stream quantities.
+    """
+    offs = layout.offsets[clusters]                       # (B, t)
+    sizes = layout.offsets[clusters + 1] - offs           # (B, t)
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    pos = offs[..., None] + lane[None, None, :]           # (B, t, cap)
+    ok = lane[None, None, :] < sizes[..., None]
+    pos = jnp.where(ok, pos, 0)
+    b, t = clusters.shape
+    return pos.reshape(b, t * cap), ok.reshape(b, t * cap)
 
 
 def shard_index(index: IVFIndex, n_shards: int) -> list[IVFIndex]:

@@ -1,10 +1,21 @@
 """End-to-end ANN searchers: IVF / IVF+PQ / IVF+RaBitQ, each ± BBC.
 
-Single-query functions, jit-compiled with static hyper-parameters; batch with
-``jax.vmap`` (small batches — intermediates are O(n_probe * cap)).  All paths
-return ``SearchResult`` with instrumentation counters used by the benchmark
-suite (re-rank counts, second-pass gathers — the TPU analogues of the paper's
-VTune/perf numbers).
+Two families of entry points:
+
+  * Single-query functions (``ivf_search`` & co.), jit-compiled with static
+    hyper-parameters.  Intermediates are O(n_probe * cap) over the padded
+    member table.
+  * Natively batched ``*_batch`` functions: one routing matmul for the whole
+    query batch, ONE shared candidate-stream gather (the compact
+    ``ivf.FlatLayout``, zero per-cluster padding), per-query probe masks, and
+    batched estimate / bucketize / histogram / re-rank matmuls that run
+    through the Pallas kernels on TPU (``kernels.ops.*_batch``) and their
+    jnp mirrors on CPU.  Use these instead of ``jax.vmap`` over the single
+    query functions — vmap replicates the padded gathers per query.
+
+All paths return ``SearchResult`` with instrumentation counters used by the
+benchmark suite (re-rank counts, second-pass gathers — the TPU analogues of
+the paper's VTune/perf numbers); batched paths return per-query (B,) counters.
 
 Method map (paper Table / Fig. 1):
   ivf_search(use_bbc=False)          -> IVF
@@ -29,6 +40,7 @@ from repro.core import rerank
 from repro.index import ivf as ivf_mod
 from repro.index import pq as pq_mod
 from repro.index import rabitq as rq_mod
+from repro.kernels import ops
 
 INF = jnp.inf
 
@@ -334,4 +346,321 @@ def ivf_rabitq_search(
         plan, exact_flat, jnp.where(flat_valid, flat_lb, INF), flat_ids, k,
         est=flat_est)
     n_evals = (n1 + n2).astype(jnp.int32)
+    return SearchResult(res.topk_dists, res.topk_ids, n_evals, n_evals)
+
+
+# --------------------------------------------------------------------------
+# Natively batched searchers (shared candidate stream + batched kernels)
+# --------------------------------------------------------------------------
+
+def _exact_dists_rows(vectors: jax.Array, ids: jax.Array,
+                      qs: jax.Array) -> jax.Array:
+    """Per-query exact distances for (B, w) id rows.  Sequential map keeps
+    the (w, d) gather per query (the batched-gather alternative materializes
+    (B, w, d)); each row uses the same formula as ``_exact_dists`` so values
+    match the single-query path."""
+    return jax.lax.map(lambda a: _exact_dists(vectors, a[0], a[1]), (ids, qs))
+
+
+def _routing(ivf: ivf_mod.IVFIndex, layout: ivf_mod.FlatLayout,
+             qs: jax.Array, n_probe: int):
+    """Shared batch routing: probed clusters, per-query lane masks over the
+    flat stream, and the (B, C) squared query-centroid distances (for
+    estimators that need them, e.g. RaBitQ's norm_q)."""
+    probed, d2 = ivf_mod.route_batch_d2(ivf, qs, n_probe)
+    lane_valid = ivf_mod.probe_mask(layout, probed, ivf.n_clusters)
+    return probed, lane_valid, d2
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_probe", "use_bbc", "m", "backend"))
+def ivf_search_batch(
+    index: ivf_mod.IVFIndex,
+    vectors: jax.Array,
+    qs: jax.Array,                 # (B, d)
+    layout: ivf_mod.FlatLayout,
+    k: int,
+    n_probe: int,
+    use_bbc: bool = False,
+    m: int = 128,
+    backend: str | None = None,
+) -> SearchResult:
+    """Batched IVF (exact distances in-scan): one shared vector-stream gather,
+    one (B, n_flat) distance matmul, per-query bucket collection."""
+    probed, lane_valid, _ = _routing(index, layout, qs, n_probe)
+    stream_vecs = vectors[layout.order]                       # shared gather
+    dists = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
+    dists = jnp.where(lane_valid, dists, INF)
+    if use_bbc and ops.resolve_backend(backend) == "pallas":
+        # Kernel path: O(m) histogram collection (bucket_hist kernel) + one
+        # (k + slack)-wide selection.
+        st = min(4, n_probe)
+        spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], index.cap)
+        sample = jnp.where(sok, jnp.take_along_axis(dists, spos, axis=1), INF)
+        d, i = col.bbc_collect_batch(dists, layout.order, lane_valid, k, m=m,
+                                     sample=sample, sample_valid=sok,
+                                     backend=backend)
+    else:
+        # CPU fallback: XLA's flat top_k beats scatter-based compaction at
+        # these widths; the selected set is identical (bucketize is monotone
+        # in distance, so the bucket collection selects the exact top-k set).
+        d, i = col.topk_collect_batch(dists, layout.order, lane_valid, k)
+    n = jnp.sum(lane_valid, axis=1).astype(jnp.int32)
+    return SearchResult(d, i, n, jnp.zeros_like(n))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_probe", "n_cand", "use_bbc", "m", "backend",
+                     "fused"),
+)
+def ivf_pq_search_batch(
+    index: PQIndex,
+    qs: jax.Array,                 # (B, d)
+    layout: ivf_mod.FlatLayout,
+    k: int,
+    n_probe: int,
+    n_cand: int,
+    use_bbc: bool = False,
+    m: int = 128,
+    backend: str | None = None,
+    fused: bool | None = None,
+) -> SearchResult:
+    """Batched IVF+PQ (±BBC).
+
+    The candidate stream (codes, and vectors for the fused path) is gathered
+    once per batch; ADC runs for every query against the shared stream; the
+    n_cand selection is the batched bucket collection.  With ``fused=True``
+    (default on TPU) the whole estimate+bucketize+hist+early-exact pass is
+    ``ops.fused_scan_batch`` — Alg. 4's early re-ranking happens while the
+    vector tile is VMEM-resident and the second gather pass covers only the
+    stragglers.  With ``fused=False`` (default on CPU, where there is no
+    fusion win to collect) exact distances are computed once for the final
+    selection; results are identical, only the ``n_second_pass`` accounting
+    differs.
+    """
+    if fused is None:
+        fused = ops.on_tpu()
+    ivf = index.ivf
+    b = qs.shape[0]
+    probed, lane_valid, _ = _routing(ivf, layout, qs, n_probe)
+    stream_codes = index.codes[layout.order]                  # shared gather
+    luts = jax.vmap(lambda q: pq_mod.adc_table(index.pq, q))(qs)
+
+    dense_rerank = 4 * n_cand >= layout.n_flat
+
+    if not use_bbc:
+        est2 = ops.pq_adc_batch(stream_codes, luts, backend=backend)
+        est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
+        sel_est, sel_pos = jax.lax.top_k(-est, n_cand)
+        ci = jnp.where(jnp.isfinite(sel_est), layout.order[sel_pos], -1)
+        if dense_rerank:
+            stream_vecs = index.vectors[layout.order]
+            exact_all = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
+            ex = jnp.take_along_axis(exact_all, sel_pos, axis=1)
+        else:
+            ex = _exact_dists_rows(index.vectors, ci, qs)
+        ex = jnp.where(ci >= 0, ex, INF)
+        neg, order = jax.lax.top_k(-ex, k)
+        counts = jnp.full((b,), n_cand, jnp.int32)
+        return SearchResult(-neg, jnp.take_along_axis(ci, order, axis=1),
+                            counts, counts)
+
+    # ---- BBC path (Alg. 4, batched) ---------------------------------------
+    n_flat = layout.n_flat
+    if fused:
+        # Kernel path: per-query codebooks + tau_pred from the nearest-tile
+        # sample prefix, then ONE fused pass (est+bucketize+hist+early-exact)
+        # over the shared stream; selection via the histogram; second gather
+        # pass only for selected-but-not-predicted stragglers.
+        st = min(4, n_probe)
+        spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], ivf.cap)
+
+        def sample_est_one(a):
+            pos, ok, lut = a
+            e = pq_mod.estimate(lut, stream_codes[pos])
+            return jnp.where(ok, jnp.sqrt(jnp.maximum(e, 0.0)), INF)
+
+        sample_est = jax.lax.map(sample_est_one, (spos, sok, luts))
+        n_total = n_probe * ivf.cap
+        plans = jax.vmap(
+            lambda s: rerank.early_rerank_plan(
+                s, n_cand=n_cand, n_sample=s.shape[0], n_total=n_total, m=m)
+        )(sample_est)
+
+        stream_vecs = index.vectors[layout.order]
+        est, bucket, hist, early = ops.fused_scan_batch(
+            stream_codes, stream_vecs, lane_valid, luts, qs,
+            plans.cb.d_min, plans.cb.delta, plans.cb.ew_map, m,
+            plans.tau_pred, backend=backend)
+        est = jnp.where(lane_valid, est, INF)
+        positions = jnp.arange(n_flat, dtype=jnp.int32)
+        _, sel_pos = col.collect_batch(est, positions, lane_valid, bucket,
+                                       hist, n_cand, m)
+        safe_pos = jnp.maximum(sel_pos, 0)
+        sel_ids = jnp.where(sel_pos >= 0, layout.order[safe_pos], -1)
+        e_at_sel = jnp.take_along_axis(early, safe_pos, axis=1)
+        have = jnp.isfinite(e_at_sel) & (sel_pos >= 0)
+        n_early = jnp.sum(jnp.isfinite(early) & lane_valid,
+                          axis=1).astype(jnp.int32)
+    else:
+        # CPU fallback: there is no VMEM-residency win to collect inline, so
+        # skip the prediction machinery and select the exact top-n_cand by
+        # estimate with one batched top_k (same set the bucket collection
+        # yields — bucketize is monotone in the estimate), then one exact
+        # pass over the selection.
+        est2 = ops.pq_adc_batch(stream_codes, luts, backend=backend)
+        est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
+        sel_est, sel_pos = jax.lax.top_k(-est, n_cand)
+        sel_ids = jnp.where(jnp.isfinite(-sel_est), layout.order[sel_pos], -1)
+        e_at_sel = jnp.full(sel_pos.shape, INF, est.dtype)
+        have = jnp.zeros(sel_pos.shape, bool)
+        n_early = jnp.zeros((b,), jnp.int32)
+
+    miss = ~have & (sel_ids >= 0)
+    if fused:
+        # stragglers only — keep the targeted per-row gather
+        miss_d = _exact_dists_rows(index.vectors,
+                                   jnp.where(miss, sel_ids, 0), qs)
+    elif dense_rerank:
+        # the whole selection misses (no inline pass on CPU): one shared
+        # matmul over the stream beats n_cand per-row gathers
+        stream_vecs = index.vectors[layout.order]
+        exact_all = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
+        miss_d = jnp.take_along_axis(exact_all, jnp.maximum(sel_pos, 0),
+                                     axis=1)
+    else:
+        miss_d = _exact_dists_rows(index.vectors,
+                                   jnp.where(miss, sel_ids, 0), qs)
+    ex = jnp.where(have, e_at_sel, jnp.where(miss, miss_d, INF))
+    second = jnp.sum(miss, axis=1).astype(jnp.int32)
+
+    neg, order = jax.lax.top_k(-ex, k)
+    return SearchResult(-neg, jnp.take_along_axis(sel_ids, order, axis=1),
+                        n_early + second, second)
+
+
+def _rabitq_batch_bounds(index: RabitqIndex, layout: ivf_mod.FlatLayout,
+                         qs: jax.Array, lane_valid: jax.Array, eps0: float,
+                         d2: jax.Array):
+    """Batched RaBitQ estimator over the shared stream.
+
+    The per-(query, cluster) rotated residual decomposes as
+    ``P(q - c) = Pq - Pc``, so the code inner products for every query are
+    ONE (n_flat, d) x (d, B) matmul plus a per-lane centroid correction —
+    the batched-native form of ``rabitq.query_factors`` + ``estimate``
+    (mathematically identical; floating-point association differs from the
+    per-cluster matvec of the single-query path).  ``d2`` is the (B, C)
+    squared query-centroid distance matrix the routing pass already built.
+    """
+    rq = index.rq
+    ivf = index.ivf
+    codes_s = rq.codes[layout.order].astype(jnp.float32)      # (n_flat, d)
+    norm_o = rq.norm_o[layout.order]
+    f_o = rq.f_o[layout.order]
+    cl = jnp.minimum(layout.cluster_of, ivf.n_clusters - 1)
+    g = qs @ rq.rot.T                                         # (B, d) = Pq
+    h = ivf.centroids @ rq.rot.T                              # (C, d) = Pc
+    s1 = codes_s @ g.T                                        # (n_flat, B)
+    s2 = jnp.sum(codes_s * h[cl], axis=1)                     # (n_flat,)
+    nq = jnp.sqrt(d2)                                         # (B, C) norm_q
+    nq_lane = nq[:, cl]                                       # (B, n_flat)
+    d = codes_s.shape[1]
+    xv = (s1.T - s2[None, :]) / (
+        jnp.sqrt(jnp.float32(d)) * jnp.maximum(nq_lane, 1e-12))
+    ip = xv / f_o[None, :]
+    err = eps0 * jnp.sqrt((1.0 - f_o ** 2) / (f_o ** 2 * (d - 1)))
+    scale = 2.0 * nq_lane * norm_o[None, :]
+    base = nq_lane ** 2 + norm_o[None, :] ** 2
+    zero = jnp.zeros_like(base)
+    est = jnp.sqrt(jnp.maximum(base - scale * ip, zero))
+    lb = jnp.sqrt(jnp.maximum(base - scale * (ip + err[None, :]), zero))
+    ub = jnp.sqrt(jnp.maximum(base - scale * (ip - err[None, :]), zero))
+    bad = ~lane_valid
+    return (jnp.where(bad, INF, est), jnp.where(bad, INF, lb),
+            jnp.where(bad, INF, ub))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_probe", "use_bbc", "m", "eps0", "backend"))
+def ivf_rabitq_search_batch(
+    index: RabitqIndex,
+    qs: jax.Array,                 # (B, d)
+    layout: ivf_mod.FlatLayout,
+    k: int,
+    n_probe: int,
+    use_bbc: bool = False,
+    m: int = 128,
+    eps0: float = 3.0,
+    backend: str | None = None,
+) -> SearchResult:
+    """Batched IVF+RaBitQ (±BBC) on the shared candidate stream."""
+    ivf = index.ivf
+    b = qs.shape[0]
+    cap = ivf.cap
+    probed, lane_valid, d2 = _routing(ivf, layout, qs, n_probe)
+    est, lb, ub = _rabitq_batch_bounds(index, layout, qs, lane_valid, eps0,
+                                      d2=d2)
+    n_flat = layout.n_flat
+    stream_ids = layout.order
+
+    if not use_bbc:
+        # ---- baseline: per-cluster threshold re-ranking, vmapped ----------
+        tpos, tok = ivf_mod.tile_positions(layout, probed, cap)
+        lb_t = jnp.where(tok, jnp.take_along_axis(lb, tpos, axis=1), INF)
+        ids_t = jnp.where(tok, stream_ids[tpos], -1)
+        lb_t = lb_t.reshape(b, n_probe, cap)
+        ids_t = ids_t.reshape(b, n_probe, cap)
+        ok_t = tok.reshape(b, n_probe, cap)
+        budget = min(cap, _rerank_budget(k, cap))
+
+        def one_query(args):
+            c_lb, c_ids, c_ok, q = args
+
+            def step(carry, xs):
+                pool_d, pool_i, n_rr = carry
+                t_lb, t_ids, t_ok = xs
+                thresh = pool_d[k - 1]
+                mask = t_ok & (t_lb < thresh)
+                pos, okc = rb.compact_mask(mask, budget)
+                safe = jnp.minimum(pos, cap - 1)
+                r_ids = jnp.where(okc, t_ids[safe], -1)
+                r_d = _exact_dists(index.vectors, r_ids, q)
+                r_d = jnp.where(okc, r_d, INF)
+                alld = jnp.concatenate([pool_d, r_d])
+                alli = jnp.concatenate([pool_i, r_ids])
+                neg, idx = jax.lax.top_k(-alld, k)
+                return (-neg, alli[idx], n_rr + jnp.sum(okc)), None
+
+            pool0 = (jnp.full((k,), INF, lb.dtype),
+                     jnp.full((k,), -1, jnp.int32), jnp.int32(0))
+            (pd, pi, n_rr), _ = jax.lax.scan(step, pool0,
+                                             (c_lb, c_ids, c_ok))
+            order = jnp.argsort(pd)
+            return pd[order], pi[order], n_rr
+
+        pd, pi, n_rr = jax.lax.map(one_query, (lb_t, ids_t, ok_t, qs))
+        return SearchResult(pd, pi, n_rr.astype(jnp.int32),
+                            n_rr.astype(jnp.int32))
+
+    # ---- BBC path (Alg. 3, batched greedy) ---------------------------------
+    # Plan without per-query histogram scatters (order-statistic thresholds),
+    # then resolve the whole uncertain band in ONE shared exact-distance
+    # matmul over the stream.  The single-query path phases its evaluations
+    # (est-priority, budgeted) to bound gather traffic; with the candidate
+    # vectors already streaming through the batched L2 kernel, evaluating the
+    # full band is cheaper than compacting it, and the final top-k is
+    # unchanged: every band member the phases skip has lb above the phase-1
+    # threshold, so its exact distance can never enter the top-k.
+    plan = rerank.greedy_rerank_plan_batch(lb, ub, k, lane_valid, m=m)
+    stream_vecs = index.vectors[layout.order]
+    exact_all = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
+    exact_flat = jnp.where(plan.rerank_mask, exact_all, INF)
+
+    res = jax.vmap(
+        lambda p, ef, l, e: rerank.greedy_rerank_finalize(
+            p, ef, l, stream_ids, k, est=e)
+    )(plan, exact_flat, jnp.where(lane_valid, lb, INF), est)
+    n_evals = jnp.sum(plan.rerank_mask, axis=1).astype(jnp.int32)
     return SearchResult(res.topk_dists, res.topk_ids, n_evals, n_evals)

@@ -29,8 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 TILE = 256
 MC = 32
+BQ = 8   # query-batch chunk width inside the batched kernels
 
 
 def _fused_kernel(codes_ref, vecs_ref, wmask_ref, lut_ref, qv_ref, ew_map_ref,
@@ -115,9 +118,10 @@ def fused_scan_pallas(
     tau_pred: jax.Array,  # scalar int32
     tile: int = TILE,
     mc: int = MC,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (est (n,), bucket (n,), hist (m+1,), early (n,))."""
+    interpret = resolve_interpret(interpret)
     n, m_sub = codes.shape
     d = vectors.shape[1]
     g = n // tile
@@ -157,3 +161,176 @@ def fused_scan_pallas(
     )(codes, vectors, w.reshape(1, n), lut, q.reshape(1, d),
       ew_map.reshape(1, n_ew), scal)
     return est.reshape(n), bucket.reshape(n), hist[0, : m + 1], early.reshape(n)
+
+
+# --------------------------------------------------------------------------
+# Batched (multi-query) fused scan
+# --------------------------------------------------------------------------
+
+def bucketize_hist_tile(est, w, ew, d_min, delta, m, hist_pad, bq):
+    """Shared per-tile bucketize + histogram for the batched kernels.
+
+    ``est`` (tile, B) distances, ``w`` (tile, B) int32 validity, ``ew``
+    (B, n_ew) equal-width -> equal-depth LUTs, ``d_min``/``delta`` (B,).
+    Returns (bucket (tile, B) int32, hist (B, hist_pad) int32).  The one-hot
+    LUT application and histogram are chunked over the query axis in blocks
+    of ``bq`` so the (tile, bq, n_ew) intermediates stay VMEM-sized.
+    """
+    tile, b = est.shape
+    n_ew = ew.shape[1]
+    bin_f = jnp.floor((est - d_min[None, :]) / delta[None, :])
+    overflow = bin_f >= n_ew
+    bin_id = jnp.clip(bin_f, 0, n_ew - 1).astype(jnp.int32)
+
+    def map_chunk(j, bucket):
+        bc = jax.lax.dynamic_slice_in_dim(bin_id, j * bq, bq, axis=1)
+        ewc = jax.lax.dynamic_slice_in_dim(ew, j * bq, bq, axis=0)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (tile, bq, n_ew), 2)
+        onehot = (iota == bc[:, :, None]).astype(jnp.float32)
+        bkt = jnp.sum(onehot * ewc[None, :, :].astype(jnp.float32),
+                      axis=2).astype(jnp.int32)                  # (tile, bq)
+        return jax.lax.dynamic_update_slice_in_dim(bucket, bkt, j * bq, 1)
+
+    bucket = jax.lax.fori_loop(0, b // bq, map_chunk,
+                               jnp.zeros((tile, b), jnp.int32))
+    bucket = jnp.where(overflow, m, bucket)
+
+    def hist_chunk(j, hist):
+        bkt = jax.lax.dynamic_slice_in_dim(bucket, j * bq, bq, axis=1)
+        wc = jax.lax.dynamic_slice_in_dim(w, j * bq, bq, axis=1)
+        hiota = jax.lax.broadcasted_iota(jnp.int32, (tile, bq, hist_pad), 2)
+        hoh = jnp.where(hiota == bkt[:, :, None], wc[:, :, None], 0)
+        hc = jnp.sum(hoh, axis=0, dtype=jnp.int32)               # (bq, hist_pad)
+        return jax.lax.dynamic_update_slice_in_dim(hist, hc, j * bq, 0)
+
+    hist = jax.lax.fori_loop(0, b // bq, hist_chunk,
+                             jnp.zeros((b, hist_pad), jnp.int32))
+    return bucket, hist
+
+
+def _fused_batch_kernel(codes_ref, vecs_ref, wmask_ref, luts_ref, qt_ref,
+                        ew_ref, scal_ref, est_ref, bucket_ref, early_ref,
+                        hist_ref, *, m: int, hist_pad: int, mc: int, bq: int):
+    codes = codes_ref[...].astype(jnp.int32)      # (TILE, M)
+    vecs = vecs_ref[...]                          # (TILE, d)
+    w = wmask_ref[...]                            # (TILE, B)
+    luts = luts_ref[...]                          # (M*K, B)
+    qt = qt_ref[...]                              # (d, B)
+    ew = ew_ref[...]                              # (B, n_ew)
+    s = scal_ref[...]                             # (B, 128)
+    d_min, delta = s[:, 0], s[:, 1]
+    tau_pred = s[:, 2].astype(jnp.int32)
+    q_sq = s[:, 3]
+    tile, m_sub = codes.shape
+    b = w.shape[1]
+    k_codes = luts.shape[0] // m_sub
+    inf = jnp.float32(jnp.inf)
+
+    # --- ADC estimates for all B queries: chunked one-hot MXU matmul ---
+    def body(i, acc):
+        cs = jax.lax.dynamic_slice_in_dim(codes, i * mc, mc, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(luts, i * mc * k_codes,
+                                          mc * k_codes, axis=0)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (tile, mc, k_codes), 2)
+        onehot = (iota == cs[:, :, None]).astype(jnp.float32)
+        part = jax.lax.dot_general(
+            onehot.reshape(tile, mc * k_codes), ls,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return acc + part                          # (tile, B)
+
+    est2 = jax.lax.fori_loop(0, m_sub // mc, body,
+                             jnp.zeros((tile, b), jnp.float32))
+    est = jnp.sqrt(jnp.maximum(est2, 0.0))
+    est = jnp.where(w > 0, est, inf)
+    est_ref[...] = est
+
+    # --- bucketize + per-query histogram ---
+    bucket, tile_hist = bucketize_hist_tile(est, w, ew, d_min, delta, m,
+                                            hist_pad, bq)
+    bucket_ref[...] = bucket
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += tile_hist
+
+    # --- early exact for all B queries: one MXU matmul on the hot tile ---
+    xv = jax.lax.dot_general(vecs, qt, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (tile, B)
+    x_sq = jnp.sum(vecs * vecs, axis=1)
+    exact = jnp.sqrt(jnp.maximum(
+        x_sq[:, None] - 2.0 * xv + q_sq[None, :], 0.0))
+    pred = (w > 0) & (bucket <= tau_pred[None, :])
+    early_ref[...] = jnp.where(pred, exact, inf)
+
+
+def fused_scan_batch_pallas(
+    codes: jax.Array,     # (n, M) int32/uint8, n % tile == 0, M % mc == 0
+    vectors: jax.Array,   # (n, d) fp32 — shared candidate stream
+    valid: jax.Array,     # (n, B) bool — per-query lane validity
+    luts: jax.Array,      # (B, M, K) fp32 — one ADC table per query
+    qs: jax.Array,        # (B, d) fp32
+    d_min: jax.Array,     # (B,)
+    delta: jax.Array,     # (B,)
+    ew_maps: jax.Array,   # (B, n_ew) int32
+    m: int,
+    tau_pred: jax.Array,  # (B,) int32
+    tile: int = TILE,
+    mc: int = MC,
+    bq: int = BQ,
+    interpret: bool | None = None,
+):
+    """Batched fused scan: one pass over the shared candidate stream computes
+    est/bucket/early for every query and accumulates a (B, m+1) histogram.
+
+    The candidate gather happens ONCE per cluster tile (codes/vectors are the
+    shared stream); all per-query work is MXU matmuls against the resident
+    tile.  Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n)).
+    Requires B % bq == 0 (wrappers pad the query batch).
+    """
+    interpret = resolve_interpret(interpret)
+    n, m_sub = codes.shape
+    d = vectors.shape[1]
+    b = qs.shape[0]
+    assert b % bq == 0, (b, bq)
+    g = n // tile
+    n_ew = ew_maps.shape[1]
+    k_codes = luts.shape[2]
+    hist_pad = ((m + 1 + 127) // 128) * 128
+    scal = jnp.zeros((b, 128), jnp.float32)
+    scal = scal.at[:, 0].set(d_min.astype(jnp.float32))
+    scal = scal.at[:, 1].set(delta.astype(jnp.float32))
+    scal = scal.at[:, 2].set(tau_pred.astype(jnp.float32))
+    scal = scal.at[:, 3].set(jnp.sum(qs * qs, axis=1))
+    w = valid.astype(jnp.int32)                                  # (n, B)
+    luts_t = luts.reshape(b, m_sub * k_codes).T                  # (M*K, B)
+    qt = qs.T                                                    # (d, B)
+    est, bucket, early, hist = pl.pallas_call(
+        functools.partial(_fused_batch_kernel, m=m, hist_pad=hist_pad,
+                          mc=mc, bq=bq),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((tile, m_sub), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((m_sub * k_codes, b), lambda i: (0, 0)),
+            pl.BlockSpec((d, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, n_ew), lambda i: (0, 0)),
+            pl.BlockSpec((b, 128), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((b, hist_pad), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, b), jnp.float32),
+            jax.ShapeDtypeStruct((n, b), jnp.int32),
+            jax.ShapeDtypeStruct((n, b), jnp.float32),
+            jax.ShapeDtypeStruct((b, hist_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes, vectors, w, luts_t, qt, ew_maps.astype(jnp.int32), scal)
+    return est.T, bucket.T, hist[:, : m + 1], early.T

@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 TILE = 256
 
 
@@ -25,7 +27,8 @@ def _l2_kernel(x_ref, q_ref, scal_ref, out_ref):
 
 
 def l2_pallas(x: jax.Array, q: jax.Array, tile: int = TILE,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     n, d = x.shape
     g = n // tile
     scal = jnp.zeros((1, 128), jnp.float32).at[0, 0].set(jnp.sum(q * q))
@@ -42,3 +45,41 @@ def l2_pallas(x: jax.Array, q: jax.Array, tile: int = TILE,
         interpret=interpret,
     )(x, q.reshape(1, d), scal)
     return out.reshape(n)
+
+
+def _l2_batch_kernel(x_ref, qt_ref, scal_ref, out_ref):
+    x = x_ref[...]                     # (TILE, d)
+    qt = qt_ref[...]                   # (d, B)
+    q_sq = scal_ref[...][:, 0]         # (B,)
+    xv = jax.lax.dot_general(x, qt, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (TILE, B)
+    x_sq = jnp.sum(x * x, axis=1)
+    out_ref[...] = jnp.sqrt(jnp.maximum(
+        x_sq[:, None] - 2.0 * xv + q_sq[None, :], 0.0))
+
+
+def l2_batch_pallas(x: jax.Array, qs: jax.Array, tile: int = TILE,
+                    interpret: bool | None = None) -> jax.Array:
+    """Exact ||q_b - x_i|| for a batch of queries: one MXU matmul per tile.
+
+    ``x`` (n, d) shared candidate vectors, ``qs`` (B, d).  Returns (B, n).
+    """
+    interpret = resolve_interpret(interpret)
+    n, d = x.shape
+    b = qs.shape[0]
+    g = n // tile
+    scal = jnp.zeros((b, 128), jnp.float32).at[:, 0].set(
+        jnp.sum(qs * qs, axis=1))
+    out = pl.pallas_call(
+        _l2_batch_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(x, qs.T, scal)
+    return out.T

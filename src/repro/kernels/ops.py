@@ -3,6 +3,19 @@
 Handles padding to tile/lane multiples, dtype plumbing, and the
 interpret-mode switch (CPU containers execute the kernel bodies in Python via
 ``interpret=True``; on TPU the same calls compile to Mosaic).
+
+The ``*_batch`` wrappers additionally route between two backends:
+
+  * ``"pallas"`` — the batched Pallas kernels (Mosaic on TPU; the interpret
+    emulator elsewhere).  The emulator is a correctness tool, ~100x slower
+    than XLA on CPU, so it is never the default off-TPU.
+  * ``"ref"``    — the pure-jnp mirrors in kernels/ref.py: the same batched
+    math (shared candidate stream, batched matmuls) compiled by XLA.  This is
+    the production CPU fallback.
+
+``backend=None`` selects pallas on TPU and ref elsewhere, so the batched
+search engine runs the fused kernels wherever they pay off and stays fast on
+CPU containers/CI.
 """
 from __future__ import annotations
 
@@ -16,16 +29,22 @@ from repro.kernels import fused_scan as _fs
 from repro.kernels import l2_rerank as _l2
 from repro.kernels import pq_adc as _adc
 from repro.kernels import rabitq_est as _rq
+from repro.kernels import ref as _ref
+from repro.kernels.platform import default_interpret, on_tpu
 
 INF = jnp.inf
 
 
-def on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
-
-
 def _interpret() -> bool:
-    return not on_tpu()
+    return default_interpret()
+
+
+def resolve_backend(backend: str | None) -> str:
+    if backend is None:
+        return "pallas" if on_tpu() else "ref"
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown kernel backend: {backend!r}")
+    return backend
 
 
 def _pad_rows(x: jax.Array, mult: int, fill) -> jax.Array:
@@ -113,3 +132,103 @@ def l2_exact(x: jax.Array, q: jax.Array, tile: int = _l2.TILE) -> jax.Array:
     x_p = _pad_cols(_pad_rows(x, tile, 0.0), 128, 0.0)
     q_p = jnp.pad(q, (0, x_p.shape[1] - d))
     return _l2.l2_pallas(x_p, q_p, tile=tile, interpret=_interpret())[:n]
+
+
+# --------------------------------------------------------------------------
+# Batched (multi-query) wrappers
+# --------------------------------------------------------------------------
+
+def _pad_batch(b: int, bq: int) -> int:
+    return (-b) % bq
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "mc", "backend"))
+def pq_adc_batch(codes: jax.Array, luts: jax.Array, tile: int = _adc.TILE,
+                 mc: int = _adc.MC, backend: str | None = None) -> jax.Array:
+    """Shared (n, M) codes x per-query (B, M, K) LUTs -> (B, n) squared
+    estimates."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return _ref.pq_adc_batch(codes, luts)
+    n = codes.shape[0]
+    codes_p = _pad_cols(_pad_rows(codes.astype(jnp.int32), tile, 0), mc, 0)
+    m_pad = codes_p.shape[1] - luts.shape[1]
+    luts_p = jnp.pad(luts, ((0, 0), (0, m_pad), (0, 0)))
+    out = _adc.adc_batch_pallas(codes_p, luts_p, tile=tile, mc=mc,
+                                interpret=_interpret())
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile", "mc", "backend"))
+def fused_scan_batch(codes: jax.Array, vectors: jax.Array, valid: jax.Array,
+                     luts: jax.Array, qs: jax.Array, d_min: jax.Array,
+                     delta: jax.Array, ew_maps: jax.Array, m: int,
+                     tau_pred: jax.Array, tile: int = _fs.TILE,
+                     mc: int = _fs.MC, backend: str | None = None):
+    """Batched fused estimate+bucketize+hist+early-exact over a shared
+    candidate stream.
+
+    ``codes`` (n, M) / ``vectors`` (n, d) are the stream shared by every
+    query; ``valid`` (B, n) masks each query's probed lanes; ``luts``
+    (B, M, K), ``qs`` (B, d), codebook params and ``tau_pred`` are per-query.
+    Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n)).
+    """
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return _ref.fused_scan_batch(codes, vectors, valid, luts, qs, d_min,
+                                     delta, ew_maps, m, tau_pred)
+    n, d = vectors.shape
+    b = qs.shape[0]
+    bp = _pad_batch(b, _fs.BQ)
+    codes_p = _pad_cols(_pad_rows(codes.astype(jnp.int32), tile, 0), mc, 0)
+    m_pad = codes_p.shape[1] - luts.shape[1]
+    luts_p = jnp.pad(luts, ((0, bp), (0, m_pad), (0, 0)))
+    vecs_p = _pad_cols(_pad_rows(vectors, tile, 0.0), 128, 0.0)
+    qs_p = jnp.pad(qs, ((0, bp), (0, vecs_p.shape[1] - d)))
+    valid_p = jnp.pad(_pad_cols(valid, tile, False), ((0, bp), (0, 0)))
+    d_min_p = jnp.pad(d_min, (0, bp))
+    delta_p = jnp.pad(delta, (0, bp), constant_values=1.0)
+    ew_p = jnp.pad(ew_maps.astype(jnp.int32), ((0, bp), (0, 0)))
+    tau_p = jnp.pad(tau_pred.astype(jnp.int32), (0, bp), constant_values=-1)
+    est, bucket, hist, early = _fs.fused_scan_batch_pallas(
+        codes_p, vecs_p, valid_p.T, luts_p, qs_p, d_min_p, delta_p, ew_p, m,
+        tau_p, tile=tile, mc=mc, interpret=_interpret())
+    return est[:b, :n], bucket[:b, :n], hist[:b], early[:b, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile", "backend"))
+def bucket_hist_batch(dists: jax.Array, valid: jax.Array, d_min: jax.Array,
+                      delta: jax.Array, ew_maps: jax.Array, m: int,
+                      tile: int = _bh.TILE, backend: str | None = None):
+    """(B, n) distances, per-query codebooks -> (bucket (B, n), hist
+    (B, m+1))."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return _ref.bucket_hist_batch(dists, valid, d_min, delta,
+                                      ew_maps.astype(jnp.int32), m)
+    b, n = dists.shape
+    bp = _pad_batch(b, _bh.BQ)
+    d_p = jnp.pad(_pad_cols(dists, tile, jnp.inf), ((0, bp), (0, 0)),
+                  constant_values=jnp.inf)
+    v_p = jnp.pad(_pad_cols(valid, tile, False), ((0, bp), (0, 0)))
+    d_min_p = jnp.pad(d_min, (0, bp))
+    delta_p = jnp.pad(delta, (0, bp), constant_values=1.0)
+    ew_p = jnp.pad(ew_maps.astype(jnp.int32), ((0, bp), (0, 0)))
+    bucket, hist = _bh.bucket_hist_batch_pallas(
+        d_p, v_p, d_min_p, delta_p, ew_p, m, tile=tile,
+        interpret=_interpret())
+    return bucket[:b, :n], hist[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "backend"))
+def l2_exact_batch(x: jax.Array, qs: jax.Array, tile: int = _l2.TILE,
+                   backend: str | None = None) -> jax.Array:
+    """(n, d) shared vectors x (B, d) queries -> (B, n) exact distances."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return _ref.l2_exact_batch(x, qs)
+    n, d = x.shape
+    x_p = _pad_cols(_pad_rows(x, tile, 0.0), 128, 0.0)
+    qs_p = jnp.pad(qs, ((0, 0), (0, x_p.shape[1] - d)))
+    return _l2.l2_batch_pallas(x_p, qs_p, tile=tile,
+                               interpret=_interpret())[:, :n]

@@ -1,0 +1,23 @@
+"""Platform detection shared by the kernel modules and their ops wrappers.
+
+Kept in its own module (rather than ops.py) so the kernel files can resolve
+their ``interpret`` default without a circular import: ops imports the kernel
+modules, and the kernel modules import only this.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: compile to Mosaic on TPU, run the Python
+    interpreter path everywhere else (CPU containers, CI)."""
+    return not on_tpu()
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 TILE = 256
 MC = 32  # sub-quantizer chunk
 
@@ -51,11 +53,12 @@ def _adc_kernel(codes_ref, lut_ref, out_ref, *, mc: int):
 
 
 def adc_pallas(codes: jax.Array, lut: jax.Array, *, tile: int = TILE,
-               mc: int = MC, interpret: bool = True) -> jax.Array:
+               mc: int = MC, interpret: bool | None = None) -> jax.Array:
     """(n, M) codes + (M, K) LUT -> (n,) squared-distance estimates.
 
     Caller guarantees n % tile == 0 and M % mc == 0 (ops.py pads).
     """
+    interpret = resolve_interpret(interpret)
     n, m_sub = codes.shape
     grid = (n // tile,)
     out = pl.pallas_call(
@@ -70,3 +73,57 @@ def adc_pallas(codes: jax.Array, lut: jax.Array, *, tile: int = TILE,
         interpret=interpret,
     )(codes, lut)
     return out.reshape(n)
+
+
+# --------------------------------------------------------------------------
+# Batched (multi-query) ADC
+# --------------------------------------------------------------------------
+
+def _adc_batch_kernel(codes_ref, luts_ref, out_ref, *, mc: int):
+    codes = codes_ref[...].astype(jnp.int32)         # (TILE, M)
+    luts = luts_ref[...]                             # (M*K, B)
+    tile, m_sub = codes.shape
+    b = luts.shape[1]
+    k_codes = luts.shape[0] // m_sub
+
+    def body(i, acc):
+        cs = jax.lax.dynamic_slice_in_dim(codes, i * mc, mc, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(luts, i * mc * k_codes,
+                                          mc * k_codes, axis=0)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (tile, mc, k_codes), 2)
+        onehot = (iota == cs[:, :, None]).astype(jnp.float32)
+        part = jax.lax.dot_general(
+            onehot.reshape(tile, mc * k_codes), ls,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return acc + part                            # (TILE, B)
+
+    acc = jax.lax.fori_loop(0, m_sub // mc, body,
+                            jnp.zeros((tile, b), jnp.float32))
+    out_ref[...] = acc
+
+
+def adc_batch_pallas(codes: jax.Array, luts: jax.Array, *, tile: int = TILE,
+                     mc: int = MC,
+                     interpret: bool | None = None) -> jax.Array:
+    """Shared (n, M) codes x per-query (B, M, K) LUTs -> (B, n) squared
+    estimates: one code-block stream, ADC for all B queries as a single MXU
+    matmul per chunk.
+
+    Caller guarantees n % tile == 0 and M % mc == 0 (ops.py pads).
+    """
+    interpret = resolve_interpret(interpret)
+    n, m_sub = codes.shape
+    b, _, k_codes = luts.shape
+    luts_t = luts.reshape(b, m_sub * k_codes).T      # (M*K, B)
+    out = pl.pallas_call(
+        functools.partial(_adc_batch_kernel, mc=mc),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m_sub), lambda i: (i, 0)),
+            pl.BlockSpec((m_sub * k_codes, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(codes, luts_t)
+    return out.T

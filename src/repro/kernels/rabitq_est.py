@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 TILE = 256
 
 
@@ -47,8 +49,9 @@ def rabitq_est_pallas(
     d_logical: int,      # true dimensionality (before lane padding)
     eps0: float = 3.0,
     tile: int = TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    interpret = resolve_interpret(interpret)
     n, d = codes.shape
     g = n // tile
     scal = jnp.zeros((1, 128), jnp.float32)

@@ -58,6 +58,66 @@ def l2_exact(x: jax.Array, q: jax.Array) -> jax.Array:
         jnp.sum(x * x, -1) - 2.0 * (x @ q) + jnp.sum(q * q), 0.0))
 
 
+# --------------------------------------------------------------------------
+# Batched (multi-query) oracles — also the CPU fast path behind ops.*_batch
+# --------------------------------------------------------------------------
+
+def pq_adc_batch(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """(n, M) shared codes + (B, M, K) per-query LUTs -> (B, n) squared
+    estimates.  Sequential map over queries keeps the (n, M) take
+    intermediate B-independent (the batched axis is the LUT, not the codes)."""
+    return jax.lax.map(lambda l: pq_adc(codes, l), luts)
+
+
+def bucketize_batch(dists: jax.Array, d_min: jax.Array, delta: jax.Array,
+                    ew_maps: jax.Array, m: int) -> jax.Array:
+    """(B, n) distances, per-query codebook params -> (B, n) bucket ids."""
+    return jax.vmap(bucketize, in_axes=(0, 0, 0, 0, None))(
+        dists, d_min, delta, ew_maps, m)
+
+
+def bucket_hist_batch(dists: jax.Array, valid: jax.Array, d_min, delta,
+                      ew_maps: jax.Array, m: int):
+    """Batched Eq. 6 + histogram.  Returns (bucket (B, n), hist (B, m+1))."""
+    return jax.vmap(bucket_hist, in_axes=(0, 0, 0, 0, 0, None))(
+        dists, valid, d_min, delta, ew_maps, m)
+
+
+def l2_exact_batch(x: jax.Array, qs: jax.Array) -> jax.Array:
+    """(n, d) shared vectors, (B, d) queries -> (B, n) exact distances via
+    one norm-identity matmul."""
+    x_sq = jnp.sum(x * x, axis=-1)
+    q_sq = jnp.sum(qs * qs, axis=-1)
+    xv = qs @ x.T
+    return jnp.sqrt(jnp.maximum(
+        x_sq[None, :] - 2.0 * xv + q_sq[:, None], 0.0))
+
+
+def fused_scan_batch(
+    codes: jax.Array,    # (n, M) shared PQ codes
+    vectors: jax.Array,  # (n, d) shared fp32 vectors
+    valid: jax.Array,    # (B, n) per-query lane validity
+    luts: jax.Array,     # (B, M, K)
+    qs: jax.Array,       # (B, d)
+    d_min, delta,        # (B,)
+    ew_maps: jax.Array,  # (B, n_ew)
+    m: int,
+    tau_pred: jax.Array, # (B,) int32
+):
+    """Oracle for the batched fused kernel.
+
+    Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n))."""
+    est = jnp.sqrt(jnp.maximum(pq_adc_batch(codes, luts), 0.0))
+    est = jnp.where(valid, est, jnp.inf)
+    b = bucketize_batch(est, d_min, delta, ew_maps, m)
+    w = jnp.where(valid, 1, 0).astype(jnp.int32)
+    hist = jax.vmap(
+        lambda bb, ww: jnp.zeros((m + 1,), jnp.int32).at[bb].add(ww))(b, w)
+    ex = l2_exact_batch(vectors, qs)
+    early = jnp.where(valid & (b <= tau_pred[:, None]), ex, jnp.inf)
+    return est, b, hist, early
+
+
 def fused_scan(
     codes: jax.Array,    # (n, M) uint8/int32 PQ codes
     vectors: jax.Array,  # (n, d) fp32

@@ -1,0 +1,69 @@
+"""Hypothesis property tests for the result buffer (paper Alg. 1).
+
+Split from test_buffer.py so the deterministic unit tests stay runnable when
+``hypothesis`` is not installed (it is an optional dev dependency).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import buffer as rb  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(200, 3000),
+    k_frac=st.floats(0.01, 0.5),
+    m=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_collect_equals_oracle(n, k_frac, m, seed):
+    """BBC collect returns the exact top-k *multiset of distances* for any
+    distance distribution with distinct values."""
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal(n).astype(np.float32) * 3 + 10
+    d += np.arange(n, dtype=np.float32) * 1e-4  # break ties deterministically
+    k = max(1, int(n * k_frac))
+    cb = rb.build_codebook(jnp.asarray(d), k=k, m=m)
+    b = rb.bucketize(cb, jnp.asarray(d))
+    got_d, _ = rb.collect(cb, jnp.asarray(d), jnp.arange(n, dtype=jnp.int32),
+                          b, k, slack_buckets=8)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(got_d)), np.sort(d)[:k], rtol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    counts=st.lists(st.integers(0, 50), min_size=2, max_size=64),
+    k=st.integers(1, 500),
+)
+def test_property_threshold_bucket_invariant(counts, k):
+    """tau is the minimal index whose cumulative count reaches k; n_before < k
+    and n_before + hist[tau] >= k whenever total >= k."""
+    hist = jnp.asarray(counts + [0], jnp.int32)
+    tau, n_before = rb.threshold_bucket(hist, k)
+    tau, n_before = int(tau), int(n_before)
+    total = sum(counts)
+    m = len(counts)
+    if total < k:
+        assert tau == m
+    else:
+        assert 0 <= tau < m
+        assert n_before < k
+        assert n_before + counts[tau] >= k
+        assert sum(counts[:tau]) == n_before
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), budget=st.integers(1, 64))
+def test_property_compact_mask(seed, budget):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(200) < 0.3
+    idx, ok = rb.compact_mask(jnp.asarray(mask), budget)
+    want = np.where(mask)[0][:budget]
+    got = np.asarray(idx)[np.asarray(ok)]
+    np.testing.assert_array_equal(got, want)

@@ -33,6 +33,61 @@ def test_collector_exact(rng, name, k):
     np.testing.assert_allclose(np.sort(full[ids]), oracle, rtol=1e-6)
 
 
+@pytest.mark.parametrize("name", ["bbc", "bbc_streamed", "topk", "topk_flat"])
+def test_streamed_and_flat_agree(rng, name):
+    """Every variant of a collector returns the same exact top-k set."""
+    s = _stream(rng, n_tiles=8)
+    k = 300
+    got_d, got_i = col.COLLECTORS[name](s, k)
+    d = np.asarray(s.dists).ravel()
+    v = np.asarray(s.valid).ravel()
+    np.testing.assert_allclose(np.sort(np.asarray(got_d)),
+                               np.sort(d[v])[:k], rtol=1e-6)
+
+
+@pytest.mark.parametrize("k", [128, 1024])
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_batch_collectors_exact(rng, k, backend):
+    """Batched collectors return each query's exact top-k over the shared
+    stream, honoring per-query validity masks."""
+    b, n, d = 5, 6144, 32
+    qs = rng.standard_normal((b, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    dists = np.linalg.norm(x[None] - qs[:, None], axis=-1).astype(np.float32)
+    dists += rng.random(dists.shape).astype(np.float32) * 1e-5
+    valid = rng.random((b, n)) < 0.8
+    ids = np.arange(n, dtype=np.int32)
+    bd, bi = col.bbc_collect_batch(jnp.asarray(dists), jnp.asarray(ids),
+                                   jnp.asarray(valid), k, backend=backend)
+    td, ti = col.topk_collect_batch(jnp.asarray(dists), jnp.asarray(ids),
+                                    jnp.asarray(valid), k)
+    for q in range(b):
+        oracle = np.sort(dists[q][valid[q]])[:k]
+        np.testing.assert_allclose(np.sort(np.asarray(bd[q])), oracle,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.sort(np.asarray(td[q])), oracle,
+                                   rtol=1e-6)
+        assert not set(np.asarray(bi[q]).tolist()) & \
+            set(np.where(~valid[q])[0].tolist())
+
+
+def test_batch_collector_underfill(rng):
+    """Fewer than k live lanes: (+inf, -1) padding, real lanes intact."""
+    b, n, k = 3, 1024, 256
+    dists = (rng.random((b, n)) * 5 + 1).astype(np.float32)
+    valid = np.zeros((b, n), bool)
+    valid[:, :100] = True
+    ids = np.arange(n, dtype=np.int32)
+    td, ti = col.topk_collect_batch(jnp.asarray(dists), jnp.asarray(ids),
+                                    jnp.asarray(valid), k)
+    ti = np.asarray(ti)
+    td = np.asarray(td)
+    assert (ti[:, 100:] == -1).all() and np.isinf(td[:, 100:]).all()
+    for q in range(b):
+        np.testing.assert_allclose(np.sort(td[q][:100]),
+                                   np.sort(dists[q][:100]), rtol=1e-6)
+
+
 def test_stats_scaling():
     """BBC cross-tile state is O(m), independent of k — the paper's point."""
     small = col.collector_stats("bbc", k=5_000, m=128, n=10**6, tile=512)

@@ -94,6 +94,119 @@ def test_l2_exact(rng, n, d):
                                rtol=2e-4, atol=2e-4)
 
 
+# ------------------------- batched kernels ---------------------------------
+
+@pytest.mark.parametrize("b", [1, 5, 8])
+@pytest.mark.parametrize("n,m_sub", [(512, 16), (1000, 33)])
+def test_pq_adc_batch(rng, b, n, m_sub):
+    k_codes = 16
+    codes = jnp.asarray(rng.integers(0, k_codes, (n, m_sub)), jnp.uint8)
+    luts = jnp.asarray(rng.random((b, m_sub, k_codes)), jnp.float32)
+    want = ref.pq_adc_batch(codes, luts)
+    for backend in ("pallas", "ref"):
+        got = ops.pq_adc_batch(codes, luts, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+    # rows agree with the single-query wrapper
+    got = ops.pq_adc_batch(codes, luts, backend="pallas")
+    for bi in range(min(b, 2)):
+        np.testing.assert_allclose(np.asarray(got[bi]),
+                                   np.asarray(ops.pq_adc(codes, luts[bi])),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _batch_codebooks(rng, est_rows, k, m):
+    cbs = [rb.build_codebook(jnp.asarray(e), k=k, m=m) for e in est_rows]
+    d_min = jnp.stack([c.d_min for c in cbs])
+    delta = jnp.stack([c.delta for c in cbs])
+    ew = jnp.stack([c.ew_map for c in cbs])
+    return d_min, delta, ew
+
+
+@pytest.mark.parametrize("b", [1, 4, 8, 11])
+@pytest.mark.parametrize("n", [512, 1000])
+def test_bucket_hist_batch(rng, b, n):
+    m = 64
+    dists = np.asarray(rng.random((b, n)) * 10 + 1, np.float32)
+    valid = rng.random((b, n)) < 0.9
+    dists = np.where(valid, dists, np.inf).astype(np.float32)
+    d_min, delta, ew = _batch_codebooks(rng, dists, k=min(n // 2, 400), m=m)
+    for backend in ("pallas", "ref"):
+        got_b, got_h = ops.bucket_hist_batch(
+            jnp.asarray(dists), jnp.asarray(valid), d_min, delta, ew, m,
+            backend=backend)
+        want_b, want_h = ref.bucket_hist_batch(
+            jnp.asarray(dists), jnp.asarray(valid), d_min, delta, ew, m)
+        np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+        np.testing.assert_array_equal(np.asarray(got_h), np.asarray(want_h))
+        # and each row agrees with the single-query kernel
+        for bi in range(b):
+            srow, shist = ops.bucket_hist(
+                jnp.asarray(dists[bi]), jnp.asarray(valid[bi]), d_min[bi],
+                delta[bi], ew[bi], m)
+            np.testing.assert_array_equal(np.asarray(got_b[bi]),
+                                          np.asarray(srow))
+            np.testing.assert_array_equal(np.asarray(got_h[bi]),
+                                          np.asarray(shist))
+
+
+@pytest.mark.parametrize("b,n,d,m_sub", [(4, 512, 64, 16), (8, 768, 96, 24),
+                                         (3, 512, 128, 32)])
+def test_fused_scan_batch(rng, b, n, d, m_sub):
+    k_codes, m = 16, 64
+    codes = jnp.asarray(rng.integers(0, k_codes, (n, m_sub)), jnp.uint8)
+    vectors = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    valid = jnp.asarray(rng.random((b, n)) < 0.95)
+    luts = jnp.asarray(rng.random((b, m_sub, k_codes)) * 2, jnp.float32)
+    est_rows = np.stack([
+        np.where(np.asarray(valid[i]),
+                 np.sqrt(np.maximum(np.asarray(ref.pq_adc(codes, luts[i])),
+                                    0.0)), np.inf)
+        for i in range(b)])
+    d_min, delta, ew = _batch_codebooks(rng, est_rows, k=n // 2, m=m)
+    tau = jnp.asarray(rng.integers(0, m, b), jnp.int32)
+    want = ref.fused_scan_batch(codes, vectors, valid, luts, qs, d_min,
+                                delta, ew, m, tau)
+    got = ops.fused_scan_batch(codes, vectors, valid, luts, qs, d_min,
+                               delta, ew, m, tau, backend="pallas")
+    names = ["est", "bucket", "hist", "early"]
+    for name, g, w in zip(names, got, want):
+        if name in ("bucket", "hist"):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        else:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-4, atol=1e-4)
+    # per-row agreement with the single-query fused kernel
+    for bi in range(min(b, 2)):
+        single = ops.fused_scan(codes, vectors, valid[bi], luts[bi], qs[bi],
+                                d_min[bi], delta[bi], ew[bi], m, tau[bi])
+        np.testing.assert_allclose(np.asarray(got[0][bi]),
+                                   np.asarray(single[0]), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got[1][bi]),
+                                      np.asarray(single[1]))
+        np.testing.assert_array_equal(np.asarray(got[2][bi]),
+                                      np.asarray(single[2]))
+
+
+@pytest.mark.parametrize("b,n,d", [(4, 512, 64), (9, 999, 96), (1, 256, 128)])
+def test_l2_exact_batch(rng, b, n, d):
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    want = ref.l2_exact_batch(x, qs)
+    for backend in ("pallas", "ref"):
+        got = ops.l2_exact_batch(x, qs, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+    # rows agree with the single-query kernel
+    got = ops.l2_exact_batch(x, qs, backend="pallas")
+    for bi in range(min(b, 2)):
+        np.testing.assert_allclose(np.asarray(got[bi]),
+                                   np.asarray(ops.l2_exact(x, qs[bi])),
+                                   rtol=2e-4, atol=2e-4)
+
+
 def test_fused_scan_matches_search_semantics(rng):
     """The fused kernel's (est, hist) must agree with the core result-buffer
     pipeline so the searcher can swap implementations freely."""
