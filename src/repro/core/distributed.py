@@ -32,6 +32,19 @@ from repro.core import buffer as rb
 INF = jnp.inf
 
 
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (jax >= 0.6 exposes it at top level;
+    0.4.x under ``jax.experimental``).  Replication checking is disabled:
+    the search bodies end in ``psum``/``all_gather`` + replicated math, which
+    the checker cannot always prove."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 class ShardedSearchResult(NamedTuple):
     topk_dists: jax.Array
     topk_ids: jax.Array
@@ -89,6 +102,53 @@ def bbc_shard_search(
         topk_ids=gi[order],
         tau=tau,
         survivors_per_shard=jnp.sum(survive),
+    )
+
+
+# --------------------------------------------------------------------------
+# Batched collective primitives (the real-index path; see index/search.py)
+# --------------------------------------------------------------------------
+
+def bbc_survivors_batch(
+    bucket: jax.Array,   # (B, F) local bucket ids
+    key: jax.Array,      # (B, F) local selection keys (distance-like, asc)
+    valid: jax.Array,    # (B, F) local live-lane mask
+    hist: jax.Array,     # (B, m+1) local histograms
+    count: int,          # global selection size (k, or n_cand for IVF+PQ)
+    budget: int,         # static per-shard survivor budget
+    axis_name: str = "model",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched core of the distributed BBC collector (call under shard_map).
+
+    THE collective is the ``psum`` of (B, m+1) int32 histograms — m counters
+    per query instead of the k (dist, id) pairs a naive distributed top-k
+    all-gathers.  From the summed histogram every shard derives the same
+    per-query threshold bucket tau; lanes at or below tau survive.  Survivors
+    are compacted key-priority (smallest keys first) into the fixed
+    ``budget``, so even when a shard holds more than ``budget`` survivors the
+    dropped ones are its farthest — the global top-``count`` stays intact as
+    long as no single shard owns more than ``budget`` of it (round-robin
+    sharding makes shares ~count/S; see ``survivor_budget``).
+
+    Returns ``(pos, ok, tau, n_survive)``: local survivor stream positions
+    (B, budget) with validity, the per-query threshold bucket (B,), and this
+    shard's per-query survivor count (B,) before budgeting.
+    """
+    global_hist = jax.lax.psum(hist, axis_name)
+    tau, _ = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(
+        global_hist, count)
+    survive = valid & (bucket <= tau[:, None])
+    masked = jnp.where(survive, key, INF)
+    neg, pos = jax.lax.top_k(-masked, budget)
+    return pos, jnp.isfinite(-neg), tau, jnp.sum(survive, axis=1)
+
+
+def gather_survivors(axis_name: str, *rows: jax.Array) -> tuple[jax.Array, ...]:
+    """All-gather per-shard (B, budget) survivor rows into (B, S * budget)
+    — the survivor-only collective (~count total elements across shards,
+    vs n_scanned for a full gather)."""
+    return tuple(
+        jax.lax.all_gather(r, axis_name, axis=1, tiled=True) for r in rows
     )
 
 

@@ -9,6 +9,23 @@ serves query batches through the natively batched searchers in
     res = eng.search(qs)            # (B, d) -> SearchResult with (B, k) rows
     res = eng.search(q)             # (d,)   -> single-query SearchResult
 
+Each method (ivf / ivfpq / ivfrabitq) is a strategy object exposing
+single-query, batched, and mesh-sharded entry points, so the engine itself
+is one construction-time dispatch instead of a per-call ``if kind == ...``
+ladder repeated across code paths.
+
+Sharded deployment is a construction-time switch:
+
+    mesh = jax.make_mesh((n_shards,), ("model",))
+    eng = engine.SearchEngine.build(index, k=5000, n_probe=64, mesh=mesh)
+
+The corpus stream is partitioned row-wise over the mesh's ``model`` axis
+(``ivf.sharded_layout``: round-robin within each cluster) and the per-shard
+stream tensors are placed with a sharded ``NamedSharding`` at build time, so
+each chip holds and scans only its rows; queries run the distributed BBC
+collector (histogram ``psum`` + survivor-only ``all_gather``; see
+``core.distributed`` and the sharded searchers in ``index.search``).
+
 The layout (and the one-time host-side packing it needs) is computed once at
 engine construction, so steady-state serving is one jit-compiled call per
 batch shape.  The engine is deliberately thin: all numerics live in
@@ -16,19 +33,151 @@ batch shape.  The engine is deliberately thin: all numerics live in
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.index import ivf as ivf_mod
 from repro.index import search as search_mod
 
 
+# --------------------------------------------------------------------------
+# Per-method strategies
+# --------------------------------------------------------------------------
+
+class _IvfStrategy:
+    """IVF (no quantization): exact distances in-scan."""
+
+    kind = "ivf"
+
+    def default_n_cand(self, index, k: int) -> int | None:
+        return None
+
+    def search_one(self, eng: "SearchEngine", q: jax.Array):
+        return search_mod.ivf_search(
+            eng.index, eng.vectors, q, k=eng.k, n_probe=eng.n_probe,
+            use_bbc=eng.use_bbc, m=eng.m)
+
+    def search_batch(self, eng: "SearchEngine", qs: jax.Array):
+        return search_mod.ivf_search_batch(
+            eng.index, eng.vectors, qs, eng.layout, k=eng.k,
+            n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
+            backend=eng.backend)
+
+    def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
+        return (np.asarray(vectors)[order],)
+
+    def stream_specs(self) -> tuple:
+        return (P("model", None, None),)
+
+    def search_sharded(self, eng: "SearchEngine", qs: jax.Array):
+        (svecs,) = eng.shard_streams
+        return search_mod.ivf_search_sharded(
+            eng.mesh, qs, eng.index.centroids, eng.slayout, svecs, k=eng.k,
+            n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
+            cap_shard=eng.cap_shard, budget=eng.shard_budget,
+            backend=eng.backend)
+
+
+class _IvfPqStrategy:
+    """IVF+PQ: ADC estimate -> n_cand selection -> exact re-rank."""
+
+    kind = "ivfpq"
+
+    def default_n_cand(self, index, k: int) -> int | None:
+        return min(8 * k, int(index.vectors.shape[0]))
+
+    def search_one(self, eng: "SearchEngine", q: jax.Array):
+        return search_mod.ivf_pq_search(
+            eng.index, q, k=eng.k, n_probe=eng.n_probe, n_cand=eng.n_cand,
+            use_bbc=eng.use_bbc, m=eng.m)
+
+    def search_batch(self, eng: "SearchEngine", qs: jax.Array):
+        return search_mod.ivf_pq_search_batch(
+            eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
+            n_cand=eng.n_cand, use_bbc=eng.use_bbc, m=eng.m,
+            backend=eng.backend)
+
+    def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
+        return (np.asarray(index.codes)[order],
+                np.asarray(index.vectors)[order])
+
+    def stream_specs(self) -> tuple:
+        return (P("model", None, None), P("model", None, None))
+
+    def search_sharded(self, eng: "SearchEngine", qs: jax.Array):
+        scodes, svecs = eng.shard_streams
+        return search_mod.ivf_pq_search_sharded(
+            eng.mesh, qs, eng.index.pq, eng.index.ivf.centroids, eng.slayout,
+            scodes, svecs, k=eng.k, n_probe=eng.n_probe, n_cand=eng.n_cand,
+            use_bbc=eng.use_bbc, m=eng.m, cap_shard=eng.cap_shard,
+            budget=eng.shard_budget, backend=eng.backend)
+
+
+class _IvfRabitqStrategy:
+    """IVF+RaBitQ: bounded estimates -> greedy bounded re-rank."""
+
+    kind = "ivfrabitq"
+
+    def default_n_cand(self, index, k: int) -> int | None:
+        return None
+
+    def search_one(self, eng: "SearchEngine", q: jax.Array):
+        return search_mod.ivf_rabitq_search(
+            eng.index, q, k=eng.k, n_probe=eng.n_probe, use_bbc=eng.use_bbc,
+            m=eng.m)
+
+    def search_batch(self, eng: "SearchEngine", qs: jax.Array):
+        return search_mod.ivf_rabitq_search_batch(
+            eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
+            use_bbc=eng.use_bbc, m=eng.m, backend=eng.backend)
+
+    def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
+        rq = index.rq
+        return (np.asarray(rq.codes)[order], np.asarray(rq.norm_o)[order],
+                np.asarray(rq.f_o)[order], np.asarray(index.vectors)[order])
+
+    def stream_specs(self) -> tuple:
+        return (P("model", None, None), P("model", None),
+                P("model", None), P("model", None, None))
+
+    def search_sharded(self, eng: "SearchEngine", qs: jax.Array):
+        scodes, snorm_o, sf_o, svecs = eng.shard_streams
+        return search_mod.ivf_rabitq_search_sharded(
+            eng.mesh, qs, eng.index.rq.rot, eng.index.ivf.centroids,
+            eng.slayout, scodes, snorm_o, sf_o, svecs, k=eng.k,
+            n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
+            cap_shard=eng.cap_shard, budget=eng.shard_budget,
+            backend=eng.backend)
+
+
+_STRATEGIES = {s.kind: s for s in
+               (_IvfStrategy(), _IvfPqStrategy(), _IvfRabitqStrategy())}
+
+
+def _resolve_strategy(index, vectors):
+    if isinstance(index, search_mod.PQIndex):
+        return _STRATEGIES["ivfpq"], index.ivf
+    if isinstance(index, search_mod.RabitqIndex):
+        return _STRATEGIES["ivfrabitq"], index.ivf
+    if isinstance(index, ivf_mod.IVFIndex):
+        if vectors is None:
+            raise ValueError("kind 'ivf' needs the corpus vectors")
+        return _STRATEGIES["ivf"], index
+    raise TypeError(f"unsupported index type: {type(index)!r}")
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
 @dataclass(frozen=True)
 class SearchEngine:
     index: Any                       # IVFIndex | PQIndex | RabitqIndex
-    layout: ivf_mod.FlatLayout
+    layout: ivf_mod.FlatLayout | None   # single-device stream (None if sharded)
     kind: str                        # "ivf" | "ivfpq" | "ivfrabitq"
     k: int
     n_probe: int
@@ -37,27 +186,51 @@ class SearchEngine:
     m: int = 128
     backend: str | None = None
     vectors: jax.Array | None = None  # required for kind == "ivf"
+    # -- sharded deployment state (all None/unused on a single device) ------
+    mesh: Any = None
+    slayout: ivf_mod.ShardedLayout | None = None
+    cap_shard: int = 1
+    shard_budget: int | None = None
+    shard_streams: tuple = field(default=())
+
+    @property
+    def strategy(self):
+        return _STRATEGIES[self.kind]
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
 
     @staticmethod
     def build(index, k: int, n_probe: int, n_cand: int | None = None,
               use_bbc: bool = True, m: int = 128,
-              backend: str | None = None, vectors=None) -> "SearchEngine":
-        if isinstance(index, search_mod.PQIndex):
-            kind, ivf = "ivfpq", index.ivf
-            if n_cand is None:
-                n_cand = min(8 * k, int(index.vectors.shape[0]))
-        elif isinstance(index, search_mod.RabitqIndex):
-            kind, ivf = "ivfrabitq", index.ivf
-        elif isinstance(index, ivf_mod.IVFIndex):
-            kind, ivf = "ivf", index
-            if vectors is None:
-                raise ValueError("kind 'ivf' needs the corpus vectors")
+              backend: str | None = None, vectors=None,
+              mesh=None, shard_budget: int | None = None) -> "SearchEngine":
+        """Construct a serving engine; ``mesh`` (a 1-D ("model",) device
+        mesh) switches on the sharded deployment — same code path, the
+        corpus stream is partitioned and placed at build time."""
+        strategy, ivf = _resolve_strategy(index, vectors)
+        if n_cand is None:
+            n_cand = strategy.default_n_cand(index, k)
+        layout, slayout, cap_shard, streams = None, None, 1, ()
+        if mesh is None:
+            layout = ivf_mod.flat_layout(ivf)
         else:
-            raise TypeError(f"unsupported index type: {type(index)!r}")
-        layout = ivf_mod.flat_layout(ivf)
-        return SearchEngine(index=index, layout=layout, kind=kind, k=k,
-                            n_probe=n_probe, n_cand=n_cand, use_bbc=use_bbc,
-                            m=m, backend=backend, vectors=vectors)
+            n_shards = mesh.shape["model"]
+            slayout, cap_shard = ivf_mod.sharded_layout(ivf, n_shards)
+            order = np.asarray(slayout.order)          # (S, F) global ids
+            raw = strategy.shard_streams(index, vectors, order)
+            streams = tuple(
+                jax.device_put(s, NamedSharding(mesh, spec))
+                for s, spec in zip(raw, strategy.stream_specs()))
+            slayout = jax.device_put(
+                slayout, NamedSharding(mesh, P("model", None)))
+        return SearchEngine(index=index, layout=layout, kind=strategy.kind,
+                            k=k, n_probe=n_probe, n_cand=n_cand,
+                            use_bbc=use_bbc, m=m, backend=backend,
+                            vectors=vectors, mesh=mesh, slayout=slayout,
+                            cap_shard=cap_shard, shard_budget=shard_budget,
+                            shard_streams=streams)
 
     # -- query-time ---------------------------------------------------------
 
@@ -68,29 +241,13 @@ class SearchEngine:
         return self.search_batch(qs)
 
     def search_batch(self, qs: jax.Array) -> search_mod.SearchResult:
-        if self.kind == "ivfpq":
-            return search_mod.ivf_pq_search_batch(
-                self.index, qs, self.layout, k=self.k, n_probe=self.n_probe,
-                n_cand=self.n_cand, use_bbc=self.use_bbc, m=self.m,
-                backend=self.backend)
-        if self.kind == "ivfrabitq":
-            return search_mod.ivf_rabitq_search_batch(
-                self.index, qs, self.layout, k=self.k, n_probe=self.n_probe,
-                use_bbc=self.use_bbc, m=self.m, backend=self.backend)
-        return search_mod.ivf_search_batch(
-            self.index, self.vectors, qs, self.layout, k=self.k,
-            n_probe=self.n_probe, use_bbc=self.use_bbc, m=self.m,
-            backend=self.backend)
+        if self.sharded:
+            return self.strategy.search_sharded(self, qs)
+        return self.strategy.search_batch(self, qs)
 
     def search_one(self, q: jax.Array) -> search_mod.SearchResult:
-        if self.kind == "ivfpq":
-            return search_mod.ivf_pq_search(
-                self.index, q, k=self.k, n_probe=self.n_probe,
-                n_cand=self.n_cand, use_bbc=self.use_bbc, m=self.m)
-        if self.kind == "ivfrabitq":
-            return search_mod.ivf_rabitq_search(
-                self.index, q, k=self.k, n_probe=self.n_probe,
-                use_bbc=self.use_bbc, m=self.m)
-        return search_mod.ivf_search(
-            self.index, self.vectors, q, k=self.k, n_probe=self.n_probe,
-            use_bbc=self.use_bbc, m=self.m)
+        if self.sharded:
+            # the sharded path is natively batched; serve a singleton batch
+            res = self.strategy.search_sharded(self, q[None])
+            return search_mod.SearchResult(*(x[0] for x in res))
+        return self.strategy.search_one(self, q)

@@ -58,19 +58,29 @@ def route(index: IVFIndex, q: jax.Array, n_probe: int) -> jax.Array:
     return jax.lax.top_k(-d2, n_probe)[1].astype(jnp.int32)
 
 
-def route_batch_d2(index: IVFIndex, qs: jax.Array,
-                   n_probe: int) -> tuple[jax.Array, jax.Array]:
-    """(B, n_probe) nearest-first probed clusters + the (B, C) squared
-    query-centroid distances — one shared routing pass.
+def route_batch_centroids(centroids: jax.Array, qs: jax.Array,
+                          n_probe: int) -> tuple[jax.Array, jax.Array]:
+    """Centroids-level batch routing: (B, n_probe) nearest-first probed
+    clusters + the (B, C) squared query-centroid distances.
 
     Uses the same per-query distance expression as ``route`` (broadcast
     difference, not the norm-identity matmul) so the probed sets match the
     single-query path bit-for-bit; the centroid table is small enough that
     the (B, C, d) broadcast is cheap.  ``d2`` is returned so estimators that
     need the query-centroid norms (RaBitQ) don't rebuild the broadcast.
+    The mesh-sharded searchers call this form directly inside their
+    shard_map bodies (replicated routing) — single-device and sharded paths
+    MUST route identically, so keep this the one implementation.
     """
-    d2 = jnp.sum((index.centroids[None, :, :] - qs[:, None, :]) ** 2, axis=-1)
+    d2 = jnp.sum((centroids[None, :, :] - qs[:, None, :]) ** 2, axis=-1)
     return jax.lax.top_k(-d2, n_probe)[1].astype(jnp.int32), d2
+
+
+def route_batch_d2(index: IVFIndex, qs: jax.Array,
+                   n_probe: int) -> tuple[jax.Array, jax.Array]:
+    """(B, n_probe) probed clusters + (B, C) squared distances — one shared
+    routing pass (see ``route_batch_centroids``)."""
+    return route_batch_centroids(index.centroids, qs, n_probe)
 
 
 def route_batch(index: IVFIndex, qs: jax.Array, n_probe: int) -> jax.Array:
@@ -175,22 +185,95 @@ def tile_positions(layout: FlatLayout, clusters: jax.Array,
     return pos.reshape(b, t * cap), ok.reshape(b, t * cap)
 
 
-def shard_index(index: IVFIndex, n_shards: int) -> list[IVFIndex]:
-    """Row-shard the member table over `model`-axis chips (clusters are
-    scattered round-robin so every chip sees every probed cluster's local
-    slice — balanced scan work per chip)."""
-    cap = index.cap
-    per = cap // n_shards
-    assert per * n_shards == cap, "cap must divide by n_shards (lane-padded)"
-    out = []
-    for s in range(n_shards):
-        sl = slice(s * per, (s + 1) * per)
-        out.append(
-            IVFIndex(
-                centroids=index.centroids,
-                member_ids=index.member_ids[:, sl],
-                member_valid=index.member_valid[:, sl],
-                cluster_sizes=jnp.sum(index.member_valid[:, sl], axis=1).astype(jnp.int32),
-            )
-        )
-    return out
+# --------------------------------------------------------------------------
+# Mesh-sharded layout (distributed search substrate)
+# --------------------------------------------------------------------------
+
+class ShardedLayout(NamedTuple):
+    """Row-sharded partition of the ``FlatLayout`` candidate stream.
+
+    Each cluster's members are dealt round-robin across shards, so every chip
+    holds ~1/S of EVERY cluster — the per-chip scan work is balanced no
+    matter which clusters a query probes, and the global top-k of any probe
+    set spreads evenly over shards (which is what makes a small fixed
+    per-shard survivor budget safe; see ``core.distributed``).
+
+    All arrays are stacked with a leading shard axis so they shard over the
+    mesh's ``model`` axis with ``P("model", None)`` and each chip's block is
+    itself a valid ``FlatLayout`` (same field meanings, global corpus ids):
+
+    ``order``      : (S, F) int32 global corpus ids, cluster-major per shard.
+    ``cluster_of`` : (S, F) int32 owning cluster; ``n_clusters`` on padding.
+    ``offsets``    : (S, C + 1) int32 per-shard cluster start offsets.
+    ``valid``      : (S, F) bool, False on each shard's padding tail.
+
+    Built host-side (offline, like ``flat_layout``); ``cap_shard`` — the max
+    per-shard cluster segment length, needed as a static width by
+    ``tile_positions`` on shard-local layouts — is returned alongside.
+    """
+
+    order: jax.Array
+    cluster_of: jax.Array
+    offsets: jax.Array
+    valid: jax.Array
+
+    @property
+    def n_shards(self) -> int:
+        return self.order.shape[0]
+
+    @property
+    def shard_flat(self) -> int:
+        return self.order.shape[1]
+
+    def local(self, j: int | jax.Array) -> FlatLayout:
+        """Shard j's block as a FlatLayout (use inside shard_map bodies on
+        the squeezed per-shard arrays, or host-side for tests)."""
+        return FlatLayout(order=self.order[j], cluster_of=self.cluster_of[j],
+                          offsets=self.offsets[j], valid=self.valid[j])
+
+
+def sharded_layout(index: IVFIndex, n_shards: int,
+                   lane: int = 128) -> tuple[ShardedLayout, int]:
+    """Partition the member table into ``n_shards`` stream segments
+    (host-side, offline).  Returns ``(layout, cap_shard)``.
+
+    Shard j takes members ``j::n_shards`` of every cluster, preserving the
+    cluster-major order inside each shard, so concatenating the shards'
+    per-cluster segments reconstructs each cluster's member set exactly
+    (asserted by tests/test_sharded.py).
+    """
+    ids = np.asarray(index.member_ids)
+    sizes = np.asarray(index.cluster_sizes).astype(np.int64)
+    n_clusters = ids.shape[0]
+    seg = [[ids[c, : sizes[c]][j::n_shards] for c in range(n_clusters)]
+           for j in range(n_shards)]
+    flat_sizes = [sum(len(s) for s in segs) for segs in seg]
+    f = max(max(flat_sizes), 1)
+    f = ((f + lane - 1) // lane) * lane
+    order = np.zeros((n_shards, f), np.int32)
+    cluster_of = np.full((n_shards, f), n_clusters, np.int32)
+    offsets = np.zeros((n_shards, n_clusters + 1), np.int32)
+    valid = np.zeros((n_shards, f), bool)
+    cap_shard = 1
+    for j in range(n_shards):
+        pos = 0
+        for c in range(n_clusters):
+            s = seg[j][c]
+            offsets[j, c] = pos
+            order[j, pos:pos + len(s)] = s
+            cluster_of[j, pos:pos + len(s)] = c
+            pos += len(s)
+            cap_shard = max(cap_shard, len(s))
+        offsets[j, n_clusters] = pos
+        valid[j, :pos] = True
+    return (
+        ShardedLayout(
+            order=jnp.asarray(order),
+            cluster_of=jnp.asarray(cluster_of),
+            offsets=jnp.asarray(offsets),
+            valid=jnp.asarray(valid),
+        ),
+        int(cap_shard),
+    )
+
+

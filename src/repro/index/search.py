@@ -34,8 +34,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import buffer as rb
 from repro.core import collector as col
+from repro.core import distributed as dist
 from repro.core import rerank
 from repro.index import ivf as ivf_mod
 from repro.index import pq as pq_mod
@@ -540,31 +543,30 @@ def ivf_pq_search_batch(
                         n_early + second, second)
 
 
-def _rabitq_batch_bounds(index: RabitqIndex, layout: ivf_mod.FlatLayout,
-                         qs: jax.Array, lane_valid: jax.Array, eps0: float,
-                         d2: jax.Array):
-    """Batched RaBitQ estimator over the shared stream.
+def _rabitq_bounds_stream(codes_s: jax.Array, norm_o: jax.Array,
+                          f_o: jax.Array, cl: jax.Array,
+                          centroids: jax.Array, rot: jax.Array,
+                          qs: jax.Array, d2: jax.Array,
+                          lane_valid: jax.Array, eps0: float):
+    """Batched RaBitQ estimator over a candidate stream (shared by the
+    single-device and mesh-sharded paths — a shard's local stream is just a
+    shorter stream).
 
     The per-(query, cluster) rotated residual decomposes as
     ``P(q - c) = Pq - Pc``, so the code inner products for every query are
-    ONE (n_flat, d) x (d, B) matmul plus a per-lane centroid correction —
+    ONE (n_stream, d) x (d, B) matmul plus a per-lane centroid correction —
     the batched-native form of ``rabitq.query_factors`` + ``estimate``
     (mathematically identical; floating-point association differs from the
     per-cluster matvec of the single-query path).  ``d2`` is the (B, C)
-    squared query-centroid distance matrix the routing pass already built.
+    squared query-centroid distance matrix the routing pass already built;
+    ``cl`` maps each stream lane to its (clamped) owning cluster.
     """
-    rq = index.rq
-    ivf = index.ivf
-    codes_s = rq.codes[layout.order].astype(jnp.float32)      # (n_flat, d)
-    norm_o = rq.norm_o[layout.order]
-    f_o = rq.f_o[layout.order]
-    cl = jnp.minimum(layout.cluster_of, ivf.n_clusters - 1)
-    g = qs @ rq.rot.T                                         # (B, d) = Pq
-    h = ivf.centroids @ rq.rot.T                              # (C, d) = Pc
-    s1 = codes_s @ g.T                                        # (n_flat, B)
-    s2 = jnp.sum(codes_s * h[cl], axis=1)                     # (n_flat,)
+    g = qs @ rot.T                                            # (B, d) = Pq
+    h = centroids @ rot.T                                     # (C, d) = Pc
+    s1 = codes_s @ g.T                                        # (n_stream, B)
+    s2 = jnp.sum(codes_s * h[cl], axis=1)                     # (n_stream,)
     nq = jnp.sqrt(d2)                                         # (B, C) norm_q
-    nq_lane = nq[:, cl]                                       # (B, n_flat)
+    nq_lane = nq[:, cl]                                       # (B, n_stream)
     d = codes_s.shape[1]
     xv = (s1.T - s2[None, :]) / (
         jnp.sqrt(jnp.float32(d)) * jnp.maximum(nq_lane, 1e-12))
@@ -579,6 +581,22 @@ def _rabitq_batch_bounds(index: RabitqIndex, layout: ivf_mod.FlatLayout,
     bad = ~lane_valid
     return (jnp.where(bad, INF, est), jnp.where(bad, INF, lb),
             jnp.where(bad, INF, ub))
+
+
+def _rabitq_batch_bounds(index: RabitqIndex, layout: ivf_mod.FlatLayout,
+                         qs: jax.Array, lane_valid: jax.Array, eps0: float,
+                         d2: jax.Array):
+    """Batched RaBitQ bounds over the single-device shared stream (see
+    ``_rabitq_bounds_stream``)."""
+    rq = index.rq
+    ivf = index.ivf
+    return _rabitq_bounds_stream(
+        codes_s=rq.codes[layout.order].astype(jnp.float32),
+        norm_o=rq.norm_o[layout.order],
+        f_o=rq.f_o[layout.order],
+        cl=jnp.minimum(layout.cluster_of, ivf.n_clusters - 1),
+        centroids=ivf.centroids, rot=rq.rot, qs=qs, d2=d2,
+        lane_valid=lane_valid, eps0=eps0)
 
 
 @functools.partial(
@@ -664,3 +682,310 @@ def ivf_rabitq_search_batch(
     )(plan, exact_flat, jnp.where(lane_valid, lb, INF), est)
     n_evals = jnp.sum(plan.rerank_mask, axis=1).astype(jnp.int32)
     return SearchResult(res.topk_dists, res.topk_ids, n_evals, n_evals)
+
+
+# --------------------------------------------------------------------------
+# Mesh-sharded searchers (corpus row-sharded over the mesh's 'model' axis)
+# --------------------------------------------------------------------------
+#
+# The corpus stream is partitioned by ``ivf.sharded_layout`` (round-robin
+# within each cluster) and the per-shard stream tensors (vectors / PQ codes /
+# RaBitQ codes) are materialized offline with a leading shard axis, so under
+# ``shard_map`` each chip scans ONLY its own rows.  One search step per batch:
+#
+#   1. replicated routing matmul (every chip computes the same probe sets),
+#   2. per-shard fused scan over the local stream (the same ops.* kernels the
+#      single-device batched path runs — a shard's stream is just shorter),
+#   3. per-query local (m+1)-histograms; ``psum`` over 'model'
+#      <- (m+1)*4 bytes per query, NOT k*8,
+#   4. relaxed-threshold survivor compaction to a fixed per-shard budget
+#      (~count/S * slack, key-priority),
+#   5. exact re-rank of local survivors ON the shard that owns their rows
+#      (the distributed analogue of Alg. 4's "compute exact while the vector
+#      tile is hot": survivor vectors never cross the interconnect),
+#   6. ``all_gather`` of survivors only, final replicated selection.
+#
+# ``use_bbc=False`` selects the naive distributed collector baseline: every
+# shard maintains and gathers a full local top-k (k*8 bytes per shard on the
+# wire), the quantity ``core.distributed.collective_cost_model`` prices.
+
+SHARD_AXIS = "model"
+
+_LAYOUT_SPEC = P(SHARD_AXIS, None)       # every ShardedLayout leaf: (S, ...)
+_STREAM2_SPEC = P(SHARD_AXIS, None)          # (S, F) stream scalars
+_STREAM3_SPEC = P(SHARD_AXIS, None, None)    # (S, F, d) stream tensors
+
+
+def _shard_budget(budget: int | None, count: int, mesh, shard_flat: int,
+                  slack: float) -> int:
+    if budget is None:
+        budget = dist.survivor_budget(count, mesh.shape[SHARD_AXIS],
+                                      slack=slack)
+    return max(8, min(budget, shard_flat))
+
+
+def _local_block(sl: ivf_mod.ShardedLayout) -> ivf_mod.FlatLayout:
+    """Inside a shard_map body the ShardedLayout arrives as a (1, ...) block;
+    squeeze it into this shard's FlatLayout view."""
+    return ivf_mod.FlatLayout(order=sl.order[0], cluster_of=sl.cluster_of[0],
+                              offsets=sl.offsets[0], valid=sl.valid[0])
+
+
+def _local_routing(centroids: jax.Array, qs: jax.Array, n_probe: int):
+    """Replicated routing (identical on every shard): the same
+    implementation the single-device path routes with, so probe sets match
+    bit-for-bit."""
+    return ivf_mod.route_batch_centroids(centroids, qs, n_probe)
+
+
+def _exact_at_positions(svecs: jax.Array, qs: jax.Array, pos: jax.Array,
+                        ok: jax.Array) -> jax.Array:
+    """Per-query exact distances for (B, w) local stream positions (the
+    budget-sized survivor sets; INF where not ok)."""
+
+    def one(a):
+        p, o, q = a
+        v = svecs[jnp.where(o, p, 0)]
+        d = jnp.sqrt(jnp.maximum(
+            jnp.sum(v * v, -1) - 2.0 * (v @ q) + jnp.sum(q * q), 0.0))
+        return jnp.where(o, d, INF)
+
+    return jax.lax.map(one, (pos, ok, qs))
+
+
+def _sharded_codebooks(layout: ivf_mod.FlatLayout, probed: jax.Array,
+                       vals: jax.Array, st: int, cap_shard: int, k_cb: int,
+                       m: int):
+    """Per-query codebooks from the nearest ``st`` probed clusters, gathered
+    across shards.  Each shard contributes its slice of those clusters; the
+    union is exactly their full membership, so the codebook sees the same
+    sample population as the single-device batched path (order differs,
+    which build_codebook's top-k absorbs).  The gather is small: st * cap
+    lanes per query, the codebook-sample prefix only."""
+    spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], cap_shard)
+    s_local = jnp.where(sok, jnp.take_along_axis(vals, spos, axis=1), INF)
+    (sample,) = dist.gather_survivors(SHARD_AXIS, s_local)
+    k_cb = min(k_cb, sample.shape[1])
+    return jax.vmap(lambda s: rb.build_codebook(s, k=k_cb, m=m))(sample)
+
+
+def _naive_local_topk(vals: jax.Array, layout: ivf_mod.FlatLayout, k: int):
+    """Naive distributed collector's local half: full top-k per shard."""
+    kk = min(k, vals.shape[1])
+    neg, pos = jax.lax.top_k(-vals, kk)
+    ok = jnp.isfinite(-neg)
+    gids = jnp.where(ok, layout.order[pos], -1)
+    return pos, ok, gids
+
+
+def _final_topk(gd: jax.Array, gi: jax.Array, k: int):
+    """Replicated final selection over the gathered survivors."""
+    neg, order = jax.lax.top_k(-gd, k)
+    d = -neg
+    i = jnp.where(jnp.isfinite(d), jnp.take_along_axis(gi, order, axis=1), -1)
+    return d, i
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "k", "n_probe", "use_bbc", "m", "cap_shard",
+                     "budget", "backend"))
+def ivf_search_sharded(
+    mesh,
+    qs: jax.Array,                   # (B, d) replicated
+    centroids: jax.Array,            # (C, d) replicated
+    slayout: ivf_mod.ShardedLayout,  # (S, ...) sharded over 'model'
+    svecs: jax.Array,                # (S, F, d) sharded stream vectors
+    k: int,
+    n_probe: int,
+    use_bbc: bool = True,
+    m: int = 128,
+    cap_shard: int = 1,
+    budget: int | None = None,
+    backend: str | None = None,
+) -> SearchResult:
+    """Sharded batched IVF (exact distances in-scan)."""
+    n_clusters = centroids.shape[0]
+    shard_flat = svecs.shape[1]
+    bud = _shard_budget(budget, k, mesh, shard_flat, slack=2.0)
+
+    def body(qs, cent, sl, vecs):
+        layout = _local_block(sl)
+        vecs = vecs[0]
+        probed, _ = _local_routing(cent, qs, n_probe)
+        lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
+        dists = ops.l2_exact_batch(vecs, qs, backend=backend)
+        dv = jnp.where(lane_valid, dists, INF)
+        n = jax.lax.psum(jnp.sum(lane_valid, axis=1), SHARD_AXIS)
+        if use_bbc:
+            st = min(4, n_probe)
+            cbs = _sharded_codebooks(layout, probed, dv, st, cap_shard, k, m)
+            bucket, hist = ops.bucket_hist_batch(
+                dv, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+                backend=backend)
+            pos, ok, _, _ = dist.bbc_survivors_batch(
+                bucket, dv, lane_valid, hist, k, bud, SHARD_AXIS)
+            sd = jnp.where(ok, jnp.take_along_axis(dv, pos, axis=1), INF)
+            gids = jnp.where(ok, layout.order[pos], -1)
+        else:
+            pos, ok, gids = _naive_local_topk(dv, layout, k)
+            sd = jnp.where(ok, jnp.take_along_axis(dv, pos, axis=1), INF)
+        gd, gi = dist.gather_survivors(SHARD_AXIS, sd, gids)
+        d, i = _final_topk(gd, gi, k)
+        return d, i, n.astype(jnp.int32)
+
+    fn = dist.shard_map(
+        body, mesh,
+        in_specs=(P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC),
+        out_specs=(P(), P(), P()))
+    d, i, n = fn(qs, centroids, slayout, svecs)
+    return SearchResult(d, i, n, jnp.zeros_like(n))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "k", "n_probe", "n_cand", "use_bbc", "m",
+                     "cap_shard", "budget", "backend"))
+def ivf_pq_search_sharded(
+    mesh,
+    qs: jax.Array,
+    pq_cb: pq_mod.PQCodebook,        # replicated codebook
+    centroids: jax.Array,
+    slayout: ivf_mod.ShardedLayout,
+    scodes: jax.Array,               # (S, F, M) sharded PQ codes
+    svecs: jax.Array,                # (S, F, d) sharded re-rank vectors
+    k: int,
+    n_probe: int,
+    n_cand: int,
+    use_bbc: bool = True,
+    m: int = 128,
+    cap_shard: int = 1,
+    budget: int | None = None,
+    backend: str | None = None,
+) -> SearchResult:
+    """Sharded batched IVF+PQ.
+
+    BBC path: the histogram collective runs at ``n_cand`` granularity (the
+    selection the single-device path makes by estimate), survivors are
+    exact-re-ranked on their owning shard, and the final replicated pass
+    re-applies the top-``n_cand``-by-estimate cut before the top-k by exact
+    distance — the same selection semantics as ``ivf_pq_search_batch``.
+    Naive path: each shard maintains a full local top-k by estimate and
+    gathers k (dist, id) pairs (plus its local exact re-rank)."""
+    n_clusters = centroids.shape[0]
+    shard_flat = svecs.shape[1]
+    bud = _shard_budget(budget, n_cand, mesh, shard_flat, slack=2.0)
+
+    def body(qs, cb, cent, sl, codes, vecs):
+        layout = _local_block(sl)
+        codes, vecs = codes[0], vecs[0]
+        probed, _ = _local_routing(cent, qs, n_probe)
+        lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
+        luts = jax.vmap(lambda q: pq_mod.adc_table(cb, q))(qs)
+        est2 = ops.pq_adc_batch(codes, luts, backend=backend)
+        est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
+        if use_bbc:
+            st = min(4, n_probe)
+            cbs = _sharded_codebooks(layout, probed, est, st, cap_shard,
+                                     n_cand, m)
+            bucket, hist = ops.bucket_hist_batch(
+                est, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+                backend=backend)
+            pos, ok, _, _ = dist.bbc_survivors_batch(
+                bucket, est, lane_valid, hist, n_cand, bud, SHARD_AXIS)
+        else:
+            pos, ok, _ = _naive_local_topk(est, layout, k)
+        sel_est = jnp.where(ok, jnp.take_along_axis(est, pos, axis=1), INF)
+        ex = _exact_at_positions(vecs, qs, pos, ok)
+        gids = jnp.where(ok, layout.order[pos], -1)
+        n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
+        ge, gx, gi = dist.gather_survivors(SHARD_AXIS, sel_est, ex, gids)
+        if use_bbc:
+            # replicated n_cand-by-estimate cut, then top-k by exact — the
+            # same two-stage selection the single-device batched path makes.
+            ncs = min(n_cand, ge.shape[1])
+            nege, osel = jax.lax.top_k(-ge, ncs)
+            keep = jnp.isfinite(-nege)
+            gx = jnp.where(keep, jnp.take_along_axis(gx, osel, axis=1), INF)
+            gi = jnp.where(keep, jnp.take_along_axis(gi, osel, axis=1), -1)
+        d, i = _final_topk(gx, gi, k)
+        return d, i, n_rr.astype(jnp.int32)
+
+    fn = dist.shard_map(
+        body, mesh,
+        in_specs=(P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM3_SPEC),
+        out_specs=(P(), P(), P()))
+    d, i, n_rr = fn(qs, pq_cb, centroids, slayout, scodes, svecs)
+    return SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "k", "n_probe", "use_bbc", "m", "eps0",
+                     "cap_shard", "budget", "backend"))
+def ivf_rabitq_search_sharded(
+    mesh,
+    qs: jax.Array,
+    rot: jax.Array,                  # (d, d) replicated rotation
+    centroids: jax.Array,
+    slayout: ivf_mod.ShardedLayout,
+    scodes: jax.Array,               # (S, F, d) sharded ±1 codes
+    snorm_o: jax.Array,              # (S, F)
+    sf_o: jax.Array,                 # (S, F)
+    svecs: jax.Array,                # (S, F, d) sharded re-rank vectors
+    k: int,
+    n_probe: int,
+    use_bbc: bool = True,
+    m: int = 128,
+    eps0: float = 3.0,
+    cap_shard: int = 1,
+    budget: int | None = None,
+    backend: str | None = None,
+) -> SearchResult:
+    """Sharded batched IVF+RaBitQ.
+
+    BBC path: the codebook is built from upper bounds, the histogram
+    collective thresholds the UB distribution at k (tau_ub), and a lane
+    survives iff its LOWER bound bucketizes at or below tau_ub — the
+    distributed form of Alg. 3's certainly-out test (lb above the relaxed
+    k-th-ub threshold means at least k objects are surely closer).  Survivors
+    are exact-re-ranked on their shard; the gathered top-k by exact distance
+    therefore equals the single-device result set."""
+    n_clusters = centroids.shape[0]
+    shard_flat = svecs.shape[1]
+    bud = _shard_budget(budget, k, mesh, shard_flat, slack=4.0)
+
+    def body(qs, rot, cent, sl, codes, norm_o, f_o, vecs):
+        layout = _local_block(sl)
+        codes, norm_o, f_o, vecs = codes[0], norm_o[0], f_o[0], vecs[0]
+        probed, d2 = _local_routing(cent, qs, n_probe)
+        lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
+        cl = jnp.minimum(layout.cluster_of, n_clusters - 1)
+        est, lb, ub = _rabitq_bounds_stream(
+            codes.astype(jnp.float32), norm_o, f_o, cl, cent, rot, qs, d2,
+            lane_valid, eps0)
+        if use_bbc:
+            st = min(4, n_probe)
+            cbs = _sharded_codebooks(layout, probed, ub, st, cap_shard, k, m)
+            _, hist_ub = ops.bucket_hist_batch(
+                ub, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+                backend=backend)
+            bucket_lb = jax.vmap(rb.bucketize)(cbs, lb)
+            pos, ok, _, _ = dist.bbc_survivors_batch(
+                bucket_lb, lb, lane_valid, hist_ub, k, bud, SHARD_AXIS)
+        else:
+            pos, ok, _ = _naive_local_topk(est, layout, k)
+        ex = _exact_at_positions(vecs, qs, pos, ok)
+        gids = jnp.where(ok, layout.order[pos], -1)
+        n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
+        gx, gi = dist.gather_survivors(SHARD_AXIS, ex, gids)
+        d, i = _final_topk(gx, gi, k)
+        return d, i, n_rr.astype(jnp.int32)
+
+    fn = dist.shard_map(
+        body, mesh,
+        in_specs=(P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM2_SPEC,
+                  _STREAM2_SPEC, _STREAM3_SPEC),
+        out_specs=(P(), P(), P()))
+    d, i, n_rr = fn(qs, rot, centroids, slayout, scodes, snorm_o, sf_o, svecs)
+    return SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))

@@ -10,6 +10,7 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
 
 SCRIPT = textwrap.dedent(
     """
@@ -74,6 +75,7 @@ SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_distributed_bbc_search():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
