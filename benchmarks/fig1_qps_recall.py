@@ -3,42 +3,39 @@
 Validates: (1) BBC speeds up both quantized methods at large k; (2) the gain
 grows with k; (3) no regression at small k (paper observation Exp-1(4)).
 
-Runs on the batched engine: each method processes the whole query set in one
-``*_batch`` call over the shared candidate stream (the serving
-configuration), so the reported QPS is batch-amortized; recall is averaged
-over the same batched results.  BFC stays per-query (no batched path — it is
-the brute-force floor).
+Runs on ``engine.SearchEngine`` — the same serving wrapper launch/serve.py
+uses — so the figure measures the production entry point, not a bench-local
+call path: each method processes the whole query set in one batched engine
+call over the shared candidate stream (QPS is batch-amortized; recall is
+averaged over the same batched results).  BFC stays per-query (no batched
+path — it is the brute-force floor).
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks import common
-from repro.index import flat, ivf as ivf_mod, search
+from repro.index import flat
 
 
 def run(ks=(100, 2000), n_probes=(24, 48)):
     x, qs = common.corpus()
-    layout = ivf_mod.flat_layout(common.pq_index().ivf)
-    rq_layout = ivf_mod.flat_layout(common.rq_index().ivf)
     results = []
     for k in ks:
         gt_d, gt_i = common.ground_truth(k)
         n_cand = min(8 * k, common.N)
         for n_probe in n_probes:
             methods = {
-                "ivf+pq": lambda Q: search.ivf_pq_search_batch(
-                    common.pq_index(), Q, layout, k=k, n_probe=n_probe,
-                    n_cand=n_cand),
-                "ivf+pq+bbc": lambda Q: search.ivf_pq_search_batch(
-                    common.pq_index(), Q, layout, k=k, n_probe=n_probe,
-                    n_cand=n_cand, use_bbc=True),
-                "ivf+rabitq": lambda Q: search.ivf_rabitq_search_batch(
-                    common.rq_index(), Q, rq_layout, k=k, n_probe=n_probe),
-                "ivf+rabitq+bbc": lambda Q: search.ivf_rabitq_search_batch(
-                    common.rq_index(), Q, rq_layout, k=k, n_probe=n_probe,
-                    use_bbc=True),
+                "ivf+pq": common.engine_for(
+                    "ivfpq", k=k, n_probe=n_probe, n_cand=n_cand,
+                    use_bbc=False).search,
+                "ivf+pq+bbc": common.engine_for(
+                    "ivfpq", k=k, n_probe=n_probe, n_cand=n_cand,
+                    use_bbc=True).search,
+                "ivf+rabitq": common.engine_for(
+                    "ivfrabitq", k=k, n_probe=n_probe, use_bbc=False).search,
+                "ivf+rabitq+bbc": common.engine_for(
+                    "ivfrabitq", k=k, n_probe=n_probe, use_bbc=True).search,
             }
             for name, fn in methods.items():
                 t = common.timeit(lambda: fn(qs)) / qs.shape[0]  # per query

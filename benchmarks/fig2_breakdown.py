@@ -7,10 +7,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
-from repro.core import buffer as rb
 from repro.core import collector as col
 from repro.index import ivf as ivf_mod
 from repro.index import pq as pq_mod

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.data import synthetic
 from repro.index import search
 from repro.models import model as model_mod
 

@@ -135,6 +135,6 @@ class CheckpointManager:
                 lambda x, s: jax.device_put(x, s), tree, shardings)
         else:
             tree = jax.tree.map(
-                lambda x, l: jax.numpy.asarray(x, dtype=getattr(l, "dtype", None)),
+                lambda x, like: jax.numpy.asarray(x, dtype=getattr(like, "dtype", None)),
                 tree, like)
         return tree, step

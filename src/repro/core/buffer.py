@@ -111,6 +111,18 @@ def build_codebook_from_topk(
     distances.  Split out of ``build_codebook`` so callers that need the
     top-k values for other purposes (e.g. order-statistic threshold buckets
     in the batched planner) run the selection once."""
+    # Sanitize +inf entries (under-filled samples: fewer valid lanes than the
+    # requested top-k) — an infinite d_max makes delta infinite and every
+    # distance lands in bucket 0, collapsing the histogram.  Clamp the range
+    # to the largest finite value instead; the padding lanes then sit on the
+    # top edge, which only widens the last bucket.
+    finite = jnp.isfinite(topk)
+    top_finite = jnp.max(jnp.where(finite, topk, -INF))
+    # zero valid lanes (an empty shard's sample): fall back to a degenerate
+    # all-zero range — the span guard below keeps delta finite, and the
+    # histogram stays empty anyway because counts are valid-masked
+    top_finite = jnp.where(jnp.isfinite(top_finite), top_finite, 0.0)
+    topk = jnp.where(finite, topk, top_finite)
     d_min = topk[0]
     d_max = topk[-1]
     # Guard degenerate ranges (all-equal distances / tiny samples) and keep a

@@ -20,12 +20,10 @@ roofline table.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import buffer as rb
 
@@ -117,7 +115,8 @@ def bbc_survivors_batch(
     count: int,          # global selection size (k, or n_cand for IVF+PQ)
     budget: int,         # static per-shard survivor budget
     axis_name: str = "model",
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    tau_floor: jax.Array | None = None,  # scalar int32 predicted threshold
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Batched core of the distributed BBC collector (call under shard_map).
 
     THE collective is the ``psum`` of (B, m+1) int32 histograms — m counters
@@ -130,17 +129,27 @@ def bbc_survivors_batch(
     long as no single shard owns more than ``budget`` of it (round-robin
     sharding makes shares ~count/S; see ``survivor_budget``).
 
-    Returns ``(pos, ok, tau, n_survive)``: local survivor stream positions
-    (B, budget) with validity, the per-query threshold bucket (B,), and this
-    shard's per-query survivor count (B,) before budgeting.
+    ``tau_floor`` is the predictive subsystem's hook: the engine-owned
+    cross-batch predictor supplies its tau_pred and the survivor threshold
+    becomes max(tau, tau_floor), so a shard whose scan already early-exacted
+    the predicted buckets keeps those lanes even when this batch's true tau
+    lands lower (overshoot only widens the pool — the final exact top-k is
+    unchanged; undershoot is a no-op because tau dominates).
+
+    Returns ``(pos, ok, tau, n_survive, global_hist)``: local survivor stream
+    positions (B, budget) with validity, the per-query threshold bucket (B,),
+    this shard's per-query survivor count (B,) before budgeting, and the
+    psum'd (B, m+1) histogram (replicated — the predictor's update input).
     """
     global_hist = jax.lax.psum(hist, axis_name)
     tau, _ = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(
         global_hist, count)
+    if tau_floor is not None:
+        tau = jnp.maximum(tau, tau_floor)
     survive = valid & (bucket <= tau[:, None])
     masked = jnp.where(survive, key, INF)
     neg, pos = jax.lax.top_k(-masked, budget)
-    return pos, jnp.isfinite(-neg), tau, jnp.sum(survive, axis=1)
+    return pos, jnp.isfinite(-neg), tau, jnp.sum(survive, axis=1), global_hist
 
 
 def gather_survivors(axis_name: str, *rows: jax.Array) -> tuple[jax.Array, ...]:

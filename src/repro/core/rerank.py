@@ -405,3 +405,88 @@ def update_tau_pred(
     kth = -jax.lax.top_k(-s, rank)[0][-1]
     tau_pred = rb.bucketize(plan.cb, kth[None])[0]
     return EarlyRerankPlan(tau_pred=tau_pred, cb=plan.cb)
+
+
+# --------------------------------------------------------------------------
+# Cross-batch threshold prediction (the predictive early-exact subsystem)
+# --------------------------------------------------------------------------
+#
+# Alg. 4 predicts tau from the scan prefix of the CURRENT query.  The serving
+# engine sees a stream of query batches whose distance distributions are
+# stationary (same corpus, i.i.d. queries), so a better predictor is the
+# exponential moving average of the per-query bucket histograms of PREVIOUS
+# batches: the per-query codebooks are equal-depth over samples of the same
+# distribution, which makes bucket indices comparable across batches, and the
+# EMA'd histogram directly yields the bucket where the cumulative count
+# reaches any target (k for bounded methods, the re-rank pool size for PQ).
+#
+# The prediction is advisory, never load-bearing: searchers take
+# max(tau_pred, tau_true-from-this-batch's-histogram) as the survivor
+# threshold, and survivors the prediction missed (bucket in
+# (tau_pred, tau_true]) are re-ranked in a fallback pass exactly as the
+# static path would — an undershooting predictor costs speed, not results.
+
+class PredictorState(NamedTuple):
+    """EMA over psum'd/batched (B, m+1) bucket histograms.
+
+    ``ema``    : (m + 1,) float32 decayed sum of mean per-query histograms.
+    ``weight`` : scalar float32 decayed sum of 1s (bias correction; 0 = cold,
+                 no batches observed yet — predictions are disabled).
+    """
+
+    ema: jax.Array
+    weight: jax.Array
+
+
+def predictor_init(m: int) -> PredictorState:
+    return PredictorState(ema=jnp.zeros((m + 1,), jnp.float32),
+                          weight=jnp.float32(0.0))
+
+
+def predictor_update(state: PredictorState, hist: jax.Array,
+                     decay: float = 0.8) -> PredictorState:
+    """Fold one batch's histograms into the EMA.
+
+    ``hist`` is (B, m+1) int32 (batched paths) or (m+1,) (single query); the
+    sharded paths pass the psum'd global histogram, so the EMA tracks the
+    whole corpus regardless of deployment.
+    """
+    mean = jnp.mean(hist.reshape(-1, hist.shape[-1]).astype(jnp.float32),
+                    axis=0)
+    return PredictorState(
+        ema=decay * state.ema + (1.0 - decay) * mean,
+        weight=decay * state.weight + (1.0 - decay),
+    )
+
+
+def predict_tau(state: PredictorState, count: int,
+                margin: int = 1) -> jax.Array:
+    """Predicted threshold bucket: first bucket whose bias-corrected
+    cumulative EMA count reaches ``count``, plus ``margin`` buckets of slack
+    against batch-to-batch jitter.  Returns -1 while cold (no history) so the
+    scan computes nothing inline and the fallback pass covers everything —
+    the first batch behaves exactly like the static path.
+    """
+    m = state.ema.shape[0] - 1
+    corrected = state.ema / jnp.maximum(state.weight, 1e-12)
+    cum = jnp.cumsum(corrected[:m])
+    tau = jnp.searchsorted(cum, jnp.float32(count),
+                           side="left").astype(jnp.int32)
+    tau = jnp.minimum(tau + margin, m - 1)
+    return jnp.where(state.weight > 0, tau, jnp.int32(-1))
+
+
+def predicted_fallback_mask(bucket: jax.Array, valid: jax.Array,
+                            tau_pred: jax.Array,
+                            tau_true: jax.Array) -> jax.Array:
+    """Fallback-pass plan: survivors the prediction missed.
+
+    A lane survives iff its bucket is at or below max(tau_pred, tau_true);
+    lanes at or below tau_pred were early-exacted inline during the scan, so
+    the second gather pass only needs bucket in (tau_pred, tau_true] — empty
+    whenever the prediction covered the true threshold (tau_pred >= tau_true).
+    ``tau_pred``/``tau_true`` broadcast over the trailing lane axis.
+    """
+    tau_used = jnp.maximum(tau_pred, tau_true)
+    return valid & (bucket > tau_pred[..., None]) & \
+        (bucket <= tau_used[..., None])

@@ -26,6 +26,17 @@ each chip holds and scans only its rows; queries run the distributed BBC
 collector (histogram ``psum`` + survivor-only ``all_gather``; see
 ``core.distributed`` and the sharded searchers in ``index.search``).
 
+Predictive serving (the cross-batch tau_pred subsystem) is a call-time
+switch: thread a ``rerank.PredictorState`` through the search calls and the
+engine self-tunes its re-rank threshold from the bucket histograms of
+previous batches —
+
+    state = eng.predictor_init()
+    res, state = eng.search(qs, pred_state=state)   # every entry point
+
+works identically on the single, batched, and sharded deployments (the
+sharded paths feed the psum'd global histogram into the same state).
+
 The layout (and the one-time host-side packing it needs) is computed once at
 engine construction, so steady-state serving is one jit-compiled call per
 batch shape.  The engine is deliberately thin: all numerics live in
@@ -40,6 +51,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import rerank
 from repro.index import ivf as ivf_mod
 from repro.index import search as search_mod
 
@@ -56,16 +68,22 @@ class _IvfStrategy:
     def default_n_cand(self, index, k: int) -> int | None:
         return None
 
+    def default_pred_count(self, k: int, n_cand: int | None) -> int:
+        # distances are exact in-scan: the pool target is k itself
+        return k
+
     def search_one(self, eng: "SearchEngine", q: jax.Array):
         return search_mod.ivf_search(
             eng.index, eng.vectors, q, k=eng.k, n_probe=eng.n_probe,
             use_bbc=eng.use_bbc, m=eng.m)
 
-    def search_batch(self, eng: "SearchEngine", qs: jax.Array):
+    def search_batch(self, eng: "SearchEngine", qs: jax.Array,
+                     pred_state=None):
         return search_mod.ivf_search_batch(
             eng.index, eng.vectors, qs, eng.layout, k=eng.k,
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
-            backend=eng.backend)
+            backend=eng.backend, pred_state=pred_state,
+            pred_count=eng.pred_count)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         return (np.asarray(vectors)[order],)
@@ -73,13 +91,15 @@ class _IvfStrategy:
     def stream_specs(self) -> tuple:
         return (P("model", None, None),)
 
-    def search_sharded(self, eng: "SearchEngine", qs: jax.Array):
+    def search_sharded(self, eng: "SearchEngine", qs: jax.Array,
+                       pred_state=None):
         (svecs,) = eng.shard_streams
         return search_mod.ivf_search_sharded(
             eng.mesh, qs, eng.index.centroids, eng.slayout, svecs, k=eng.k,
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
             cap_shard=eng.cap_shard, budget=eng.shard_budget,
-            backend=eng.backend)
+            backend=eng.backend, pred_state=pred_state,
+            pred_count=eng.pred_count)
 
 
 class _IvfPqStrategy:
@@ -90,16 +110,21 @@ class _IvfPqStrategy:
     def default_n_cand(self, index, k: int) -> int | None:
         return min(8 * k, int(index.vectors.shape[0]))
 
+    def default_pred_count(self, k: int, n_cand: int | None) -> int:
+        return search_mod._resolve_pred_count(None, k, n_cand)
+
     def search_one(self, eng: "SearchEngine", q: jax.Array):
         return search_mod.ivf_pq_search(
             eng.index, q, k=eng.k, n_probe=eng.n_probe, n_cand=eng.n_cand,
             use_bbc=eng.use_bbc, m=eng.m)
 
-    def search_batch(self, eng: "SearchEngine", qs: jax.Array):
+    def search_batch(self, eng: "SearchEngine", qs: jax.Array,
+                     pred_state=None):
         return search_mod.ivf_pq_search_batch(
             eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
             n_cand=eng.n_cand, use_bbc=eng.use_bbc, m=eng.m,
-            backend=eng.backend)
+            backend=eng.backend, pred_state=pred_state,
+            pred_count=eng.pred_count)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         return (np.asarray(index.codes)[order],
@@ -108,13 +133,15 @@ class _IvfPqStrategy:
     def stream_specs(self) -> tuple:
         return (P("model", None, None), P("model", None, None))
 
-    def search_sharded(self, eng: "SearchEngine", qs: jax.Array):
+    def search_sharded(self, eng: "SearchEngine", qs: jax.Array,
+                       pred_state=None):
         scodes, svecs = eng.shard_streams
         return search_mod.ivf_pq_search_sharded(
             eng.mesh, qs, eng.index.pq, eng.index.ivf.centroids, eng.slayout,
             scodes, svecs, k=eng.k, n_probe=eng.n_probe, n_cand=eng.n_cand,
             use_bbc=eng.use_bbc, m=eng.m, cap_shard=eng.cap_shard,
-            budget=eng.shard_budget, backend=eng.backend)
+            budget=eng.shard_budget, backend=eng.backend,
+            pred_state=pred_state, pred_count=eng.pred_count)
 
 
 class _IvfRabitqStrategy:
@@ -125,15 +152,21 @@ class _IvfRabitqStrategy:
     def default_n_cand(self, index, k: int) -> int | None:
         return None
 
+    def default_pred_count(self, k: int, n_cand: int | None) -> int:
+        # the band is anchored at the k-th upper bound
+        return k
+
     def search_one(self, eng: "SearchEngine", q: jax.Array):
         return search_mod.ivf_rabitq_search(
             eng.index, q, k=eng.k, n_probe=eng.n_probe, use_bbc=eng.use_bbc,
             m=eng.m)
 
-    def search_batch(self, eng: "SearchEngine", qs: jax.Array):
+    def search_batch(self, eng: "SearchEngine", qs: jax.Array,
+                     pred_state=None):
         return search_mod.ivf_rabitq_search_batch(
             eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
-            use_bbc=eng.use_bbc, m=eng.m, backend=eng.backend)
+            use_bbc=eng.use_bbc, m=eng.m, backend=eng.backend,
+            pred_state=pred_state, pred_count=eng.pred_count)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         rq = index.rq
@@ -144,14 +177,16 @@ class _IvfRabitqStrategy:
         return (P("model", None, None), P("model", None),
                 P("model", None), P("model", None, None))
 
-    def search_sharded(self, eng: "SearchEngine", qs: jax.Array):
+    def search_sharded(self, eng: "SearchEngine", qs: jax.Array,
+                       pred_state=None):
         scodes, snorm_o, sf_o, svecs = eng.shard_streams
         return search_mod.ivf_rabitq_search_sharded(
             eng.mesh, qs, eng.index.rq.rot, eng.index.ivf.centroids,
             eng.slayout, scodes, snorm_o, sf_o, svecs, k=eng.k,
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
             cap_shard=eng.cap_shard, budget=eng.shard_budget,
-            backend=eng.backend)
+            backend=eng.backend, pred_state=pred_state,
+            pred_count=eng.pred_count)
 
 
 _STRATEGIES = {s.kind: s for s in
@@ -186,6 +221,7 @@ class SearchEngine:
     m: int = 128
     backend: str | None = None
     vectors: jax.Array | None = None  # required for kind == "ivf"
+    pred_count: int | None = None     # predictive re-rank pool target
     # -- sharded deployment state (all None/unused on a single device) ------
     mesh: Any = None
     slayout: ivf_mod.ShardedLayout | None = None
@@ -205,13 +241,18 @@ class SearchEngine:
     def build(index, k: int, n_probe: int, n_cand: int | None = None,
               use_bbc: bool = True, m: int = 128,
               backend: str | None = None, vectors=None,
-              mesh=None, shard_budget: int | None = None) -> "SearchEngine":
+              mesh=None, shard_budget: int | None = None,
+              pred_count: int | None = None) -> "SearchEngine":
         """Construct a serving engine; ``mesh`` (a 1-D ("model",) device
         mesh) switches on the sharded deployment — same code path, the
-        corpus stream is partitioned and placed at build time."""
+        corpus stream is partitioned and placed at build time.
+        ``pred_count`` overrides the predictive re-rank pool target used
+        when searches are called with a ``PredictorState``."""
         strategy, ivf = _resolve_strategy(index, vectors)
         if n_cand is None:
             n_cand = strategy.default_n_cand(index, k)
+        if pred_count is None:
+            pred_count = strategy.default_pred_count(k, n_cand)
         layout, slayout, cap_shard, streams = None, None, 1, ()
         if mesh is None:
             layout = ivf_mod.flat_layout(ivf)
@@ -228,24 +269,41 @@ class SearchEngine:
         return SearchEngine(index=index, layout=layout, kind=strategy.kind,
                             k=k, n_probe=n_probe, n_cand=n_cand,
                             use_bbc=use_bbc, m=m, backend=backend,
-                            vectors=vectors, mesh=mesh, slayout=slayout,
-                            cap_shard=cap_shard, shard_budget=shard_budget,
-                            shard_streams=streams)
+                            vectors=vectors, pred_count=pred_count, mesh=mesh,
+                            slayout=slayout, cap_shard=cap_shard,
+                            shard_budget=shard_budget, shard_streams=streams)
 
     # -- query-time ---------------------------------------------------------
+    #
+    # The engine itself stays immutable; predictive serving threads the
+    # ``rerank.PredictorState`` functionally: start from
+    # ``eng.predictor_init()`` and feed each call's returned state into the
+    # next — ``res, state = eng.search(qs, pred_state=state)`` — so the
+    # engine self-tunes across batches without hidden mutability (the
+    # serving loop in ``launch/serve.py`` is the reference consumer).
 
-    def search(self, qs: jax.Array) -> search_mod.SearchResult:
-        """(B, d) batch or (d,) single query -> SearchResult."""
+    def predictor_init(self) -> rerank.PredictorState:
+        """Cold cross-batch threshold-predictor state for this engine."""
+        return rerank.predictor_init(self.m)
+
+    def search(self, qs: jax.Array, pred_state=None):
+        """(B, d) batch or (d,) single query -> SearchResult (or
+        ``(SearchResult, new_state)`` when ``pred_state`` is given)."""
         if qs.ndim == 1:
-            return self.search_one(qs)
-        return self.search_batch(qs)
+            return self.search_one(qs, pred_state=pred_state)
+        return self.search_batch(qs, pred_state=pred_state)
 
-    def search_batch(self, qs: jax.Array) -> search_mod.SearchResult:
+    def search_batch(self, qs: jax.Array, pred_state=None):
         if self.sharded:
-            return self.strategy.search_sharded(self, qs)
-        return self.strategy.search_batch(self, qs)
+            return self.strategy.search_sharded(self, qs,
+                                                pred_state=pred_state)
+        return self.strategy.search_batch(self, qs, pred_state=pred_state)
 
-    def search_one(self, q: jax.Array) -> search_mod.SearchResult:
+    def search_one(self, q: jax.Array, pred_state=None):
+        if pred_state is not None:
+            # predictive search is natively batched; serve a singleton batch
+            res, state = self.search_batch(q[None], pred_state=pred_state)
+            return search_mod.SearchResult(*(x[0] for x in res)), state
         if self.sharded:
             # the sharded path is natively batched; serve a singleton batch
             res = self.strategy.search_sharded(self, q[None])

@@ -8,7 +8,6 @@ provides training/encoding and the jnp reference estimator.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -75,7 +74,7 @@ def adc_table(cb: PQCodebook, q: jax.Array) -> jax.Array:
 def estimate(lut: jax.Array, codes: jax.Array) -> jax.Array:
     """Reference ADC estimate: sum_m LUT[m, code[m]] -> squared distance."""
     m = lut.shape[0]
-    take = jax.vmap(lambda l, c: l[c], in_axes=(0, 1), out_axes=1)(
+    take = jax.vmap(lambda row, c: row[c], in_axes=(0, 1), out_axes=1)(
         lut, codes.astype(jnp.int32)
     )
     return jnp.sum(take, axis=1)

@@ -17,6 +17,13 @@ All paths return ``SearchResult`` with instrumentation counters used by the
 benchmark suite (re-rank counts, second-pass gathers — the TPU analogues of
 the paper's VTune/perf numbers); batched paths return per-query (B,) counters.
 
+The batched and sharded searchers additionally support the predictive
+early-exact subsystem: pass ``pred_state`` (a ``rerank.PredictorState``, the
+engine-owned EMA of previous batches' bucket histograms) and the call returns
+``(SearchResult, new_state)`` with the re-rank pool sized by the predicted
+threshold bucket instead of the static knobs (see the predictive section
+below and ``core.rerank.predict_tau``).
+
 Method map (paper Table / Fig. 1):
   ivf_search(use_bbc=False)          -> IVF
   ivf_pq_search(use_bbc=False)       -> IVF+PQ          (unbounded, n_cand)
@@ -118,6 +125,97 @@ def _rerank_budget(k: int, cap: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# Predictive early-exact re-rank (cross-batch tau_pred subsystem)
+# --------------------------------------------------------------------------
+#
+# The static BBC paths size the exact-re-rank pool with a blunt static knob
+# (n_cand for PQ; the full uncertain band for RaBitQ).  In predictive mode a
+# searcher additionally takes the engine-owned ``rerank.PredictorState`` (the
+# EMA of previous batches' bucket histograms) and returns
+# ``(SearchResult, new_state)``:
+#
+#   * tau_pred = predict_tau(state, pred_count) is the bucket the cumulative
+#     histogram is EXPECTED to reach pred_count at.  The scan early-exacts
+#     lanes at or below it inline (fused kernel on TPU).
+#   * tau_true from THIS batch's histogram guards correctness: survivors are
+#     bucket <= max(tau_pred, tau_true), and survivors the prediction missed
+#     (bucket in (tau_pred, tau_true]) get a fallback second-pass re-rank —
+#     exactly the static path's gather, just (usually) empty.
+#   * the new state folds this batch's histogram into the EMA.
+#
+# For PQ the pool shrinks from n_cand to ~pred_count (fewer re-ranks); for
+# IVF/RaBitQ distances/bounds already bound the pool, so prediction moves
+# work inline (fewer second-pass gathers) without changing the pool.
+
+
+def _resolve_pred_count(pred_count: int | None, k: int,
+                        n_cand: int | None = None) -> int:
+    """Default predictive re-rank pool target (~2.5k): deep enough that the
+    exact top-k inside it matches the static n_cand cut on realistic
+    estimate error, ~3x shallower than the n_cand=8k default.  This is the
+    single source of the default — the engine and bench_tau_pred both
+    resolve through it (BENCH_tau_pred.json is measured at this value)."""
+    if pred_count is None:
+        pred_count = max(5 * k // 2, k + 1024)
+    pred_count = max(pred_count, k)
+    if n_cand is not None:
+        pred_count = min(pred_count, n_cand)
+    return pred_count
+
+
+def _pred_budget(count: int, n: int) -> int:
+    """Static selection width over the survivor pool: the threshold bucket
+    overshoots ``count`` by at most its own occupancy; slack covers skew."""
+    b = count + max(count // 2, 256)
+    return int(min(n, ((b + 127) // 128) * 128))
+
+
+def _sample_codebooks(layout: ivf_mod.FlatLayout, probed: jax.Array,
+                      vals: jax.Array, st: int, cap: int, k_cb: int, m: int):
+    """Per-query codebooks from the nearest ``st`` probed cluster tiles of a
+    (B, n_flat) value matrix (the batched analogue of the paper's 5-10
+    nearest-cluster sample)."""
+    spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], cap)
+    sample = jnp.where(sok, jnp.take_along_axis(vals, spos, axis=1), INF)
+    k_cb = min(k_cb, sample.shape[1])
+    return jax.vmap(lambda s: rb.build_codebook(s, k=k_cb, m=m))(sample)
+
+
+def _pq_sample_est(layout: ivf_mod.FlatLayout, probed: jax.Array,
+                   stream_codes: jax.Array, luts: jax.Array, st: int,
+                   cap: int) -> jax.Array:
+    """Per-query ADC estimates over the nearest ``st`` probed cluster tiles
+    (the codebook sample of the batched PQ paths — static fused and
+    predictive MUST sample identically so bucket indices stay comparable
+    across batches for the EMA)."""
+    spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], cap)
+
+    def one(a):
+        pos, ok, lut = a
+        e = pq_mod.estimate(lut, stream_codes[pos])
+        return jnp.where(ok, jnp.sqrt(jnp.maximum(e, 0.0)), INF)
+
+    return jax.lax.map(one, (spos, sok, luts))
+
+
+def _predictive_select(est: jax.Array, bucket: jax.Array, hist: jax.Array,
+                       lane_valid: jax.Array, tau_pred: jax.Array,
+                       count: int, budget: int):
+    """Survivor selection under the predicted threshold.
+
+    Survivors are lanes with bucket <= max(tau_pred, tau_true-at-count);
+    they are picked est-priority into the static ``budget`` (ascending), so
+    the first k columns are the exact top-k of the pool.  Returns
+    (sel_est ascending (B, budget), sel_pos, sel_ok, tau_true).
+    """
+    tau_true, _ = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(hist, count)
+    tau_used = jnp.maximum(tau_pred, tau_true)
+    masked = jnp.where(lane_valid & (bucket <= tau_used[:, None]), est, INF)
+    neg, sel_pos = jax.lax.top_k(-masked, budget)
+    return -neg, sel_pos, jnp.isfinite(-neg), tau_true
+
+
+# --------------------------------------------------------------------------
 # IVF (no quantization): exact distances in-scan + collector
 # --------------------------------------------------------------------------
 
@@ -197,9 +295,21 @@ def ivf_pq_search(
     sample = jnp.where(valid[:n_sample_tiles],
                        est[:n_sample_tiles], INF).reshape(-1)
     n_total = flat_valid.shape[0]
-    plan = rerank.early_rerank_plan(
-        sample, n_cand=n_cand, n_sample=sample.shape[0],
-        n_total=n_total, m=m)
+    # The TPU formulation materializes the whole estimate pass before the
+    # early re-rank (tile-parallel, not streamed), so the sample prefix
+    # seeds the CODEBOOK only while tau_pred comes from the full scan at
+    # Alg. 4 line-14 granularity — the nearest-cluster prefix is
+    # distance-skewed and its rank heuristic (early_rerank_plan, used by
+    # the streaming fused-kernel path) lands systematically low on
+    # concentrated corpora.  The refresh is the O(m) histogram threshold
+    # (bucketize is monotone, so the first bucket whose cumulative count
+    # reaches n_cand IS the bucket of the n_cand-th estimate — no O(n_cand)
+    # selection), and the histogram is reused by the collection.
+    cb = rb.build_codebook(sample, k=min(n_cand, sample.shape[0]), m=m)
+    bucket_ids = rb.bucketize(cb, flat_est)
+    hist = rb.histogram(bucket_ids, m, flat_valid)
+    tau_scan, _ = rb.threshold_bucket(hist, n_cand)
+    plan = rerank.EarlyRerankPlan(tau_pred=tau_scan, cb=cb)
 
     # Early re-rank: per-cluster inline exact for predicted survivors.
     early_budget = int(min(cap, max(128, round(n_cand / n_probe * early_slack))))
@@ -228,9 +338,9 @@ def ivf_pq_search(
     flat_e_d = flat_e_d[:n_total]
 
     # n_cand selection by estimate with the bucket collector (Alg. 1 Collect).
-    bucket_ids = rb.bucketize(plan.cb, flat_est)
     _, sel_pos = rb.collect(
-        plan.cb, flat_est, positions, bucket_ids, n_cand, flat_valid)
+        plan.cb, flat_est, positions, bucket_ids, n_cand, flat_valid,
+        hist=hist)
     sel_ids = flat_ids[jnp.maximum(sel_pos, 0)]
     sel_ids = jnp.where(sel_pos >= 0, sel_ids, -1)
 
@@ -376,7 +486,8 @@ def _routing(ivf: ivf_mod.IVFIndex, layout: ivf_mod.FlatLayout,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "n_probe", "use_bbc", "m", "backend"))
+    jax.jit,
+    static_argnames=("k", "n_probe", "use_bbc", "m", "backend", "pred_count"))
 def ivf_search_batch(
     index: ivf_mod.IVFIndex,
     vectors: jax.Array,
@@ -387,13 +498,39 @@ def ivf_search_batch(
     use_bbc: bool = False,
     m: int = 128,
     backend: str | None = None,
+    pred_state: rerank.PredictorState | None = None,
+    pred_count: int | None = None,
 ) -> SearchResult:
     """Batched IVF (exact distances in-scan): one shared vector-stream gather,
-    one (B, n_flat) distance matmul, per-query bucket collection."""
+    one (B, n_flat) distance matmul, per-query bucket collection.
+
+    With ``pred_state`` the selection runs predictively (survivors under
+    max(tau_pred, tau_true) instead of a histogram-driven collect) and the
+    call returns ``(SearchResult, new_state)``; distances are exact in-scan,
+    so the result is identical to the static path for ANY prediction.
+    """
     probed, lane_valid, _ = _routing(index, layout, qs, n_probe)
     stream_vecs = vectors[layout.order]                       # shared gather
     dists = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
     dists = jnp.where(lane_valid, dists, INF)
+    n = jnp.sum(lane_valid, axis=1).astype(jnp.int32)
+    if pred_state is not None:
+        if not use_bbc:
+            raise ValueError("predictive search requires use_bbc=True")
+        # distances are exact in-scan, so the pool target is k itself
+        count = max(pred_count, k) if pred_count is not None else k
+        st = min(4, n_probe)
+        cbs = _sample_codebooks(layout, probed, dists, st, index.cap, k, m)
+        bucket, hist = ops.bucket_hist_batch(
+            dists, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+            backend=backend)
+        tau_pred = rerank.predict_tau(pred_state, count)
+        budget = _pred_budget(count, layout.n_flat)
+        sel_d, sel_pos, sel_ok, _ = _predictive_select(
+            dists, bucket, hist, lane_valid, tau_pred, count, budget)
+        ids = jnp.where(sel_ok, layout.order[sel_pos], -1)
+        res = SearchResult(sel_d[:, :k], ids[:, :k], n, jnp.zeros_like(n))
+        return res, rerank.predictor_update(pred_state, hist)
     if use_bbc and ops.resolve_backend(backend) == "pallas":
         # Kernel path: O(m) histogram collection (bucket_hist kernel) + one
         # (k + slack)-wide selection.
@@ -408,14 +545,13 @@ def ivf_search_batch(
         # these widths; the selected set is identical (bucketize is monotone
         # in distance, so the bucket collection selects the exact top-k set).
         d, i = col.topk_collect_batch(dists, layout.order, lane_valid, k)
-    n = jnp.sum(lane_valid, axis=1).astype(jnp.int32)
     return SearchResult(d, i, n, jnp.zeros_like(n))
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "n_probe", "n_cand", "use_bbc", "m", "backend",
-                     "fused"),
+                     "fused", "pred_count"),
 )
 def ivf_pq_search_batch(
     index: PQIndex,
@@ -428,6 +564,8 @@ def ivf_pq_search_batch(
     m: int = 128,
     backend: str | None = None,
     fused: bool | None = None,
+    pred_state: rerank.PredictorState | None = None,
+    pred_count: int | None = None,
 ) -> SearchResult:
     """Batched IVF+PQ (±BBC).
 
@@ -441,6 +579,11 @@ def ivf_pq_search_batch(
     fusion win to collect) exact distances are computed once for the final
     selection; results are identical, only the ``n_second_pass`` accounting
     differs.
+
+    With ``pred_state`` the blunt n_cand cut is replaced by the predictive
+    early-exact pool: exact distances are spent on the ~pred_count candidates
+    under max(tau_pred, tau_true) instead of all n_cand, tau_pred comes from
+    the cross-batch EMA, and the call returns ``(SearchResult, new_state)``.
     """
     if fused is None:
         fused = ops.on_tpu()
@@ -449,6 +592,13 @@ def ivf_pq_search_batch(
     probed, lane_valid, _ = _routing(ivf, layout, qs, n_probe)
     stream_codes = index.codes[layout.order]                  # shared gather
     luts = jax.vmap(lambda q: pq_mod.adc_table(index.pq, q))(qs)
+
+    if pred_state is not None:
+        if not use_bbc:
+            raise ValueError("predictive search requires use_bbc=True")
+        return _ivf_pq_predictive_batch(
+            index, qs, layout, probed, lane_valid, stream_codes, luts, k,
+            n_probe, n_cand, m, backend, fused, pred_state, pred_count)
 
     dense_rerank = 4 * n_cand >= layout.n_flat
 
@@ -477,14 +627,8 @@ def ivf_pq_search_batch(
         # over the shared stream; selection via the histogram; second gather
         # pass only for selected-but-not-predicted stragglers.
         st = min(4, n_probe)
-        spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], ivf.cap)
-
-        def sample_est_one(a):
-            pos, ok, lut = a
-            e = pq_mod.estimate(lut, stream_codes[pos])
-            return jnp.where(ok, jnp.sqrt(jnp.maximum(e, 0.0)), INF)
-
-        sample_est = jax.lax.map(sample_est_one, (spos, sok, luts))
+        sample_est = _pq_sample_est(layout, probed, stream_codes, luts, st,
+                                    ivf.cap)
         n_total = n_probe * ivf.cap
         plans = jax.vmap(
             lambda s: rerank.early_rerank_plan(
@@ -492,7 +636,7 @@ def ivf_pq_search_batch(
         )(sample_est)
 
         stream_vecs = index.vectors[layout.order]
-        est, bucket, hist, early = ops.fused_scan_batch(
+        est, bucket, hist, early, nmiss = ops.fused_scan_batch(
             stream_codes, stream_vecs, lane_valid, luts, qs,
             plans.cb.d_min, plans.cb.delta, plans.cb.ew_map, m,
             plans.tau_pred, backend=backend)
@@ -504,8 +648,7 @@ def ivf_pq_search_batch(
         sel_ids = jnp.where(sel_pos >= 0, layout.order[safe_pos], -1)
         e_at_sel = jnp.take_along_axis(early, safe_pos, axis=1)
         have = jnp.isfinite(e_at_sel) & (sel_pos >= 0)
-        n_early = jnp.sum(jnp.isfinite(early) & lane_valid,
-                          axis=1).astype(jnp.int32)
+        n_early = (jnp.sum(lane_valid, axis=1) - nmiss).astype(jnp.int32)
     else:
         # CPU fallback: there is no VMEM-residency win to collect inline, so
         # skip the prediction machinery and select the exact top-n_cand by
@@ -541,6 +684,90 @@ def ivf_pq_search_batch(
     neg, order = jax.lax.top_k(-ex, k)
     return SearchResult(-neg, jnp.take_along_axis(sel_ids, order, axis=1),
                         n_early + second, second)
+
+
+def _ivf_pq_predictive_batch(index, qs, layout, probed, lane_valid,
+                             stream_codes, luts, k, n_probe, n_cand, m,
+                             backend, fused, pred_state, pred_count):
+    """Predictive early-exact IVF+PQ (the tau_pred subsystem's PQ core).
+
+    The re-rank pool is {bucket <= max(tau_pred, tau_true-at-pred_count)}
+    instead of the top-n_cand-by-estimate cut: with a warm predictor that is
+    ~pred_count candidates (default ~2k) instead of n_cand (default 8k).  On
+    the fused path lanes under tau_pred were exacted inline during the scan;
+    the fallback pass re-ranks only survivors the prediction missed.  The
+    per-query codebooks are built exactly like the static fused path's, so
+    bucket indices stay comparable batch-to-batch for the EMA.
+    """
+    ivf = index.ivf
+    b = qs.shape[0]
+    n_flat = layout.n_flat
+    count = _resolve_pred_count(pred_count, k, n_cand)
+    st = min(4, n_probe)
+    sample_est = _pq_sample_est(layout, probed, stream_codes, luts, st,
+                                ivf.cap)
+    k_cb = min(n_cand, sample_est.shape[1])
+    cbs = jax.vmap(lambda s: rb.build_codebook(s, k=k_cb, m=m))(sample_est)
+    tau_pred = rerank.predict_tau(pred_state, count)
+
+    if fused:
+        stream_vecs = index.vectors[layout.order]
+        est, bucket, hist, early, nmiss = ops.fused_scan_batch(
+            stream_codes, stream_vecs, lane_valid, luts, qs,
+            cbs.d_min, cbs.delta, cbs.ew_map, m,
+            jnp.full((b,), tau_pred, jnp.int32), backend=backend)
+        est = jnp.where(lane_valid, est, INF)
+        n_early = (jnp.sum(lane_valid, axis=1) - nmiss).astype(jnp.int32)
+    else:
+        # CPU: no VMEM-residency win to collect inline — the whole pool goes
+        # through the (much smaller than n_cand) fallback gather instead.
+        est2 = ops.pq_adc_batch(stream_codes, luts, backend=backend)
+        est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
+        bucket, hist = ops.bucket_hist_batch(
+            est, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+            backend=backend)
+        early = None
+        n_early = jnp.zeros((b,), jnp.int32)
+
+    # Survivors form an est-prefix (bucketize is monotone), so est-priority
+    # truncation at a budget <= n_cand keeps the pool a SUBSET of the static
+    # n_cand-by-estimate cut: the predictive result can only match or shrink
+    # the static selection, never pull in ids the static path couldn't see.
+    budget = min(_pred_budget(count, n_flat), n_cand)
+    _, sel_pos, sel_ok, tau_true = _predictive_select(
+        est, bucket, hist, lane_valid, tau_pred, count, budget)
+    sel_ids = jnp.where(sel_ok, layout.order[sel_pos], -1)
+
+    # Fallback pass (undershoot correctness): survivors not covered inline —
+    # the fallback-plan mask at the selected positions.  On the unfused path
+    # nothing was computed inline, so the whole selection is fallback work.
+    if early is not None:
+        e_at_sel = jnp.take_along_axis(early, sel_pos, axis=1)
+        fb = rerank.predicted_fallback_mask(
+            bucket, lane_valid, jnp.full((b,), tau_pred, jnp.int32), tau_true)
+        miss = jnp.take_along_axis(fb, sel_pos, axis=1) & sel_ok
+        have = sel_ok & ~miss
+    else:
+        e_at_sel = jnp.full(sel_pos.shape, INF, est.dtype)
+        have = jnp.zeros(sel_pos.shape, bool)
+        miss = sel_ok
+    if not fused and 4 * budget >= n_flat:
+        # pool is a large fraction of the stream (large-k regime): one shared
+        # matmul beats per-row gathers, as in the static dense_rerank path
+        exact_all = ops.l2_exact_batch(index.vectors[layout.order], qs,
+                                       backend=backend)
+        miss_d = jnp.take_along_axis(exact_all, jnp.maximum(sel_pos, 0),
+                                     axis=1)
+    else:
+        miss_d = _exact_dists_rows(index.vectors,
+                                   jnp.where(miss, sel_ids, 0), qs)
+    ex = jnp.where(have, e_at_sel, jnp.where(miss, miss_d, INF))
+    second = jnp.sum(miss, axis=1).astype(jnp.int32)
+
+    neg, order = jax.lax.top_k(-ex, k)
+    res = SearchResult(-neg, jnp.take_along_axis(sel_ids, order, axis=1),
+                       n_early + second, second)
+    return res, rerank.predictor_update(pred_state, hist)
 
 
 def _rabitq_bounds_stream(codes_s: jax.Array, norm_o: jax.Array,
@@ -601,7 +828,8 @@ def _rabitq_batch_bounds(index: RabitqIndex, layout: ivf_mod.FlatLayout,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "n_probe", "use_bbc", "m", "eps0", "backend"))
+    static_argnames=("k", "n_probe", "use_bbc", "m", "eps0", "backend",
+                     "pred_count"))
 def ivf_rabitq_search_batch(
     index: RabitqIndex,
     qs: jax.Array,                 # (B, d)
@@ -612,8 +840,25 @@ def ivf_rabitq_search_batch(
     m: int = 128,
     eps0: float = 3.0,
     backend: str | None = None,
+    pred_state: rerank.PredictorState | None = None,
+    pred_count: int | None = None,
 ) -> SearchResult:
-    """Batched IVF+RaBitQ (±BBC) on the shared candidate stream."""
+    """Batched IVF+RaBitQ (±BBC) on the shared candidate stream.
+
+    With ``pred_state``: RaBitQ's bounds already make the re-rank band
+    minimal, so prediction cannot shrink it (the paper's RaBitQ gain is
+    cache misses, not re-rank count).  ``n_second_pass`` becomes the MODELED
+    second-pass gather volume of a bound-fused scan — band members whose
+    lb-bucket lies above tau_pred, i.e. the lanes an inline early-exact pass
+    keyed on the prediction would NOT have covered (the structural analogue
+    of the paper's Table-2 cache-miss counts, like ``collector_stats``'s
+    byte counts).  The executed math is unchanged on every backend: the
+    whole band is evaluated in one shared matmul, and the result is
+    bit-identical to the static path.  Returns ``(SearchResult, new_state)``;
+    the EMA tracks the UPPER-bound histogram (the codebook's anchor).
+    """
+    if pred_state is not None and not use_bbc:
+        raise ValueError("predictive search requires use_bbc=True")
     ivf = index.ivf
     b = qs.shape[0]
     cap = ivf.cap
@@ -677,10 +922,22 @@ def ivf_rabitq_search_batch(
     exact_flat = jnp.where(plan.rerank_mask, exact_all, INF)
 
     res = jax.vmap(
-        lambda p, ef, l, e: rerank.greedy_rerank_finalize(
-            p, ef, l, stream_ids, k, est=e)
+        lambda p, ef, lbv, e: rerank.greedy_rerank_finalize(
+            p, ef, lbv, stream_ids, k, est=e)
     )(plan, exact_flat, jnp.where(lane_valid, lb, INF), est)
     n_evals = jnp.sum(plan.rerank_mask, axis=1).astype(jnp.int32)
+    if pred_state is not None:
+        # inline coverage: band members predicted by the cross-batch tau; the
+        # fallback (second-pass gather) shrinks to the unpredicted remainder
+        count = max(pred_count, k) if pred_count is not None else k
+        tau_pred = rerank.predict_tau(pred_state, count)
+        covered = plan.rerank_mask & (plan.a_lb <= tau_pred)
+        n_second = jnp.sum(plan.rerank_mask & ~covered,
+                           axis=1).astype(jnp.int32)
+        hist_ub = jax.vmap(rb.histogram, in_axes=(0, None, 0))(
+            plan.a_ub, m, lane_valid)
+        res_p = SearchResult(res.topk_dists, res.topk_ids, n_evals, n_second)
+        return res_p, rerank.predictor_update(pred_state, hist_ub)
     return SearchResult(res.topk_dists, res.topk_ids, n_evals, n_evals)
 
 
@@ -789,7 +1046,7 @@ def _final_topk(gd: jax.Array, gi: jax.Array, k: int):
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "k", "n_probe", "use_bbc", "m", "cap_shard",
-                     "budget", "backend"))
+                     "budget", "backend", "pred_count"))
 def ivf_search_sharded(
     mesh,
     qs: jax.Array,                   # (B, d) replicated
@@ -803,13 +1060,24 @@ def ivf_search_sharded(
     cap_shard: int = 1,
     budget: int | None = None,
     backend: str | None = None,
+    pred_state: rerank.PredictorState | None = None,
+    pred_count: int | None = None,
 ) -> SearchResult:
-    """Sharded batched IVF (exact distances in-scan)."""
+    """Sharded batched IVF (exact distances in-scan).
+
+    With ``pred_state`` the engine's predicted tau enters the survivor
+    threshold as a floor (see ``dist.bbc_survivors_batch``) and the psum'd
+    histogram feeds the EMA; returns ``(SearchResult, new_state)``.
+    Distances are exact in-scan, so results match the static path exactly.
+    """
+    predictive = pred_state is not None
+    if predictive and not use_bbc:
+        raise ValueError("predictive search requires use_bbc=True")
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=2.0)
 
-    def body(qs, cent, sl, vecs):
+    def body(qs, cent, sl, vecs, tau_floor=None):
         layout = _local_block(sl)
         vecs = vecs[0]
         probed, _ = _local_routing(cent, qs, n_probe)
@@ -817,14 +1085,16 @@ def ivf_search_sharded(
         dists = ops.l2_exact_batch(vecs, qs, backend=backend)
         dv = jnp.where(lane_valid, dists, INF)
         n = jax.lax.psum(jnp.sum(lane_valid, axis=1), SHARD_AXIS)
+        ghist = None
         if use_bbc:
             st = min(4, n_probe)
             cbs = _sharded_codebooks(layout, probed, dv, st, cap_shard, k, m)
             bucket, hist = ops.bucket_hist_batch(
                 dv, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
                 backend=backend)
-            pos, ok, _, _ = dist.bbc_survivors_batch(
-                bucket, dv, lane_valid, hist, k, bud, SHARD_AXIS)
+            pos, ok, _, _, ghist = dist.bbc_survivors_batch(
+                bucket, dv, lane_valid, hist, k, bud, SHARD_AXIS,
+                tau_floor=tau_floor)
             sd = jnp.where(ok, jnp.take_along_axis(dv, pos, axis=1), INF)
             gids = jnp.where(ok, layout.order[pos], -1)
         else:
@@ -832,12 +1102,21 @@ def ivf_search_sharded(
             sd = jnp.where(ok, jnp.take_along_axis(dv, pos, axis=1), INF)
         gd, gi = dist.gather_survivors(SHARD_AXIS, sd, gids)
         d, i = _final_topk(gd, gi, k)
+        if predictive:
+            return d, i, n.astype(jnp.int32), ghist
         return d, i, n.astype(jnp.int32)
 
-    fn = dist.shard_map(
-        body, mesh,
-        in_specs=(P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC),
-        out_specs=(P(), P(), P()))
+    in_specs = (P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC)
+    out_specs = (P(), P(), P())
+    if predictive:
+        count = max(pred_count, k) if pred_count is not None else k
+        tau_p = rerank.predict_tau(pred_state, count)
+        fn = dist.shard_map(body, mesh, in_specs=in_specs + (P(),),
+                            out_specs=out_specs + (P(),))
+        d, i, n, ghist = fn(qs, centroids, slayout, svecs, tau_p)
+        res = SearchResult(d, i, n, jnp.zeros_like(n))
+        return res, rerank.predictor_update(pred_state, ghist)
+    fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
     d, i, n = fn(qs, centroids, slayout, svecs)
     return SearchResult(d, i, n, jnp.zeros_like(n))
 
@@ -845,7 +1124,7 @@ def ivf_search_sharded(
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "k", "n_probe", "n_cand", "use_bbc", "m",
-                     "cap_shard", "budget", "backend"))
+                     "cap_shard", "budget", "backend", "pred_count"))
 def ivf_pq_search_sharded(
     mesh,
     qs: jax.Array,
@@ -862,6 +1141,8 @@ def ivf_pq_search_sharded(
     cap_shard: int = 1,
     budget: int | None = None,
     backend: str | None = None,
+    pred_state: rerank.PredictorState | None = None,
+    pred_count: int | None = None,
 ) -> SearchResult:
     """Sharded batched IVF+PQ.
 
@@ -871,12 +1152,25 @@ def ivf_pq_search_sharded(
     re-applies the top-``n_cand``-by-estimate cut before the top-k by exact
     distance — the same selection semantics as ``ivf_pq_search_batch``.
     Naive path: each shard maintains a full local top-k by estimate and
-    gathers k (dist, id) pairs (plus its local exact re-rank)."""
+    gathers k (dist, id) pairs (plus its local exact re-rank).
+
+    Predictive path (``pred_state``): the histogram collective runs at
+    ``pred_count`` granularity with the engine's tau_pred as a floor, each
+    shard exact-re-ranks only its ~pred_count/S survivors (instead of
+    ~n_cand/S), and the blunt post-gather n_cand-by-estimate re-cut is gone —
+    the survivor pool IS the selection, matching the predictive batched
+    path's semantics.  Returns ``(SearchResult, new_state)``.
+    """
+    predictive = pred_state is not None
+    if predictive and not use_bbc:
+        raise ValueError("predictive search requires use_bbc=True")
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
-    bud = _shard_budget(budget, n_cand, mesh, shard_flat, slack=2.0)
+    count = _resolve_pred_count(pred_count, k, n_cand) if predictive \
+        else n_cand
+    bud = _shard_budget(budget, count, mesh, shard_flat, slack=2.0)
 
-    def body(qs, cb, cent, sl, codes, vecs):
+    def body(qs, cb, cent, sl, codes, vecs, tau_floor=None):
         layout = _local_block(sl)
         codes, vecs = codes[0], vecs[0]
         probed, _ = _local_routing(cent, qs, n_probe)
@@ -884,6 +1178,7 @@ def ivf_pq_search_sharded(
         luts = jax.vmap(lambda q: pq_mod.adc_table(cb, q))(qs)
         est2 = ops.pq_adc_batch(codes, luts, backend=backend)
         est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
+        ghist = None
         if use_bbc:
             st = min(4, n_probe)
             cbs = _sharded_codebooks(layout, probed, est, st, cap_shard,
@@ -891,8 +1186,9 @@ def ivf_pq_search_sharded(
             bucket, hist = ops.bucket_hist_batch(
                 est, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
                 backend=backend)
-            pos, ok, _, _ = dist.bbc_survivors_batch(
-                bucket, est, lane_valid, hist, n_cand, bud, SHARD_AXIS)
+            pos, ok, _, _, ghist = dist.bbc_survivors_batch(
+                bucket, est, lane_valid, hist, count, bud, SHARD_AXIS,
+                tau_floor=tau_floor)
         else:
             pos, ok, _ = _naive_local_topk(est, layout, k)
         sel_est = jnp.where(ok, jnp.take_along_axis(est, pos, axis=1), INF)
@@ -901,20 +1197,39 @@ def ivf_pq_search_sharded(
         n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
         ge, gx, gi = dist.gather_survivors(SHARD_AXIS, sel_est, ex, gids)
         if use_bbc:
-            # replicated n_cand-by-estimate cut, then top-k by exact — the
-            # same two-stage selection the single-device batched path makes.
-            ncs = min(n_cand, ge.shape[1])
+            # Replicated selection alignment with the single-device batched
+            # path.  Static: the blunt n_cand-by-estimate re-cut (the full
+            # two-stage selection re-applied after the gather).  Predictive:
+            # that re-cut is gone — the pool is already tau-thresholded at
+            # pred_count granularity; only the SAME est-priority truncation
+            # the batched predictive path applies (its static top_k width)
+            # remains, so both deployments select the identical pool.
+            if predictive:
+                n_flat_global = shard_flat * mesh.shape[SHARD_AXIS]
+                ncs = min(_pred_budget(count, n_flat_global), n_cand,
+                          ge.shape[1])
+            else:
+                ncs = min(n_cand, ge.shape[1])
             nege, osel = jax.lax.top_k(-ge, ncs)
             keep = jnp.isfinite(-nege)
             gx = jnp.where(keep, jnp.take_along_axis(gx, osel, axis=1), INF)
             gi = jnp.where(keep, jnp.take_along_axis(gi, osel, axis=1), -1)
         d, i = _final_topk(gx, gi, k)
+        if predictive:
+            return d, i, n_rr.astype(jnp.int32), ghist
         return d, i, n_rr.astype(jnp.int32)
 
-    fn = dist.shard_map(
-        body, mesh,
-        in_specs=(P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM3_SPEC),
-        out_specs=(P(), P(), P()))
+    in_specs = (P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM3_SPEC)
+    out_specs = (P(), P(), P())
+    if predictive:
+        tau_p = rerank.predict_tau(pred_state, count)
+        fn = dist.shard_map(body, mesh, in_specs=in_specs + (P(),),
+                            out_specs=out_specs + (P(),))
+        d, i, n_rr, ghist = fn(qs, pq_cb, centroids, slayout, scodes, svecs,
+                               tau_p)
+        res = SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
+        return res, rerank.predictor_update(pred_state, ghist)
+    fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
     d, i, n_rr = fn(qs, pq_cb, centroids, slayout, scodes, svecs)
     return SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
 
@@ -922,7 +1237,7 @@ def ivf_pq_search_sharded(
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "k", "n_probe", "use_bbc", "m", "eps0",
-                     "cap_shard", "budget", "backend"))
+                     "cap_shard", "budget", "backend", "pred_count"))
 def ivf_rabitq_search_sharded(
     mesh,
     qs: jax.Array,
@@ -941,6 +1256,8 @@ def ivf_rabitq_search_sharded(
     cap_shard: int = 1,
     budget: int | None = None,
     backend: str | None = None,
+    pred_state: rerank.PredictorState | None = None,
+    pred_count: int | None = None,
 ) -> SearchResult:
     """Sharded batched IVF+RaBitQ.
 
@@ -950,7 +1267,17 @@ def ivf_rabitq_search_sharded(
     distributed form of Alg. 3's certainly-out test (lb above the relaxed
     k-th-ub threshold means at least k objects are surely closer).  Survivors
     are exact-re-ranked on their shard; the gathered top-k by exact distance
-    therefore equals the single-device result set."""
+    therefore equals the single-device result set.
+
+    Predictive path (``pred_state``): the survivor band is bound-determined
+    (already minimal), so prediction does not floor tau here; the psum'd UB
+    histogram feeds the engine's EMA so the batched/fused deployments of the
+    same engine predict from serving traffic wherever it runs.  Returns
+    ``(SearchResult, new_state)``; results are identical to the static path.
+    """
+    predictive = pred_state is not None
+    if predictive and not use_bbc:
+        raise ValueError("predictive search requires use_bbc=True")
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=4.0)
@@ -964,6 +1291,7 @@ def ivf_rabitq_search_sharded(
         est, lb, ub = _rabitq_bounds_stream(
             codes.astype(jnp.float32), norm_o, f_o, cl, cent, rot, qs, d2,
             lane_valid, eps0)
+        ghist = None
         if use_bbc:
             st = min(4, n_probe)
             cbs = _sharded_codebooks(layout, probed, ub, st, cap_shard, k, m)
@@ -971,7 +1299,7 @@ def ivf_rabitq_search_sharded(
                 ub, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
                 backend=backend)
             bucket_lb = jax.vmap(rb.bucketize)(cbs, lb)
-            pos, ok, _, _ = dist.bbc_survivors_batch(
+            pos, ok, _, _, ghist = dist.bbc_survivors_batch(
                 bucket_lb, lb, lane_valid, hist_ub, k, bud, SHARD_AXIS)
         else:
             pos, ok, _ = _naive_local_topk(est, layout, k)
@@ -980,12 +1308,20 @@ def ivf_rabitq_search_sharded(
         n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
         gx, gi = dist.gather_survivors(SHARD_AXIS, ex, gids)
         d, i = _final_topk(gx, gi, k)
+        if predictive:
+            return d, i, n_rr.astype(jnp.int32), ghist
         return d, i, n_rr.astype(jnp.int32)
 
-    fn = dist.shard_map(
-        body, mesh,
-        in_specs=(P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM2_SPEC,
-                  _STREAM2_SPEC, _STREAM3_SPEC),
-        out_specs=(P(), P(), P()))
+    in_specs = (P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM2_SPEC,
+                _STREAM2_SPEC, _STREAM3_SPEC)
+    out_specs = (P(), P(), P())
+    if predictive:
+        fn = dist.shard_map(body, mesh, in_specs=in_specs,
+                            out_specs=out_specs + (P(),))
+        d, i, n_rr, ghist = fn(qs, rot, centroids, slayout, scodes, snorm_o,
+                               sf_o, svecs)
+        res = SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
+        return res, rerank.predictor_update(pred_state, ghist)
+    fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
     d, i, n_rr = fn(qs, rot, centroids, slayout, scodes, snorm_o, sf_o, svecs)
     return SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))

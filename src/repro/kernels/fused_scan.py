@@ -38,7 +38,7 @@ BQ = 8   # query-batch chunk width inside the batched kernels
 
 def _fused_kernel(codes_ref, vecs_ref, wmask_ref, lut_ref, qv_ref, ew_map_ref,
                   scal_ref, est_ref, bucket_ref, early_ref, hist_ref,
-                  *, m: int, hist_pad: int, mc: int):
+                  nmiss_ref, *, m: int, hist_pad: int, mc: int):
     codes = codes_ref[...].astype(jnp.int32)      # (TILE, M)
     vecs = vecs_ref[...]                          # (TILE, d)
     w = wmask_ref[...][0]                         # (TILE,)
@@ -92,6 +92,7 @@ def _fused_kernel(codes_ref, vecs_ref, wmask_ref, lut_ref, qv_ref, ew_map_ref,
     @pl.when(pl.program_id(0) == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
+        nmiss_ref[...] = jnp.zeros_like(nmiss_ref)
 
     hist_ref[...] += tile_hist[None, :]
 
@@ -103,6 +104,11 @@ def _fused_kernel(codes_ref, vecs_ref, wmask_ref, lut_ref, qv_ref, ew_map_ref,
     exact = jnp.sqrt(jnp.maximum(x_sq - 2.0 * xv + q_sq, 0.0))
     pred = (w > 0) & (bucket <= tau_pred)
     early_ref[...] = jnp.where(pred, exact, inf)[None, :]
+
+    # --- miss count: valid lanes the prediction left to the second pass ---
+    cnt = jnp.sum(((w > 0) & ~pred).astype(jnp.int32))
+    miota = jax.lax.broadcasted_iota(jnp.int32, (1, 128), 1)
+    nmiss_ref[...] += jnp.where(miota == 0, cnt, 0)
 
 
 def fused_scan_pallas(
@@ -120,7 +126,7 @@ def fused_scan_pallas(
     mc: int = MC,
     interpret: bool | None = None,
 ):
-    """Returns (est (n,), bucket (n,), hist (m+1,), early (n,))."""
+    """Returns (est (n,), bucket (n,), hist (m+1,), early (n,), nmiss ())."""
     interpret = resolve_interpret(interpret)
     n, m_sub = codes.shape
     d = vectors.shape[1]
@@ -133,7 +139,7 @@ def fused_scan_pallas(
     scal = scal.at[0, 2].set(tau_pred.astype(jnp.float32))
     scal = scal.at[0, 3].set(jnp.sum(q * q))
     w = valid.astype(jnp.int32)
-    est, bucket, early, hist = pl.pallas_call(
+    est, bucket, early, hist, nmiss = pl.pallas_call(
         functools.partial(_fused_kernel, m=m, hist_pad=hist_pad, mc=mc),
         grid=(g,),
         in_specs=[
@@ -150,17 +156,20 @@ def fused_scan_pallas(
             pl.BlockSpec((1, tile), lambda i: (i, 0)),
             pl.BlockSpec((1, tile), lambda i: (i, 0)),
             pl.BlockSpec((1, hist_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((g, tile), jnp.float32),
             jax.ShapeDtypeStruct((g, tile), jnp.int32),
             jax.ShapeDtypeStruct((g, tile), jnp.float32),
             jax.ShapeDtypeStruct((1, hist_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, 128), jnp.int32),
         ],
         interpret=interpret,
     )(codes, vectors, w.reshape(1, n), lut, q.reshape(1, d),
       ew_map.reshape(1, n_ew), scal)
-    return est.reshape(n), bucket.reshape(n), hist[0, : m + 1], early.reshape(n)
+    return (est.reshape(n), bucket.reshape(n), hist[0, : m + 1],
+            early.reshape(n), nmiss[0, 0])
 
 
 # --------------------------------------------------------------------------
@@ -210,7 +219,8 @@ def bucketize_hist_tile(est, w, ew, d_min, delta, m, hist_pad, bq):
 
 def _fused_batch_kernel(codes_ref, vecs_ref, wmask_ref, luts_ref, qt_ref,
                         ew_ref, scal_ref, est_ref, bucket_ref, early_ref,
-                        hist_ref, *, m: int, hist_pad: int, mc: int, bq: int):
+                        hist_ref, nmiss_ref, *, m: int, hist_pad: int,
+                        mc: int, bq: int):
     codes = codes_ref[...].astype(jnp.int32)      # (TILE, M)
     vecs = vecs_ref[...]                          # (TILE, d)
     w = wmask_ref[...]                            # (TILE, B)
@@ -252,6 +262,7 @@ def _fused_batch_kernel(codes_ref, vecs_ref, wmask_ref, luts_ref, qt_ref,
     @pl.when(pl.program_id(0) == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
+        nmiss_ref[...] = jnp.zeros_like(nmiss_ref)
 
     hist_ref[...] += tile_hist
 
@@ -263,6 +274,11 @@ def _fused_batch_kernel(codes_ref, vecs_ref, wmask_ref, luts_ref, qt_ref,
         x_sq[:, None] - 2.0 * xv + q_sq[None, :], 0.0))
     pred = (w > 0) & (bucket <= tau_pred[None, :])
     early_ref[...] = jnp.where(pred, exact, inf)
+
+    # --- per-query miss counts (lanes left to the second gather pass) ---
+    cnt = jnp.sum(((w > 0) & ~pred).astype(jnp.int32), axis=0)     # (B,)
+    miota = jax.lax.broadcasted_iota(jnp.int32, (b, 128), 1)
+    nmiss_ref[...] += jnp.where(miota == 0, cnt[:, None], 0)
 
 
 def fused_scan_batch_pallas(
@@ -286,8 +302,8 @@ def fused_scan_batch_pallas(
 
     The candidate gather happens ONCE per cluster tile (codes/vectors are the
     shared stream); all per-query work is MXU matmuls against the resident
-    tile.  Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n)).
-    Requires B % bq == 0 (wrappers pad the query batch).
+    tile.  Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n),
+    nmiss (B,)).  Requires B % bq == 0 (wrappers pad the query batch).
     """
     interpret = resolve_interpret(interpret)
     n, m_sub = codes.shape
@@ -306,7 +322,7 @@ def fused_scan_batch_pallas(
     w = valid.astype(jnp.int32)                                  # (n, B)
     luts_t = luts.reshape(b, m_sub * k_codes).T                  # (M*K, B)
     qt = qs.T                                                    # (d, B)
-    est, bucket, early, hist = pl.pallas_call(
+    est, bucket, early, hist, nmiss = pl.pallas_call(
         functools.partial(_fused_batch_kernel, m=m, hist_pad=hist_pad,
                           mc=mc, bq=bq),
         grid=(g,),
@@ -324,13 +340,15 @@ def fused_scan_batch_pallas(
             pl.BlockSpec((tile, b), lambda i: (i, 0)),
             pl.BlockSpec((tile, b), lambda i: (i, 0)),
             pl.BlockSpec((b, hist_pad), lambda i: (0, 0)),
+            pl.BlockSpec((b, 128), lambda i: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n, b), jnp.float32),
             jax.ShapeDtypeStruct((n, b), jnp.int32),
             jax.ShapeDtypeStruct((n, b), jnp.float32),
             jax.ShapeDtypeStruct((b, hist_pad), jnp.int32),
+            jax.ShapeDtypeStruct((b, 128), jnp.int32),
         ],
         interpret=interpret,
     )(codes, vectors, w, luts_t, qt, ew_maps.astype(jnp.int32), scal)
-    return est.T, bucket.T, hist[:, : m + 1], early.T
+    return est.T, bucket.T, hist[:, : m + 1], early.T, nmiss[:, 0]

@@ -112,18 +112,20 @@ def fused_scan(codes: jax.Array, vectors: jax.Array, valid: jax.Array,
                lut: jax.Array, q: jax.Array, d_min: jax.Array,
                delta: jax.Array, ew_map: jax.Array, m: int,
                tau_pred: jax.Array, tile: int = _fs.TILE, mc: int = _fs.MC):
-    """Fused estimate+bucketize+hist+early-exact over a candidate block."""
+    """Fused estimate+bucketize+hist+early-exact over a candidate block.
+
+    Returns (est (n,), bucket (n,), hist (m+1,), early (n,), nmiss ())."""
     n, d = vectors.shape
     codes_p = _pad_cols(_pad_rows(codes.astype(jnp.int32), tile, 0), mc, 0)
     lut_p = jnp.pad(lut, ((0, codes_p.shape[1] - lut.shape[0]), (0, 0)))
     vecs_p = _pad_cols(_pad_rows(vectors, tile, 0.0), 128, 0.0)
     q_p = jnp.pad(q, (0, vecs_p.shape[1] - d))
     valid_p = _pad_rows(valid, tile, False)
-    est, bucket, hist, early = _fs.fused_scan_pallas(
+    est, bucket, hist, early, nmiss = _fs.fused_scan_pallas(
         codes_p, vecs_p, valid_p, lut_p, q_p, d_min, delta,
         ew_map.astype(jnp.int32), m, tau_pred, tile=tile, mc=mc,
         interpret=_interpret())
-    return est[:n], bucket[:n], hist, early[:n]
+    return est[:n], bucket[:n], hist, early[:n], nmiss
 
 
 @functools.partial(jax.jit, static_argnames=("tile",))
@@ -171,7 +173,9 @@ def fused_scan_batch(codes: jax.Array, vectors: jax.Array, valid: jax.Array,
     ``codes`` (n, M) / ``vectors`` (n, d) are the stream shared by every
     query; ``valid`` (B, n) masks each query's probed lanes; ``luts``
     (B, M, K), ``qs`` (B, d), codebook params and ``tau_pred`` are per-query.
-    Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n)).
+    Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n),
+    nmiss (B,)) — nmiss counts valid lanes with bucket > tau_pred, the lanes
+    the predictive early-exact pass leaves to the second gather.
     """
     backend = resolve_backend(backend)
     if backend == "ref":
@@ -190,10 +194,10 @@ def fused_scan_batch(codes: jax.Array, vectors: jax.Array, valid: jax.Array,
     delta_p = jnp.pad(delta, (0, bp), constant_values=1.0)
     ew_p = jnp.pad(ew_maps.astype(jnp.int32), ((0, bp), (0, 0)))
     tau_p = jnp.pad(tau_pred.astype(jnp.int32), (0, bp), constant_values=-1)
-    est, bucket, hist, early = _fs.fused_scan_batch_pallas(
+    est, bucket, hist, early, nmiss = _fs.fused_scan_batch_pallas(
         codes_p, vecs_p, valid_p.T, luts_p, qs_p, d_min_p, delta_p, ew_p, m,
         tau_p, tile=tile, mc=mc, interpret=_interpret())
-    return est[:b, :n], bucket[:b, :n], hist[:b], early[:b, :n]
+    return est[:b, :n], bucket[:b, :n], hist[:b], early[:b, :n], nmiss[:b]
 
 
 @functools.partial(jax.jit, static_argnames=("m", "tile", "backend"))

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 def pq_adc(codes: jax.Array, lut: jax.Array) -> jax.Array:
     """ADC estimate: est[n] = sum_m lut[m, codes[n, m]] (squared distance)."""
-    take = jax.vmap(lambda l, c: l[c], in_axes=(0, 1), out_axes=1)(
+    take = jax.vmap(lambda row, c: row[c], in_axes=(0, 1), out_axes=1)(
         lut, codes.astype(jnp.int32))
     return jnp.sum(take, axis=1)
 
@@ -66,7 +66,7 @@ def pq_adc_batch(codes: jax.Array, luts: jax.Array) -> jax.Array:
     """(n, M) shared codes + (B, M, K) per-query LUTs -> (B, n) squared
     estimates.  Sequential map over queries keeps the (n, M) take
     intermediate B-independent (the batched axis is the LUT, not the codes)."""
-    return jax.lax.map(lambda l: pq_adc(codes, l), luts)
+    return jax.lax.map(lambda lut: pq_adc(codes, lut), luts)
 
 
 def bucketize_batch(dists: jax.Array, d_min: jax.Array, delta: jax.Array,
@@ -106,7 +106,9 @@ def fused_scan_batch(
 ):
     """Oracle for the batched fused kernel.
 
-    Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n))."""
+    Returns (est (B, n), bucket (B, n), hist (B, m+1), early (B, n),
+    nmiss (B,)) where nmiss counts the valid lanes NOT covered inline
+    (bucket > tau_pred) — the upper bound on second-pass gather work."""
     est = jnp.sqrt(jnp.maximum(pq_adc_batch(codes, luts), 0.0))
     est = jnp.where(valid, est, jnp.inf)
     b = bucketize_batch(est, d_min, delta, ew_maps, m)
@@ -114,8 +116,10 @@ def fused_scan_batch(
     hist = jax.vmap(
         lambda bb, ww: jnp.zeros((m + 1,), jnp.int32).at[bb].add(ww))(b, w)
     ex = l2_exact_batch(vectors, qs)
-    early = jnp.where(valid & (b <= tau_pred[:, None]), ex, jnp.inf)
-    return est, b, hist, early
+    pred = valid & (b <= tau_pred[:, None])
+    early = jnp.where(pred, ex, jnp.inf)
+    nmiss = jnp.sum(valid & ~pred, axis=1).astype(jnp.int32)
+    return est, b, hist, early, nmiss
 
 
 def fused_scan(
@@ -131,8 +135,9 @@ def fused_scan(
 ):
     """Oracle for the fused estimate+bucketize+hist+early-exact kernel.
 
-    Returns (est, bucket, hist, early_exact) where early_exact[i] is the exact
-    distance when bucket[i] <= tau_pred (and valid), else +inf.
+    Returns (est, bucket, hist, early_exact, nmiss) where early_exact[i] is
+    the exact distance when bucket[i] <= tau_pred (and valid), else +inf, and
+    nmiss is the scalar count of valid lanes not covered inline.
     """
     est2 = pq_adc(codes, lut)
     est = jnp.sqrt(jnp.maximum(est2, 0.0))
@@ -141,5 +146,7 @@ def fused_scan(
     w = jnp.where(valid, 1, 0).astype(jnp.int32)
     hist = jnp.zeros((m + 1,), jnp.int32).at[b].add(w)
     ex = l2_exact(vectors, q)
-    early = jnp.where(valid & (b <= tau_pred), ex, jnp.inf)
-    return est, b, hist, early
+    pred = valid & (b <= tau_pred)
+    early = jnp.where(pred, ex, jnp.inf)
+    nmiss = jnp.sum(valid & ~pred).astype(jnp.int32)
+    return est, b, hist, early, nmiss

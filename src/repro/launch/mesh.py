@@ -22,7 +22,6 @@ the SAME mesh, including awkward head counts like qwen2's 14 q-heads):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -16,6 +16,12 @@ all-gather).  On a CPU host without real accelerators the flag forces N
 host devices so the collective path is exercised end-to-end:
 
   PYTHONPATH=src python -m repro.launch.serve --method ivfpq_bbc --shards 8
+
+``--tau-pred on`` switches on predictive early-exact re-ranking: the loop
+maintains a cross-batch threshold predictor (EMA over the bucket histograms
+of previous batches) and threads it through every engine call, so the
+re-rank pool shrinks from the static n_cand cut to the predicted threshold
+with a correctness fallback (see index/engine.py and core/rerank.py).
 """
 from __future__ import annotations
 
@@ -100,6 +106,18 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="mesh-shard the corpus over this many devices "
                          "(forces host devices when none are present)")
+    ap.add_argument("--tau-pred", choices=("on", "off"), default="off",
+                    help="predictive early-exact re-ranking: the serving "
+                         "loop maintains a cross-batch threshold predictor "
+                         "(EMA over previous batches' bucket histograms) "
+                         "and threads it through every engine call")
+    ap.add_argument("--pred-count", type=int, default=None,
+                    help="predictive re-rank pool target (default ~2.5k). "
+                         "The pool is a subset of the static n_cand cut, so "
+                         "on coarse-estimate indexes (paper-default M=d/4 "
+                         "4-bit PQ) a shallow pool trades recall for fewer "
+                         "re-ranks; raise toward n_cand to recover the "
+                         "static selection")
     args = ap.parse_args()
 
     mesh = None
@@ -122,14 +140,29 @@ def main():
     index = build_index(args.method, x, args.n_clusters)
     print(f"[serve] index built in {time.monotonic()-t0:.1f}s", flush=True)
 
+    tau_pred_on = args.tau_pred == "on"
     if args.method == "flat":
+        if tau_pred_on:
+            raise SystemExit("--tau-pred does not apply to the flat baseline")
         searcher = lambda q: flat.search(x, q, args.k)  # noqa: E731
         batch = 1
     else:
+        if tau_pred_on and not args.method.endswith("bbc"):
+            raise SystemExit("--tau-pred on requires a *_bbc method")
         eng = engine.SearchEngine.build(
             index, k=args.k, n_probe=n_probe, n_cand=n_cand,
-            use_bbc=args.method.endswith("bbc"), mesh=mesh)
-        searcher = eng.search
+            use_bbc=args.method.endswith("bbc"), mesh=mesh,
+            pred_count=args.pred_count)
+        if tau_pred_on:
+            # the serving loop owns the predictor: every request folds its
+            # batch histogram into the EMA that thresholds the next request
+            pred_state = [eng.predictor_init()]
+
+            def searcher(qb):
+                r, pred_state[0] = eng.search(qb, pred_state=pred_state[0])
+                return r
+        else:
+            searcher = eng.search
         batch = max(1, args.batch)
 
     batches = [qs[i:i + batch] for i in range(0, args.queries, batch)]
@@ -161,7 +194,7 @@ def main():
     recall = mean_recall(x, qs[:n_sample], all_ids[:n_sample], args.k)
     print(json.dumps({
         "method": args.method, "k": args.k, "batch": batch,
-        "shards": args.shards,
+        "shards": args.shards, "tau_pred": args.tau_pred,
         "qps": round(qps, 2),
         "ms_per_query": round(1e3 * dt / args.queries, 2),
         "ms_per_batch": round(1e3 * dt / len(batches), 2),

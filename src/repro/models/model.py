@@ -7,7 +7,6 @@ a layout copy the serving runtime owns — recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

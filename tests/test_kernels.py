@@ -71,17 +71,20 @@ def test_fused_scan(rng, n, d, m_sub):
                          cb.ew_map, m, tau)
     want = ref.fused_scan(codes, vectors, valid, lut, q, cb.d_min, cb.delta,
                           cb.ew_map, m, tau)
-    names = ["est", "bucket", "hist", "early"]
+    names = ["est", "bucket", "hist", "early", "nmiss"]
     for name, g, w in zip(names, got, want):
         if name == "est":
             # masked lanes are +inf in the kernel; oracle masks identically
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                        rtol=1e-5, atol=1e-5)
-        elif name in ("bucket", "hist"):
+        elif name in ("bucket", "hist", "nmiss"):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
         else:
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                        rtol=1e-4, atol=1e-4)
+    # the miss count is the complement of the predicted lanes
+    n_pred = int(jnp.sum(jnp.isfinite(got[3])))
+    assert int(got[4]) == int(jnp.sum(valid)) - n_pred
 
 
 @pytest.mark.parametrize("n,d", [(256, 64), (999, 1536), (4096, 96)])
@@ -170,9 +173,9 @@ def test_fused_scan_batch(rng, b, n, d, m_sub):
                                 delta, ew, m, tau)
     got = ops.fused_scan_batch(codes, vectors, valid, luts, qs, d_min,
                                delta, ew, m, tau, backend="pallas")
-    names = ["est", "bucket", "hist", "early"]
+    names = ["est", "bucket", "hist", "early", "nmiss"]
     for name, g, w in zip(names, got, want):
-        if name in ("bucket", "hist"):
+        if name in ("bucket", "hist", "nmiss"):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
         else:
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
@@ -188,6 +191,7 @@ def test_fused_scan_batch(rng, b, n, d, m_sub):
                                       np.asarray(single[1]))
         np.testing.assert_array_equal(np.asarray(got[2][bi]),
                                       np.asarray(single[2]))
+        assert int(got[4][bi]) == int(single[4])
 
 
 @pytest.mark.parametrize("b,n,d", [(4, 512, 64), (9, 999, 96), (1, 256, 128)])
@@ -219,7 +223,7 @@ def test_fused_scan_matches_search_semantics(rng):
     lut = jnp.asarray(rng.random((m_sub, k_codes)) * 2, jnp.float32)
     est = jnp.sqrt(jnp.maximum(ref.pq_adc(codes, lut), 0.0))
     cb = rb.build_codebook(est, k=256, m=m)
-    _, bucket, hist, _ = ops.fused_scan(
+    _, bucket, hist, _, _ = ops.fused_scan(
         codes, vectors, valid, lut, q, cb.d_min, cb.delta, cb.ew_map, m,
         jnp.int32(m))
     core_hist = rb.histogram(rb.bucketize(cb, est), m, valid)

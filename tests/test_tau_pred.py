@@ -1,0 +1,367 @@
+"""Predictive early-exact re-rank subsystem: EMA predictor unit tests plus
+undershoot/overshoot exact-id parity with the static paths for all three
+methods (single, batch, and a multidevice-marked sharded case).
+
+Parity cases run with ``pred_count == n_cand`` where the predictive pool is
+STRUCTURALLY equal to the static selection (survivors form an est-prefix and
+the est-priority truncation width matches the static cut), so id equality
+must hold for ANY tau_pred — the cases force the prediction to both extremes
+to exercise the inline-early and fallback legs of the machinery.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import buffer as rb
+from repro.core import rerank
+from repro.data import synthetic
+from repro.index import engine, ivf as ivf_mod, search
+
+N, D, NQ = 8000, 64, 6
+K, N_PROBE = 200, 12
+M_BUCKETS = 128
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(11)
+    x = synthetic.clustered(rng, N, D, n_centers=64)
+    qs = synthetic.queries_from(rng, x, NQ)
+    return jnp.asarray(x), jnp.asarray(qs)
+
+
+@pytest.fixture(scope="module")
+def pq_index(corpus):
+    x, _ = corpus
+    return search.build_pq_index(jax.random.key(0), x, 32, n_iter=4)
+
+
+@pytest.fixture(scope="module")
+def rq_index(corpus):
+    x, _ = corpus
+    return search.build_rabitq_index(jax.random.key(0), x, 32, n_iter=4)
+
+
+def _overshoot_state(m: int, count: int) -> rerank.PredictorState:
+    """Warm state whose cumulative EMA reaches ``count`` only at the last
+    in-range bucket: predict_tau pins to m - 1 (maximal overshoot)."""
+    ema = jnp.zeros((m + 1,), jnp.float32).at[m - 2].set(float(2 * count))
+    return rerank.PredictorState(ema=ema, weight=jnp.float32(1.0))
+
+
+def _undershoot_state(m: int) -> rerank.PredictorState:
+    """Warm state with all EMA mass in bucket 0: predict_tau returns the
+    smallest possible threshold (1 with the default margin)."""
+    ema = jnp.zeros((m + 1,), jnp.float32).at[0].set(1e9)
+    return rerank.PredictorState(ema=ema, weight=jnp.float32(1.0))
+
+
+def _ids_equal(res_a, res_b):
+    a, b = np.asarray(res_a.ids), np.asarray(res_b.ids)
+    for i in range(a.shape[0]):
+        sa, sb = set(a[i].tolist()), set(b[i].tolist())
+        assert sa == sb, (i, len(sa - sb), len(sb - sa))
+
+
+# ---------------------------- predictor unit --------------------------------
+
+def test_predictor_cold_is_disabled():
+    state = rerank.predictor_init(M_BUCKETS)
+    assert float(state.weight) == 0.0
+    assert int(rerank.predict_tau(state, 100)) == -1
+
+
+def test_predictor_ema_converges_on_stationary_stream():
+    """On a stationary histogram stream the bias-corrected EMA converges to
+    the stream's histogram, so predict_tau lands on its threshold bucket
+    (plus the safety margin)."""
+    m = 64
+    rng = np.random.default_rng(3)
+    base = rng.integers(5, 20, m + 1).astype(np.int32)
+    hist = jnp.asarray(np.stack([base] * 4))              # (B, m+1), B=4
+    count = int(base[:m].cumsum()[m // 2])                # mid-range target
+    want_tau, _ = rb.threshold_bucket(jnp.asarray(base), count)
+
+    state = rerank.predictor_init(m)
+    taus = []
+    for _ in range(40):
+        state = rerank.predictor_update(state, hist)
+        taus.append(int(rerank.predict_tau(state, count, margin=0)))
+    assert abs(float(state.weight) - 1.0) < 1e-3
+    np.testing.assert_allclose(np.asarray(state.ema / state.weight),
+                               base.astype(np.float32), rtol=1e-3)
+    # converged: the last predictions all equal the stream's true threshold
+    assert set(taus[-10:]) == {int(want_tau)}
+    # margin shifts the prediction conservatively upward
+    assert int(rerank.predict_tau(state, count, margin=2)) == int(want_tau) + 2
+
+
+def test_predictor_update_accepts_single_and_batched_hists():
+    m = 16
+    state = rerank.predictor_init(m)
+    s1 = rerank.predictor_update(state, jnp.ones((m + 1,), jnp.int32))
+    s2 = rerank.predictor_update(state, jnp.ones((4, m + 1), jnp.int32))
+    np.testing.assert_allclose(np.asarray(s1.ema), np.asarray(s2.ema))
+
+
+def test_predicted_fallback_mask():
+    bucket = jnp.arange(8)[None, :]                        # (1, 8)
+    valid = jnp.ones((1, 8), bool)
+    # undershoot: prediction at 2, truth at 5 -> fallback covers (2, 5]
+    mask = rerank.predicted_fallback_mask(
+        bucket, valid, jnp.int32(2), jnp.int32(5))
+    np.testing.assert_array_equal(
+        np.asarray(mask[0]), [False, False, False, True, True, True, False,
+                              False])
+    # overshoot: prediction at or past truth -> nothing left for the fallback
+    mask = rerank.predicted_fallback_mask(
+        bucket, valid, jnp.int32(5), jnp.int32(3))
+    assert not bool(jnp.any(mask))
+
+
+# ---------------------------- batch parity ----------------------------------
+
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("case", ["cold", "undershoot", "overshoot"])
+def test_pq_batch_predictive_parity(pq_index, corpus, case, fused):
+    """PQ predictive path vs the static BBC path at pred_count == n_cand:
+    exact id parity for cold (no history), forced-undershoot (everything
+    through the fallback pass), and forced-overshoot (everything inline on
+    the fused path) predictions."""
+    _, qs = corpus
+    lay = ivf_mod.flat_layout(pq_index.ivf)
+    n_cand = 8 * K
+    static = search.ivf_pq_search_batch(
+        pq_index, qs, lay, k=K, n_probe=N_PROBE, n_cand=n_cand, use_bbc=True)
+    state = {"cold": rerank.predictor_init(M_BUCKETS),
+             "undershoot": _undershoot_state(M_BUCKETS),
+             "overshoot": _overshoot_state(M_BUCKETS, n_cand)}[case]
+    kwargs = dict(fused=True, backend="pallas") if fused else \
+        dict(fused=False)
+    pred, new_state = search.ivf_pq_search_batch(
+        pq_index, qs, lay, k=K, n_probe=N_PROBE, n_cand=n_cand, use_bbc=True,
+        pred_state=state, pred_count=n_cand, **kwargs)
+    _ids_equal(static, pred)
+    assert float(new_state.weight) > float(state.weight) or \
+        float(state.weight) == 1.0
+    if fused and case == "overshoot":
+        # maximal prediction: the scan covered (almost) the whole selection
+        # inline; only overflow-bucket stragglers reach the second pass
+        assert int(jnp.sum(pred.n_second_pass)) \
+            < int(jnp.sum(pred.n_reranked))
+    if case in ("cold", "undershoot") and not fused:
+        # nothing predicted inline: the fallback re-ranks the entire pool
+        np.testing.assert_array_equal(np.asarray(pred.n_second_pass),
+                                      np.asarray(pred.n_reranked))
+
+
+def test_pq_predictive_shrinks_rerank_pool(pq_index, corpus):
+    """With a warm self-trained predictor and the default pred_count the PQ
+    pool drops well below the static n_cand cut."""
+    _, qs = corpus
+    lay = ivf_mod.flat_layout(pq_index.ivf)
+    n_cand = 8 * K
+    state = rerank.predictor_init(M_BUCKETS)
+    for _ in range(3):
+        res, state = search.ivf_pq_search_batch(
+            pq_index, qs, lay, k=K, n_probe=N_PROBE, n_cand=n_cand,
+            use_bbc=True, pred_state=state)
+    assert float(state.weight) > 0.4
+    assert int(jnp.max(res.n_reranked)) < n_cand
+
+
+@pytest.mark.parametrize("case", ["cold", "undershoot", "overshoot"])
+def test_ivf_batch_predictive_parity(pq_index, corpus, case):
+    """IVF distances are exact in-scan, so predictive selection must equal
+    the static result for ANY prediction."""
+    x, qs = corpus
+    ivf_index = pq_index.ivf
+    lay = ivf_mod.flat_layout(ivf_index)
+    static = search.ivf_search_batch(ivf_index, x, qs, lay, k=K,
+                                     n_probe=N_PROBE, use_bbc=True)
+    state = {"cold": rerank.predictor_init(M_BUCKETS),
+             "undershoot": _undershoot_state(M_BUCKETS),
+             "overshoot": _overshoot_state(M_BUCKETS, K)}[case]
+    pred, _ = search.ivf_search_batch(ivf_index, x, qs, lay, k=K,
+                                      n_probe=N_PROBE, use_bbc=True,
+                                      pred_state=state)
+    _ids_equal(static, pred)
+
+
+@pytest.mark.parametrize("case", ["cold", "overshoot"])
+def test_rabitq_batch_predictive_parity(rq_index, corpus, case):
+    """RaBitQ's band is bound-determined: the predictive path must return
+    bit-identical results while only the second-pass accounting moves."""
+    _, qs = corpus
+    lay = ivf_mod.flat_layout(rq_index.ivf)
+    static = search.ivf_rabitq_search_batch(rq_index, qs, lay, k=K,
+                                            n_probe=N_PROBE, use_bbc=True)
+    state = {"cold": rerank.predictor_init(M_BUCKETS),
+             "overshoot": _overshoot_state(M_BUCKETS, K)}[case]
+    pred, _ = search.ivf_rabitq_search_batch(rq_index, qs, lay, k=K,
+                                             n_probe=N_PROBE, use_bbc=True,
+                                             pred_state=state)
+    _ids_equal(static, pred)
+    np.testing.assert_array_equal(np.asarray(static.n_reranked),
+                                  np.asarray(pred.n_reranked))
+    if case == "cold":
+        # nothing predicted: the whole band is second-pass work
+        np.testing.assert_array_equal(np.asarray(pred.n_second_pass),
+                                      np.asarray(pred.n_reranked))
+    else:
+        # maximal prediction covers the whole band inline
+        assert int(jnp.sum(pred.n_second_pass)) == 0
+
+
+def test_rabitq_warm_predictor_reduces_second_pass(rq_index, corpus):
+    _, qs = corpus
+    lay = ivf_mod.flat_layout(rq_index.ivf)
+    state = rerank.predictor_init(M_BUCKETS)
+    cold, state = search.ivf_rabitq_search_batch(
+        rq_index, qs, lay, k=K, n_probe=N_PROBE, use_bbc=True,
+        pred_state=state)
+    warm, state = search.ivf_rabitq_search_batch(
+        rq_index, qs, lay, k=K, n_probe=N_PROBE, use_bbc=True,
+        pred_state=state)
+    assert int(jnp.sum(warm.n_second_pass)) < int(jnp.sum(cold.n_second_pass))
+
+
+def test_predictive_requires_bbc(pq_index, corpus):
+    _, qs = corpus
+    lay = ivf_mod.flat_layout(pq_index.ivf)
+    with pytest.raises(ValueError, match="use_bbc"):
+        search.ivf_pq_search_batch(
+            pq_index, qs, lay, k=K, n_probe=N_PROBE, n_cand=8 * K,
+            use_bbc=False, pred_state=rerank.predictor_init(M_BUCKETS))
+
+
+# ---------------------------- engine / single -------------------------------
+
+def test_engine_threads_state_and_single_query(pq_index, corpus):
+    _, qs = corpus
+    eng = engine.SearchEngine.build(pq_index, k=64, n_probe=8,
+                                    pred_count=8 * 64)
+    state = eng.predictor_init()
+    rb_, state = eng.search(qs[:3], pred_state=state)
+    assert rb_.ids.shape == (3, 64)
+    assert float(state.weight) > 0
+    # the single-query predictive entry point serves a singleton batch
+    r1, state2 = eng.search(qs[0], pred_state=state)
+    assert r1.ids.shape == (64,)
+    assert float(state2.weight) > float(state.weight)
+    rbatch, _ = eng.search(qs[:1], pred_state=state)
+    assert set(np.asarray(r1.ids).tolist()) \
+        == set(np.asarray(rbatch.ids[0]).tolist())
+    # predictive result matches the static batched engine result
+    static = eng.search(qs[:3])
+    _ids_equal(static, rb_)
+
+
+# ---------------------------- sharded (multidevice) -------------------------
+
+SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import rerank
+    from repro.data import synthetic
+    from repro.index import engine, ivf as ivf_mod, search
+
+    rng = np.random.default_rng(0)
+    n, d, C = 12000, 32, 48
+    k, n_probe, B = 500, 24, 8
+    x = jnp.asarray(synthetic.clustered(rng, n, d, n_centers=48))
+    qs = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), B))
+    key = jax.random.key(0)
+    mesh = jax.make_mesh((8,), ("model",))
+
+    def ids_equal(ra, rb, name, min_overlap=1.0):
+        for b in range(B):
+            sa = set(np.asarray(ra.ids[b]).tolist()) - {-1}
+            sb = set(np.asarray(rb.ids[b]).tolist()) - {-1}
+            overlap = len(sa & sb) / max(len(sa), 1)
+            assert overlap >= min_overlap, (name, b, len(sa - sb),
+                                            len(sb - sa))
+            if min_overlap >= 1.0:
+                assert sa == sb, (name, b, len(sa - sb), len(sb - sa))
+        print(name, "OK", flush=True)
+
+    # --- PQ: sharded predictive vs batched predictive and vs static --------
+    # high-accuracy PQ regime (M=d/2, 8-bit): on concentrated synthetic data
+    # the default M=d/4 4-bit estimate ordering is too noisy for ~pred_count
+    # pools to cover the true top-k (see bench_tau_pred.py's rationale)
+    pq = search.build_pq_index(key, x, C, n_sub=d // 2, n_bits=8)
+    n_cand = 8 * k
+    e1 = engine.SearchEngine.build(pq, k=k, n_probe=n_probe)
+    e2 = engine.SearchEngine.build(pq, k=k, n_probe=n_probe, mesh=mesh)
+    s1, s2 = e1.predictor_init(), e2.predictor_init()
+    for it in range(3):
+        r1, s1 = e1.search(qs, pred_state=s1)
+        r2, s2 = e2.search(qs, pred_state=s2)
+        # codebook samples are gathered in layout order, so the two
+        # deployments' bucket edges differ at float level; when survivors
+        # undershoot the truncation width the pools may diverge by a few
+        # edge candidates (same tolerance as the static rabitq parity test)
+        ids_equal(r1, r2, f"ivfpq_pred_batch_vs_sharded_{it}",
+                  min_overlap=0.99)
+
+    # forced undershoot/overshoot at pred_count == n_cand: structural parity
+    # of the sharded predictive result with the STATIC sharded result
+    e2n = engine.SearchEngine.build(pq, k=k, n_probe=n_probe, mesh=mesh,
+                                    pred_count=n_cand)
+    static = e2n.search(qs)
+    for name, st in (
+        ("cold", e2n.predictor_init()),
+        ("overshoot", rerank.PredictorState(
+            ema=jnp.zeros((e2n.m + 1,), jnp.float32).at[e2n.m - 2].set(
+                float(2 * n_cand)),
+            weight=jnp.float32(1.0))),
+    ):
+        rp, _ = e2n.search(qs, pred_state=st)
+        ids_equal(static, rp, f"ivfpq_pred_{name}_vs_static")
+
+    # --- IVF: exact in-scan, predictive sharded == static sharded ----------
+    ei = engine.SearchEngine.build(pq.ivf, k=k, n_probe=n_probe, vectors=x,
+                                   mesh=mesh)
+    ri_static = ei.search(qs)
+    ri, _ = ei.search(qs, pred_state=ei.predictor_init())
+    ids_equal(ri_static, ri, "ivf_pred_vs_static")
+
+    # --- RaBitQ: predictive sharded == static sharded ----------------------
+    rq = search.build_rabitq_index(key, x, C)
+    er = engine.SearchEngine.build(rq, k=k, n_probe=n_probe, mesh=mesh)
+    rr_static = er.search(qs)
+    rr, sr = er.search(qs, pred_state=er.predictor_init())
+    assert float(sr.weight) > 0
+    ids_equal(rr_static, rr, "ivfrabitq_pred_vs_static")
+    print("TAU_PRED_SHARDED_OK")
+    """
+)
+
+
+@pytest.mark.multidevice
+def test_sharded_predictive_parity():
+    """On a forced 8-device host mesh the predictive sharded engines must
+    match the predictive batched engine (same pool semantics) and, at
+    pred_count == n_cand, the static sharded results for forced
+    undershoot/overshoot predictions."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT], capture_output=True,
+        text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "TAU_PRED_SHARDED_OK" in out.stdout, (
+        out.stdout[-2000:] + "\n" + out.stderr[-3000:])
