@@ -1,0 +1,177 @@
+"""Async micro-batching serving vs the static batch-1 loop at matched load.
+
+Acceptance benchmark for the serving subsystem (``repro.serving``): the same
+seeded open-loop arrival trace (Poisson, heterogeneous k) is served two
+ways —
+
+* **static** — the ``--mode static --batch 1`` baseline: requests are
+  executed one per engine call in arrival order on the same shape-bucketed
+  engines (single-query jit path), the clock advancing by each call's
+  measured wall time.  Throughput saturates at 1/service and the queue
+  grows whenever the offered rate exceeds it.
+* **dynamic** — the deadline-aware micro-batching server: admission
+  control, shape-bucket batch assembly (fire on fill or slack expiry),
+  padded (B, k) engine calls, post-hoc trim.
+
+Offered load is set to a multiple (REPRO_SV_RATE_X, default 3x) of the
+measured static capacity, so the baseline is past saturation and the
+dynamic server must win on real batching throughput, not bookkeeping.
+
+Acceptance (ISSUE 4): dynamic QPS >= 1.5x static QPS at matched offered
+load, ZERO id mismatches vs direct engine calls for every completed
+request, and shed requests return nothing (absent, never incorrect).
+
+Writes ``BENCH_serve_qps.json`` (override with REPRO_BENCH_OUT).  Scale via
+REPRO_SV_N / REPRO_SV_D / REPRO_SV_KS / REPRO_SV_NREQ / REPRO_SV_BATCH /
+REPRO_SV_RATE_X / REPRO_SV_DEADLINE_X (CI smoke runs a tiny configuration).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+from repro.index import search
+from repro.serving import batcher as sv_batcher
+from repro.serving import queue as sv_queue
+from repro.serving import server as sv_server
+from repro.serving.state import ServingState
+
+N = int(os.environ.get("REPRO_SV_N", 40_000))
+D = int(os.environ.get("REPRO_SV_D", 64))
+KS = tuple(int(s) for s in os.environ.get("REPRO_SV_KS", "500,2000").split(","))
+NREQ = int(os.environ.get("REPRO_SV_NREQ", 64))
+BATCH = int(os.environ.get("REPRO_SV_BATCH", 8))
+RATE_X = float(os.environ.get("REPRO_SV_RATE_X", 3.0))
+DEADLINE_X = float(os.environ.get("REPRO_SV_DEADLINE_X", 40.0))
+N_PROBE = int(os.environ.get("REPRO_SV_NPROBE", 0)) or None
+
+
+def _build():
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(common.make_corpus(rng, N, D))
+    qs = synthetic.queries_from(np.random.default_rng(7), np.asarray(x),
+                                NREQ)
+    n_clusters = max(int(np.sqrt(N)), 16)
+    index = search.build_pq_index(jax.random.key(0), x, n_clusters, n_iter=6)
+    return x, qs, index, n_clusters
+
+
+def _measure_static_service(state: ServingState, qs, ceilings, n_probe):
+    """Post-compile mean single-query seconds per bucket (the capacity the
+    offered load is calibrated against)."""
+    per_bucket = {}
+    for k in ceilings:
+        bucket = sv_batcher.bucket_of(k, n_probe, ceilings, 1)
+        eng = state.engine(bucket).warmup(batch_sizes=(1,))
+        ts = []
+        for q in qs[:3]:
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.search(jnp.asarray(q)))
+            ts.append(time.perf_counter() - t0)
+        per_bucket[k] = float(np.median(ts))
+    return per_bucket
+
+
+def _run_static(state: ServingState, trace, ceilings, n_probe):
+    """Arrival-ordered batch-1 loop on the same bucketed engines: the
+    ``--mode static --batch 1`` baseline under the same offered load."""
+    t = trace[0].arrival
+    outcomes = []
+    for req in sorted(trace, key=lambda r: (r.arrival, r.rid)):
+        t = max(t, req.arrival)
+        bucket = sv_batcher.bucket_of(req.k, n_probe, ceilings, 1)
+        eng = state.engine(bucket)
+        t0 = time.perf_counter()
+        res = eng.search(jnp.asarray(req.q))
+        jax.block_until_ready((res.dists, res.ids))
+        t += time.perf_counter() - t0
+        d_r, i_r = sv_server.trim_topk(np.asarray(res.dists),
+                                       np.asarray(res.ids), req.k)
+        outcomes.append(sv_server.Outcome(
+            request=req, status=sv_server.OK, bucket=bucket,
+            ids=i_r.copy(), dists=d_r.copy(),
+            t_done=t, k_effective=req.k))
+    return outcomes
+
+
+def run():
+    x, qs, index, n_clusters = _build()
+    n_probe = N_PROBE or max(n_clusters // 4, 8)
+    ceilings = sv_batcher.k_ceilings(KS)
+
+    # calibrate offered load off the measured static capacity
+    cal_state = ServingState(index, use_bbc=True)
+    svc = _measure_static_service(cal_state, qs, ceilings, n_probe)
+    mean_service = float(np.mean(list(svc.values())))
+    rate = RATE_X / mean_service
+    deadline = DEADLINE_X * mean_service
+    trace = sv_queue.make_trace(np.random.default_rng(5), np.asarray(qs),
+                                KS, rate=rate, deadline=deadline,
+                                n_probe=n_probe, pattern="poisson")
+
+    static_out = _run_static(cal_state, trace, ceilings, n_probe)
+    static_sum = sv_server.summarize(static_out)
+
+    dyn_state = ServingState(index, use_bbc=True)
+    srv = sv_server.Server(dyn_state, ceilings, BATCH,
+                           max_wait=deadline / 4)
+    dyn_out = srv.run_trace(trace)
+    dyn_sum = sv_server.summarize(dyn_out)
+
+    parity, n_checked = sv_server.parity_vs_direct(dyn_state, dyn_out)
+    shed = [o for o in dyn_out if o.status == sv_server.SHED]
+    shed_clean = all(o.ids is None and o.dists is None for o in shed)
+
+    qps_ratio = dyn_sum["qps"] / max(static_sum["qps"], 1e-9)
+    rows = [dict(mode="static_b1", **static_sum),
+            dict(mode="dynamic", **dyn_sum)]
+    for r in rows:
+        common.emit(
+            f"serve/{r['mode']}", 1e6 / max(r["qps"], 1e-9),
+            f"qps={r['qps']};p99_ms={r['p99_ms']};shed={r['shed_rate']}")
+
+    payload = {
+        "bench": "serve_qps",
+        "corpus": {"n": N, "d": D, "corpus": common.CORPUS},
+        "config": {"ks": list(KS), "n_requests": NREQ, "batch": BATCH,
+                   "n_probe": n_probe, "offered_rate": round(rate, 2),
+                   "rate_x_capacity": RATE_X,
+                   "deadline_ms": round(deadline * 1e3, 2),
+                   "static_service_ms": {
+                       str(k): round(v * 1e3, 3) for k, v in svc.items()}},
+        "platform": jax.devices()[0].platform,
+        "results": rows,
+        "acceptance": {
+            "qps_static": static_sum["qps"],
+            "qps_dynamic": dyn_sum["qps"],
+            "qps_ratio": round(qps_ratio, 2),
+            "target_ratio": 1.5,
+            "ids_match": round(parity, 4),
+            "parity_checked": n_checked,
+            "shed_returns_nothing": bool(shed_clean),
+            # n_checked > 0 guards the vacuous case: an all-shed run has
+            # parity 1.0 over zero requests and must not pass
+            "pass": bool(qps_ratio >= 1.5 and parity == 1.0
+                         and n_checked > 0 and shed_clean),
+        },
+    }
+    out_path = os.environ.get("REPRO_BENCH_OUT", "BENCH_serve_qps.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
+    if os.environ.get("REPRO_SV_STRICT") == "1" and \
+            not payload["acceptance"]["pass"]:
+        raise SystemExit(f"bench_serve acceptance failed: "
+                         f"{payload['acceptance']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import functools
 import os
+import sys
 import time
 
 import jax
@@ -23,6 +24,43 @@ N = int(os.environ.get("REPRO_BENCH_N", 60_000))
 D = int(os.environ.get("REPRO_BENCH_D", 128))
 NQ = int(os.environ.get("REPRO_BENCH_Q", 5))
 N_CLUSTERS = max(int(np.sqrt(N)), 16)
+
+CORPUS_KINDS = ("clustered", "manifold", "isotropic")
+
+
+def _corpus_kind() -> str:
+    """Corpus generator selection: ``--corpus KIND`` on any bench's argv
+    (scanned here so every suite gets the flag without its own argparse),
+    else REPRO_BENCH_CORPUS, else the Gaussian-mixture default."""
+    argv = sys.argv
+    kind = os.environ.get("REPRO_BENCH_CORPUS", "clustered")
+    for i, a in enumerate(argv):
+        if a == "--corpus" and i + 1 < len(argv):
+            kind = argv[i + 1]
+        elif a.startswith("--corpus="):
+            kind = a.split("=", 1)[1]
+    if kind not in CORPUS_KINDS:
+        raise SystemExit(f"--corpus must be one of {CORPUS_KINDS}, "
+                         f"got {kind!r}")
+    return kind
+
+
+CORPUS = _corpus_kind()
+
+
+def make_corpus(rng: np.random.Generator, n: int, d: int,
+                kind: str | None = None,
+                n_centers: int | None = None) -> np.ndarray:
+    """Build a synthetic corpus of the requested kind (see data/synthetic)."""
+    kind = kind or CORPUS
+    n_centers = n_centers or max(n // 200, 32)
+    if kind == "clustered":
+        return synthetic.clustered(rng, n, d, n_centers=n_centers)
+    if kind == "manifold":
+        return synthetic.manifold(rng, n, d, n_centers=n_centers)
+    if kind == "isotropic":
+        return synthetic.isotropic(rng, n, d)
+    raise ValueError(f"unknown corpus kind {kind!r}")
 
 _ROWS: list[str] = []
 
@@ -40,7 +78,7 @@ def rows() -> list[str]:
 @functools.lru_cache(maxsize=1)
 def corpus():
     rng = np.random.default_rng(42)
-    x = synthetic.clustered(rng, N, D, n_centers=max(N // 200, 32))
+    x = make_corpus(rng, N, D)
     qs = synthetic.queries_from(rng, x, NQ)
     return jnp.asarray(x), jnp.asarray(qs)
 

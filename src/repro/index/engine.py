@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -205,6 +206,13 @@ def _resolve_strategy(index, vectors):
     raise TypeError(f"unsupported index type: {type(index)!r}")
 
 
+def resolve_kind(index, vectors=None) -> str:
+    """Method kind ("ivf" | "ivfpq" | "ivfrabitq") for an index object —
+    the dispatch `build` uses, exposed for layers above the engine (the
+    serving subsystem keys predictor state by it)."""
+    return _resolve_strategy(index, vectors)[0].kind
+
+
 # --------------------------------------------------------------------------
 # Engine
 # --------------------------------------------------------------------------
@@ -285,6 +293,36 @@ class SearchEngine:
     def predictor_init(self) -> rerank.PredictorState:
         """Cold cross-batch threshold-predictor state for this engine."""
         return rerank.predictor_init(self.m)
+
+    @property
+    def dim(self) -> int:
+        """Corpus dimensionality (the query width every entry point takes)."""
+        src = self.vectors if self.kind == "ivf" else self.index.vectors
+        return int(src.shape[1])
+
+    def warmup(self, batch_sizes=(1,),
+               predictive: bool = False) -> "SearchEngine":
+        """AOT warmup: run (and block on) a dummy search through every jit
+        shape serving will hit, so steady-state traffic never pays a
+        compile.  ``batch_sizes`` are the padded batch widths to compile
+        (B == 1 also compiles the dedicated single-query path on the
+        single-device deployment; the sharded deployment is natively
+        batched, so its collective program is compiled by the same
+        ``search_batch`` calls).  ``predictive`` additionally compiles the
+        tau_pred variants against a throwaway cold state — the EMA the
+        serving loop owns is never touched."""
+        qs = jnp.zeros((max(batch_sizes), self.dim), jnp.float32)
+        state = self.predictor_init() if predictive else None
+        for b in sorted(set(int(b) for b in batch_sizes)):
+            if b < 1:
+                raise ValueError(f"batch sizes must be >= 1, got {b}")
+            jax.block_until_ready(self.search_batch(qs[:b]))
+            if b == 1 and not self.sharded:
+                jax.block_until_ready(self.search_one(qs[0]))
+            if state is not None:
+                res, _ = self.search_batch(qs[:b], pred_state=state)
+                jax.block_until_ready(res)
+        return self
 
     def search(self, qs: jax.Array, pred_state=None):
         """(B, d) batch or (d,) single query -> SearchResult (or

@@ -22,6 +22,21 @@ maintains a cross-batch threshold predictor (EMA over the bucket histograms
 of previous batches) and threads it through every engine call, so the
 re-rank pool shrinks from the static n_cand cut to the predicted threshold
 with a correctness fallback (see index/engine.py and core/rerank.py).
+
+``--mode async`` serves an asynchronous open-loop request stream through
+the micro-batching subsystem (``repro.serving``): a seeded synthetic trace
+(``--trace poisson|bursty`` at ``--rate`` req/s, per-request deadline
+``--deadline-ms``, heterogeneous k via ``--k-choices``) flows through
+admission control and deadline-aware batch assembly onto AOT-warmed
+(B, k)-bucketed engines; ``--mode static`` is the fixed-batch loop above.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode async --rate 200 \
+      --deadline-ms 500 --k-choices 1000,5000 --max-batch 16
+
+The last stdout line of either mode is one machine-readable JSON summary
+(QPS, latency percentiles, shed/deadline rates, recall sample); with
+``--check-parity`` the async mode also verifies every completed request's
+ids against a direct engine call and exits non-zero on any mismatch.
 """
 from __future__ import annotations
 
@@ -51,9 +66,15 @@ def _forced_shards() -> int:
     return 1
 
 
-if __name__ == "__main__":
-    # only when running as the serve entrypoint — importing this module for
-    # its helpers must not scan argv or rewrite the process environment
+def _is_entrypoint() -> bool:
+    """True when this module IS the serve entrypoint (``python -m`` or the
+    ``repro-serve`` console script) — importing it for its helpers must not
+    scan argv or rewrite the process environment."""
+    return __name__ == "__main__" or \
+        os.path.basename(sys.argv[0] or "").startswith("repro-serve")
+
+
+if _is_entrypoint():
     _n_shards = _forced_shards()
     if _n_shards > 1 and "xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -82,64 +103,28 @@ def build_index(method: str, x, n_clusters: int, seed: int = 0):
     return None
 
 
-def mean_recall(x, qs, ids_by_query, k: int) -> float:
-    """Mean recall@k over a query sample, against exact ground truth."""
+def mean_recall_entries(x, entries) -> float:
+    """Mean recall over (query, ids, k) triples, against exact ground truth
+    (per-entry k so heterogeneous-k serving outcomes average correctly)."""
     recalls = []
-    for q, ids in zip(qs, ids_by_query):
+    for q, ids, k in entries:
         _, gt_i = flat.search(x, q, k)
         got = set(np.asarray(ids).tolist()) - {-1}
         recalls.append(len(got & set(np.asarray(gt_i).tolist())) / k)
-    return float(np.mean(recalls))
+    return float(np.mean(recalls)) if recalls else float("nan")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=100_000)
-    ap.add_argument("--d", type=int, default=96)
-    ap.add_argument("--k", type=int, default=5_000)
-    ap.add_argument("--method", choices=METHODS, default="ivfpq_bbc")
-    ap.add_argument("--n-probe", type=int, default=64)
-    ap.add_argument("--n-clusters", type=int, default=316)
-    ap.add_argument("--queries", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=32,
-                    help="queries per engine call (1 = single-query path)")
-    ap.add_argument("--shards", type=int, default=1,
-                    help="mesh-shard the corpus over this many devices "
-                         "(forces host devices when none are present)")
-    ap.add_argument("--tau-pred", choices=("on", "off"), default="off",
-                    help="predictive early-exact re-ranking: the serving "
-                         "loop maintains a cross-batch threshold predictor "
-                         "(EMA over previous batches' bucket histograms) "
-                         "and threads it through every engine call")
-    ap.add_argument("--pred-count", type=int, default=None,
-                    help="predictive re-rank pool target (default ~2.5k). "
-                         "The pool is a subset of the static n_cand cut, so "
-                         "on coarse-estimate indexes (paper-default M=d/4 "
-                         "4-bit PQ) a shallow pool trades recall for fewer "
-                         "re-ranks; raise toward n_cand to recover the "
-                         "static selection")
-    args = ap.parse_args()
+def sample_indices(n: int, n_sample: int) -> np.ndarray:
+    """Evenly spaced sample over [0, n) that always includes the LAST index,
+    so the recall estimate covers the ragged tail batch instead of weighting
+    only the leading full batches."""
+    return np.unique(np.linspace(0, max(n - 1, 0),
+                                 min(n_sample, n)).round().astype(int))
 
-    mesh = None
-    if args.shards > 1:
-        if args.method == "flat":
-            raise SystemExit("--shards does not apply to the flat baseline")
-        if len(jax.devices()) < args.shards:
-            raise SystemExit(
-                f"--shards {args.shards} needs {args.shards} devices, have "
-                f"{len(jax.devices())} (is XLA_FLAGS already set?)")
-        mesh = jax.make_mesh((args.shards,), ("model",))
 
-    n_probe = min(args.n_probe, args.n_clusters)
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(synthetic.clustered(rng, args.n, args.d))
-    qs = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), args.queries))
+def run_static(args, x, qs, index, mesh, n_probe):
+    """The fixed-batch synchronous loop (PR 1-3 behavior)."""
     n_cand = min(8 * args.k, args.n)
-
-    t0 = time.monotonic()
-    index = build_index(args.method, x, args.n_clusters)
-    print(f"[serve] index built in {time.monotonic()-t0:.1f}s", flush=True)
-
     tau_pred_on = args.tau_pred == "on"
     if args.method == "flat":
         if tau_pred_on:
@@ -187,19 +172,175 @@ def main():
     dt = time.monotonic() - t0
     qps = args.queries / dt
 
-    # recall over a sample of queries vs exact ground truth (the previous
-    # single-query spot check was too noisy to mean anything)
+    # recall sample vs exact ground truth, evenly spaced over the WHOLE
+    # query stream (always includes the last query, so the ragged tail
+    # batch is covered instead of sampling only the leading full batches)
     all_ids = [row for ids in results for row in np.asarray(ids)]
-    n_sample = min(RECALL_SAMPLE, args.queries)
-    recall = mean_recall(x, qs[:n_sample], all_ids[:n_sample], args.k)
+    idx = sample_indices(args.queries, RECALL_SAMPLE)
+    recall = mean_recall_entries(
+        x, [(qs[i], all_ids[i], args.k) for i in idx])
     print(json.dumps({
+        "mode": "static",
         "method": args.method, "k": args.k, "batch": batch,
         "shards": args.shards, "tau_pred": args.tau_pred,
         "qps": round(qps, 2),
         "ms_per_query": round(1e3 * dt / args.queries, 2),
         "ms_per_batch": round(1e3 * dt / len(batches), 2),
         "recall_mean": round(recall, 4),
-        "recall_queries": n_sample}))
+        "recall_queries": int(len(idx))}))
+    return 0
+
+
+def run_async(args, x, qs, index, mesh, n_probe):
+    """The micro-batching event loop over ``repro.serving``."""
+    from repro.serving import batcher as sv_batcher
+    from repro.serving import queue as sv_queue
+    from repro.serving import server as sv_server
+    from repro.serving.state import ServingState
+
+    if args.method == "flat":
+        raise SystemExit("--mode async does not apply to the flat baseline")
+    tau_pred_on = args.tau_pred == "on"
+    if tau_pred_on and not args.method.endswith("bbc"):
+        raise SystemExit("--tau-pred on requires a *_bbc method")
+    if tau_pred_on and args.check_parity:
+        raise SystemExit(
+            "--check-parity compares against non-predictive direct calls; "
+            "run it with --tau-pred off")
+
+    ks = tuple(int(s) for s in args.k_choices.split(",")) \
+        if args.k_choices else (args.k,)
+    deadline = args.deadline_ms / 1e3
+    trace = sv_queue.make_trace(
+        np.random.default_rng(args.seed), np.asarray(qs), ks,
+        rate=args.rate, deadline=deadline, n_probe=n_probe,
+        pattern=args.trace, burst=args.burst)
+
+    state = ServingState(
+        index, use_bbc=args.method.endswith("bbc"), tau_pred=tau_pred_on,
+        mesh=mesh, pred_count=args.pred_count)
+    srv = sv_server.Server(
+        state, ceilings=sv_batcher.k_ceilings(ks), batch=args.max_batch,
+        admission=not args.no_admission,
+        max_wait=(args.max_wait_ms / 1e3 if args.max_wait_ms else None))
+    n_buckets = len({(min(r.k, max(ks)), r.n_probe) for r in trace})
+    t0 = time.monotonic()
+    srv.warmup(trace)
+    print(f"[serve] warmed {n_buckets} shape buckets in "
+          f"{time.monotonic()-t0:.1f}s", flush=True)
+    outcomes = srv.run_trace(trace, warmup=False)
+
+    summary = sv_server.summarize(outcomes)
+    done = [o for o in outcomes if o.status != sv_server.SHED]
+    idx = sample_indices(len(done), RECALL_SAMPLE)
+    # None (json null), not NaN, when everything was shed — the summary
+    # line must stay strictly parseable exactly when it reports a pathology
+    recall = mean_recall_entries(
+        x, [(jnp.asarray(done[i].request.q), done[i].ids,
+             done[i].k_effective) for i in idx]) if done else None
+
+    parity = n_checked = None
+    if args.check_parity:
+        parity, n_checked = sv_server.parity_vs_direct(state, outcomes)
+
+    summary.update({
+        "mode": "async", "method": args.method, "trace": args.trace,
+        "rate": args.rate, "deadline_ms": args.deadline_ms,
+        "k_choices": list(ks), "max_batch": args.max_batch,
+        "shards": args.shards, "tau_pred": args.tau_pred,
+        "recall_mean": round(recall, 4) if recall is not None else None,
+        "recall_queries": int(len(idx)),
+    })
+    if parity is not None:
+        summary["parity"] = round(parity, 4)
+        summary["parity_checked"] = n_checked
+    print(json.dumps(summary))
+    # an all-shed run verified nothing: that's a parity FAILURE, not a pass
+    return 1 if (parity is not None and (parity < 1.0 or n_checked == 0)) \
+        else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=96)
+    ap.add_argument("--k", type=int, default=5_000)
+    ap.add_argument("--method", choices=METHODS, default="ivfpq_bbc")
+    ap.add_argument("--n-probe", type=int, default=64)
+    ap.add_argument("--n-clusters", type=int, default=316)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--mode", choices=("static", "async"), default="static",
+                    help="static = fixed-batch synchronous loop; async = "
+                         "deadline-aware micro-batching over an open-loop "
+                         "arrival trace (repro.serving)")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="[static] queries per engine call (1 = "
+                         "single-query path)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="mesh-shard the corpus over this many devices "
+                         "(forces host devices when none are present)")
+    ap.add_argument("--tau-pred", choices=("on", "off"), default="off",
+                    help="predictive early-exact re-ranking: the serving "
+                         "loop maintains a cross-batch threshold predictor "
+                         "(EMA over previous batches' bucket histograms) "
+                         "and threads it through every engine call "
+                         "(per shape bucket in --mode async)")
+    ap.add_argument("--pred-count", type=int, default=None,
+                    help="predictive re-rank pool target (default ~2.5k). "
+                         "The pool is a subset of the static n_cand cut, so "
+                         "on coarse-estimate indexes (paper-default M=d/4 "
+                         "4-bit PQ) a shallow pool trades recall for fewer "
+                         "re-ranks; raise toward n_cand to recover the "
+                         "static selection")
+    # -- async-mode knobs ---------------------------------------------------
+    ap.add_argument("--trace", choices=("poisson", "bursty"),
+                    default="poisson", help="[async] arrival pattern")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="[async] offered load, requests/s")
+    ap.add_argument("--deadline-ms", type=float, default=500.0,
+                    help="[async] per-request deadline after arrival")
+    ap.add_argument("--k-choices", type=str, default="",
+                    help="[async] comma-separated k values sampled per "
+                         "request (default: just --k); the bucket ladder")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="[async] padded batch width B of the shape buckets")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="[async] cap on queueing wait before a partial "
+                         "batch fires (default: deadline-slack only)")
+    ap.add_argument("--burst", type=int, default=8,
+                    help="[async] burst size for --trace bursty")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="[async] disable admission control (serve "
+                         "everything, deadlines may blow)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="[async] verify every completed request's ids "
+                         "against a direct engine call; exit non-zero on "
+                         "any mismatch")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace/corpus RNG seed")
+    args = ap.parse_args()
+
+    mesh = None
+    if args.shards > 1:
+        if args.method == "flat":
+            raise SystemExit("--shards does not apply to the flat baseline")
+        if len(jax.devices()) < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs {args.shards} devices, have "
+                f"{len(jax.devices())} (is XLA_FLAGS already set?)")
+        mesh = jax.make_mesh((args.shards,), ("model",))
+
+    n_probe = min(args.n_probe, args.n_clusters)
+    rng = np.random.default_rng(args.seed)
+    x = jnp.asarray(synthetic.clustered(rng, args.n, args.d))
+    qs = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), args.queries))
+
+    t0 = time.monotonic()
+    index = build_index(args.method, x, args.n_clusters)
+    print(f"[serve] index built in {time.monotonic()-t0:.1f}s", flush=True)
+
+    run = run_async if args.mode == "async" else run_static
+    sys.exit(run(args, x, qs, index, mesh, n_probe))
 
 
 if __name__ == "__main__":

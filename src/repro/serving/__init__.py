@@ -1,0 +1,14 @@
+"""Async micro-batching serving subsystem (queue -> admission -> batcher ->
+engine); see ``server.Server`` for the composition root."""
+from repro.serving.admission import (ACCEPT, DEGRADE, SHED, # noqa: F401
+                                     AdmissionController, Decision,
+                                     ServiceEMA)
+from repro.serving.batcher import (Batch, MicroBatcher,      # noqa: F401
+                                   ShapeBucket, assemble, bucket_of,
+                                   k_ceilings)
+from repro.serving.queue import (Request, RequestQueue,      # noqa: F401
+                                 bursty_arrivals, make_trace,
+                                 poisson_arrivals)
+from repro.serving.server import (Outcome, Server,             # noqa: F401
+                                  parity_vs_direct, summarize, trim_topk)
+from repro.serving.state import ServingState                 # noqa: F401

@@ -1,0 +1,110 @@
+"""Admission control: per-shape-bucket service-time EMA + shed / k-cap.
+
+An open-loop arrival stream can exceed the engine's capacity; without
+admission control the queue grows without bound and EVERY request blows its
+deadline.  The controller keeps the served set feasible by rejecting work at
+enqueue time, using the only two facts it can know cheaply:
+
+* a per-bucket **service-time EMA** (`ServiceEMA`) fed by the measured wall
+  time of every completed batch — the same estimate the batcher's
+  fire-on-slack rule uses, so scheduling and admission agree on capacity;
+* the current **queue depth** per bucket, read from the batcher.
+
+For a request whose deadline is unmeetable at its own bucket the controller
+first tries to **degrade** it — cap ``k`` to a smaller bucket ceiling whose
+(cheaper) service estimate fits the deadline; the caller gets fewer results,
+flagged, never wrong ones — and only **sheds** when no ladder rung fits.
+Shedding returns nothing for that request: absent, not incorrect.
+
+``decide`` is a pure function of (request, now, queue depths, EMA state), so
+a seeded trace with a fixed service model replays the exact same admission
+decisions — the determinism test in ``tests/test_serving.py`` relies on it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+from repro.serving.batcher import ShapeBucket, bucket_of
+from repro.serving.queue import Request
+
+ACCEPT = "accept"
+DEGRADE = "degrade"
+SHED = "shed"
+
+
+class ServiceEMA:
+    """Exponential moving average of measured batch service seconds,
+    per shape bucket.  ``cold`` is the optimistic prior returned before the
+    first observation of a bucket (optimistic on purpose: a cold server
+    should try to serve, not shed — the EMA corrects within a few batches).
+    """
+
+    def __init__(self, decay: float = 0.6, cold: float = 0.02):
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        self.decay = float(decay)
+        self.cold = float(cold)
+        self._ema: dict[ShapeBucket, float] = {}
+
+    def observe(self, bucket: ShapeBucket, seconds: float) -> None:
+        prev = self._ema.get(bucket)
+        self._ema[bucket] = (seconds if prev is None else
+                             self.decay * prev + (1 - self.decay) * seconds)
+
+    def estimate(self, bucket: ShapeBucket) -> float:
+        return self._ema.get(bucket, self.cold)
+
+    def observed(self, bucket: ShapeBucket) -> bool:
+        return bucket in self._ema
+
+
+@dataclass(frozen=True)
+class Decision:
+    """Admission verdict for one request."""
+
+    action: str                      # ACCEPT | DEGRADE | SHED
+    bucket: ShapeBucket | None       # bucket to run in (None when shed)
+    k: int                           # effective k (== request k on accept)
+    finish_est: float                # estimated completion time
+
+
+class AdmissionController:
+    """Shed-or-degrade admission over the bucket ladder."""
+
+    def __init__(self, service: ServiceEMA, ceilings: Sequence[int],
+                 batch: int, allow_degrade: bool = True,
+                 slack_margin: float = 0.0):
+        self.service = service
+        self.ceilings = tuple(sorted(ceilings))
+        self.batch = int(batch)
+        self.allow_degrade = bool(allow_degrade)
+        self.slack_margin = float(slack_margin)
+
+    def _backlog(self, depths: Mapping[ShapeBucket, int]) -> float:
+        """Estimated seconds to drain everything already queued: the
+        executor serves one batch at a time, so the wait is the sum over
+        buckets of (whole batches queued) x (that bucket's service EMA)."""
+        return sum(-(-depth // b.batch) * self.service.estimate(b)
+                   for b, depth in depths.items() if depth > 0)
+
+    def decide(self, req: Request, now: float,
+               depths: Mapping[ShapeBucket, int]) -> Decision:
+        wait = self._backlog(depths)
+        # own bucket first; then (k-cap) smaller ceilings, largest first,
+        # so a degraded request keeps as much of its k as the deadline allows
+        ladder = [c for c in self.ceilings if c >= req.k] or \
+                 [self.ceilings[-1]]
+        candidates = ladder[:1]
+        if self.allow_degrade:
+            candidates += [c for c in reversed(self.ceilings) if c < req.k]
+        for i, ceil in enumerate(candidates):
+            bucket = bucket_of(min(req.k, ceil), req.n_probe,
+                               self.ceilings, self.batch)
+            finish = now + wait + self.service.estimate(bucket)
+            if finish <= req.deadline - self.slack_margin:
+                action = ACCEPT if i == 0 and ceil >= req.k else DEGRADE
+                return Decision(action=action, bucket=bucket,
+                                k=min(req.k, ceil), finish_est=finish)
+        return Decision(action=SHED, bucket=None, k=req.k,
+                        finish_est=now + wait)

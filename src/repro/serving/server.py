@@ -1,0 +1,244 @@
+"""Composition root: the async serving loop (trace in, outcomes out).
+
+``Server`` wires queue -> admission -> micro-batcher -> engine into one
+discrete-event loop.  Time is explicit: arrivals come from the (sorted)
+request trace, service time is either measured around the real engine call
+(production / benchmarks) or injected via ``service_time_fn`` (deterministic
+tests), and the loop advances the clock to the next arrival or the next
+slack-expiry fire when nothing is runnable.  A single executor is modeled:
+batches serve one at a time and the clock advances by each batch's service
+time, so queueing delay, deadline misses, and shed decisions all emerge from
+the same timeline the latency percentiles are computed on.
+
+Correctness contract (the acceptance bar in ISSUE/bench_serve): a completed
+request's ids are EXACTLY the ids a direct engine call at its bucket — a
+singleton batch through ``SearchEngine.search_batch``, the entry point
+serving drives — would return, trimmed to its (possibly k-capped) ``k``:
+padding, batch composition, and scheduling never change results.  (The
+dedicated single-query RaBitQ searcher phases its evaluations differently
+from the batched band evaluation and can legitimately differ near the k-th
+boundary, which is why the contract is stated against the batched entry
+point.)  Shed requests return nothing (``ids is None``): absent, never
+incorrect.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import admission as adm
+from repro.serving.batcher import Batch, MicroBatcher, ShapeBucket, \
+    assemble, bucket_of
+from repro.serving.queue import Request
+from repro.serving.state import ServingState
+
+OK = "ok"
+DEGRADED = "degraded"
+SHED = "shed"
+
+
+def trim_topk(dists: np.ndarray, ids: np.ndarray,
+              k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Trim one bucket-ceiling result row to its request's ``k``.
+
+    Rows are sorted by reported distance first: a no-op for the IVF / PQ
+    paths (their rows come back ascending, so the prefix of a top-bucket.k
+    selection IS the top-k), and for RaBitQ — whose rows interleave
+    bound-certified members (reporting estimates) with re-ranked members
+    (reporting exact distances) — it makes the prefix the method's best-k
+    by reported distance.  Every consumer (the server, the parity checks in
+    serve.py / bench_serve.py, the tests) trims through this one helper so
+    "served result" and "direct engine call" always mean the same rows.
+    """
+    order = np.argsort(dists, kind="stable")[:k]
+    return dists[order], ids[order]
+
+
+def parity_vs_direct(state: ServingState,
+                     outcomes: Sequence["Outcome"]) -> tuple[float, int]:
+    """Fraction of completed outcomes whose ids exactly match a direct
+    engine call at their bucket — a singleton batch through the same
+    ``search_batch`` entry point serving drives, trimmed through
+    ``trim_topk`` — plus the count checked.  This is THE correctness
+    contract; the CI smoke (serve.py --check-parity) and the acceptance
+    bench (bench_serve.py) both call it so "parity" cannot drift between
+    them.  Callers must treat a zero count as a failure, not a pass: an
+    all-shed run verified nothing."""
+    done = [o for o in outcomes if o.status != SHED]
+    bad = 0
+    for o in done:
+        direct = state.engine(o.bucket).search_batch(
+            jnp.asarray(o.request.q)[None])
+        _, want = trim_topk(np.asarray(direct.dists)[0],
+                            np.asarray(direct.ids)[0], o.k_effective)
+        if set(want.tolist()) != set(o.ids.tolist()):
+            bad += 1
+    return (1.0 - bad / max(len(done), 1)), len(done)
+
+
+@dataclass(frozen=True, eq=False)
+class Outcome:
+    """Terminal record for one request."""
+
+    request: Request
+    status: str                     # OK | DEGRADED | SHED
+    bucket: ShapeBucket | None
+    ids: np.ndarray | None          # (k_effective,) — None when shed
+    dists: np.ndarray | None
+    t_done: float
+    k_effective: int
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.request.arrival
+
+    @property
+    def deadline_met(self) -> bool:
+        return self.status != SHED and self.t_done <= self.request.deadline
+
+
+class Server:
+    """Deadline-aware micro-batching server over a ``ServingState``."""
+
+    def __init__(self, state: ServingState, ceilings: Sequence[int],
+                 batch: int, *, admission: bool = True,
+                 allow_degrade: bool = True, slack_margin: float = 0.0,
+                 max_wait: float | None = None,
+                 service_decay: float = 0.6, service_cold: float = 0.02,
+                 service_time_fn: Callable[[ShapeBucket], float]
+                 | None = None):
+        self.state = state
+        self.service = adm.ServiceEMA(decay=service_decay, cold=service_cold)
+        self.batcher = MicroBatcher(ceilings, batch,
+                                    service_est=self.service.estimate,
+                                    slack_margin=slack_margin,
+                                    max_wait=max_wait)
+        self.admission = adm.AdmissionController(
+            self.service, self.batcher.ceilings, batch,
+            allow_degrade=allow_degrade, slack_margin=slack_margin) \
+            if admission else None
+        self.service_time_fn = service_time_fn
+
+    # -- engine execution ---------------------------------------------------
+
+    def _serve(self, batch: Batch):
+        t0 = time.perf_counter()
+        res = self.state.run(batch)
+        jax.block_until_ready((res.dists, res.ids))
+        dt = time.perf_counter() - t0
+        if self.service_time_fn is not None:
+            dt = self.service_time_fn(batch.bucket)
+        return dt, res
+
+    def warmup(self, trace: Sequence[Request]) -> "Server":
+        """AOT warmup off the serving timeline: precompile every shape
+        bucket the trace will hit (`ServingState.warmup` ->
+        `SearchEngine.warmup`), then seed the service-time EMA with one
+        measured post-compile batch per bucket so the first admission
+        decisions already see realistic service estimates."""
+        buckets = sorted({
+            bucket_of(min(r.k, self.batcher.ceilings[-1]), r.n_probe,
+                      self.batcher.ceilings, self.batcher.batch)
+            for r in trace})
+        self.state.warmup(buckets)
+        for bucket in buckets:
+            reqs = [r for r in trace
+                    if bucket_of(min(r.k, self.batcher.ceilings[-1]),
+                                 r.n_probe, self.batcher.ceilings,
+                                 self.batcher.batch) == bucket]
+            dt, _ = self._serve(assemble(bucket, reqs[:bucket.batch]))
+            self.service.observe(bucket, dt)
+        return self
+
+    # -- the event loop -----------------------------------------------------
+
+    def _finish(self, batch: Batch, res, t_done: float,
+                outcomes: dict[int, Outcome]) -> None:
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        for j, req in enumerate(batch.requests):
+            status = DEGRADED if req.k_requested is not None else OK
+            d_j, i_j = trim_topk(dists[j], ids[j], req.k)
+            outcomes[req.rid] = Outcome(
+                request=req, status=status, bucket=batch.bucket,
+                ids=i_j.copy(), dists=d_j.copy(),
+                t_done=t_done, k_effective=req.k)
+
+    def run_trace(self, trace: Sequence[Request],
+                  warmup: bool = True) -> list[Outcome]:
+        """Serve a whole (seeded) trace; returns outcomes in rid order."""
+        trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        if warmup and trace:
+            self.warmup(trace)
+        outcomes: dict[int, Outcome] = {}
+        t = trace[0].arrival if trace else 0.0
+        i = 0
+        while True:
+            # ingest every arrival at or before now, through admission
+            while i < len(trace) and trace[i].arrival <= t:
+                req = trace[i]
+                i += 1
+                if self.admission is None:
+                    self.batcher.submit(req.k_capped(
+                        self.batcher.ceilings[-1]))
+                    continue
+                dec = self.admission.decide(req, t, self.batcher.depths())
+                if dec.action == adm.SHED:
+                    outcomes[req.rid] = Outcome(
+                        request=req, status=SHED, bucket=None, ids=None,
+                        dists=None, t_done=t, k_effective=0)
+                else:
+                    self.batcher.submit(req.k_capped(dec.k))
+
+            fired = self.batcher.fire_ready(t)
+            if fired:
+                for batch in fired:
+                    dt, res = self._serve(batch)
+                    self.service.observe(batch.bucket, dt)
+                    t += dt
+                    self._finish(batch, res, t, outcomes)
+                continue   # service time passed: re-check arrivals first
+
+            # idle: jump to the next arrival or the next slack-expiry fire
+            nxt = []
+            if i < len(trace):
+                nxt.append(trace[i].arrival)
+            fire_at = self.batcher.next_fire_time(t)
+            if fire_at is not None:
+                nxt.append(fire_at)
+            if not nxt:
+                break
+            t = max(t, min(nxt))
+        return [outcomes[r.rid] for r in sorted(trace, key=lambda r: r.rid)]
+
+
+def summarize(outcomes: Sequence[Outcome]) -> dict:
+    """Aggregate serving metrics for reporting (QPS over the busy span,
+    latency percentiles over completed requests, shed / degrade /
+    deadline-met rates)."""
+    n = len(outcomes)
+    done = [o for o in outcomes if o.status != SHED]
+    lat = np.array([o.latency for o in done])
+    t0 = min(o.request.arrival for o in outcomes) if outcomes else 0.0
+    t1 = max(o.t_done for o in done) if done else t0
+    span = max(t1 - t0, 1e-9)
+    return {
+        "requests": n,
+        "completed": len(done),
+        "qps": round(len(done) / span, 2),
+        # null, not a fabricated 0.0, when nothing completed
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3)
+        if done else None,
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3)
+        if done else None,
+        "shed_rate": round((n - len(done)) / max(n, 1), 4),
+        "degraded_rate": round(
+            sum(o.status == DEGRADED for o in outcomes) / max(n, 1), 4),
+        "deadline_met_rate": round(
+            sum(o.deadline_met for o in outcomes) / max(n, 1), 4),
+    }

@@ -1,0 +1,118 @@
+"""Per-(method, shape-bucket) engine and predictor-state ownership.
+
+The cross-batch tau predictor (``core.rerank.PredictorState``, PR 3) is an
+EMA over bucket histograms — but histograms are only comparable when they
+come from the same search configuration: the per-query codebooks depend on
+``n_probe`` and the prediction target (``pred_count``) depends on ``k``.
+Under micro-batching the batch composition varies call to call, so a single
+global predictor would mix histograms across shape buckets and drift.  This
+module therefore keys BOTH the engines and the predictor states per
+``ShapeBucket`` (a ``ServingState`` wraps exactly one index, so the method
+dimension of the ISSUE's "(method, shape-bucket)" ownership is realized by
+the instance itself): each compile shape self-tunes on its own request
+stream, and a bucket's prediction quality is independent of which other
+buckets the traffic hits.
+
+``ServingState`` is the only stateful object the server loop owns; engines
+stay immutable (`index.engine.SearchEngine`) and predictor states thread
+functionally through each call exactly as in ``launch/serve.py --tau-pred``,
+just one state per bucket instead of one per process.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rerank
+from repro.index import engine as engine_mod
+from repro.serving.batcher import Batch, ShapeBucket
+
+
+class ServingState:
+    """Engines + predictor states for every shape bucket the traffic hits.
+
+    Engines are built lazily on first use of a bucket (one
+    ``SearchEngine.build`` per (k ceiling, n_probe) — the flat-layout packing
+    is shared work the engine redoes per build, so prefer ``warmup`` with
+    the full bucket set at server start) and cached for the process
+    lifetime.  ``mesh`` switches every bucket engine onto the sharded
+    deployment; ``vectors`` is required for the plain-IVF method exactly as
+    in ``SearchEngine.build``.
+    """
+
+    def __init__(self, index: Any, *, use_bbc: bool = True,
+                 tau_pred: bool = False, vectors=None, mesh=None,
+                 backend: str | None = None, m: int = 128,
+                 shard_budget: int | None = None,
+                 pred_count: int | None = None):
+        self.index = index
+        self.use_bbc = use_bbc
+        self.tau_pred = bool(tau_pred)
+        self.vectors = vectors
+        self.mesh = mesh
+        self.backend = backend
+        self.m = m
+        self.shard_budget = shard_budget
+        self.pred_count = pred_count
+        self.kind = engine_mod.resolve_kind(index, vectors)
+        if self.tau_pred and not use_bbc:
+            raise ValueError("tau_pred serving requires use_bbc=True")
+        # engines depend only on (k, n_probe) — batch width is a call-shape
+        # jit specializes on, not a build parameter — so two ShapeBuckets
+        # differing only in batch share one engine (one layout packing, one
+        # set of placed shard streams)
+        self._engines: dict[tuple[int, int], engine_mod.SearchEngine] = {}
+        self._pred: dict[ShapeBucket, rerank.PredictorState] = {}
+
+    # -- engines ------------------------------------------------------------
+
+    def engine(self, bucket: ShapeBucket) -> engine_mod.SearchEngine:
+        key = (bucket.k, bucket.n_probe)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = engine_mod.SearchEngine.build(
+                self.index, k=bucket.k, n_probe=bucket.n_probe,
+                use_bbc=self.use_bbc, m=self.m, backend=self.backend,
+                vectors=self.vectors, mesh=self.mesh,
+                shard_budget=self.shard_budget, pred_count=self.pred_count)
+            self._engines[key] = eng
+        return eng
+
+    def warmup(self, buckets) -> "ServingState":
+        """AOT-precompile every bucket's serving shapes: engine builds plus
+        jit compiles for the padded (B, k) batch (with ``tau_pred``, its
+        predictive variant too).  Partial batches are padded to B, so the
+        batch shape is the ONLY one steady-state serving hits; the B=1
+        shape the parity checks use compiles lazily on first use."""
+        for bucket in sorted(set(buckets)):
+            self.engine(bucket).warmup(batch_sizes=(bucket.batch,),
+                                       predictive=self.tau_pred)
+        return self
+
+    # -- predictor states ---------------------------------------------------
+
+    def pred_state(self, bucket: ShapeBucket) -> rerank.PredictorState:
+        state = self._pred.get(bucket)
+        if state is None:
+            state = self.engine(bucket).predictor_init()
+            self._pred[bucket] = state
+        return state
+
+    def pred_states(self) -> dict[ShapeBucket, rerank.PredictorState]:
+        return dict(self._pred)
+
+    # -- serving ------------------------------------------------------------
+
+    def run(self, batch: Batch):
+        """One engine call for an assembled batch; threads (and retains)
+        the bucket's predictor state when ``tau_pred`` is on."""
+        eng = self.engine(batch.bucket)
+        qs = jnp.asarray(batch.queries)
+        if self.tau_pred:
+            res, new_state = eng.search_batch(
+                qs, pred_state=self.pred_state(batch.bucket))
+            self._pred[batch.bucket] = jax.block_until_ready(new_state)
+            return res
+        return eng.search_batch(qs)
