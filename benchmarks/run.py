@@ -8,7 +8,8 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_batch_qps, bench_serve, bench_tau_pred,
+    from benchmarks import (bench_batch_qps, bench_rabitq_fused,
+                            bench_serve, bench_tau_pred,
                             exp2_relative_error, exp3_collector_latency,
                             exp4_threshold_gap, exp5_rerank,
                             exp6_m_sensitivity, fig1_qps_recall,
@@ -18,6 +19,7 @@ def main() -> None:
         ("fig1_qps_recall", fig1_qps_recall.run),
         ("bench_batch_qps", bench_batch_qps.run),
         ("bench_tau_pred", bench_tau_pred.run),
+        ("bench_rabitq_fused", bench_rabitq_fused.run),
         ("bench_serve", bench_serve.run),
         ("fig2_breakdown", fig2_breakdown.run),
         ("exp2_relative_error", exp2_relative_error.run),

@@ -152,6 +152,24 @@ def bbc_survivors_batch(
     return pos, jnp.isfinite(-neg), tau, jnp.sum(survive, axis=1), global_hist
 
 
+def split_certified_survivors(pos: jax.Array, ok: jax.Array,
+                              certified: jax.Array):
+    """Partition a shard's budget-compacted survivors by the bound-fused
+    scan's inline coverage.
+
+    ``pos``/``ok`` are ``bbc_survivors_batch``'s (B, budget) local survivor
+    positions; ``certified`` is the scan's (B, F) inline-coverage mask
+    (lower-bound bucket at or below the gate — those lanes' exact distances
+    came out of the fused kernel while their vector tile was resident).
+    Returns ``(cert_ok, strag_ok)``: survivors whose values the scan already
+    holds, and the STRAGGLERS — the only rows the on-shard second gather
+    pass must touch, and the quantity the psum'd measured ``n_second_pass``
+    counts.
+    """
+    cert_ok = jnp.take_along_axis(certified, pos, axis=1) & ok
+    return cert_ok, ok & ~cert_ok
+
+
 def gather_survivors(axis_name: str, *rows: jax.Array) -> tuple[jax.Array, ...]:
     """All-gather per-shard (B, budget) survivor rows into (B, S * budget)
     — the survivor-only collective (~count total elements across shards,

@@ -124,7 +124,7 @@ class _IvfPqStrategy:
         return search_mod.ivf_pq_search_batch(
             eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
             n_cand=eng.n_cand, use_bbc=eng.use_bbc, m=eng.m,
-            backend=eng.backend, pred_state=pred_state,
+            backend=eng.backend, fused=eng.fused, pred_state=pred_state,
             pred_count=eng.pred_count)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
@@ -167,6 +167,7 @@ class _IvfRabitqStrategy:
         return search_mod.ivf_rabitq_search_batch(
             eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
             use_bbc=eng.use_bbc, m=eng.m, backend=eng.backend,
+            fused=eng.fused, stream=eng.stream_cache,
             pred_state=pred_state, pred_count=eng.pred_count)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
@@ -186,7 +187,7 @@ class _IvfRabitqStrategy:
             eng.slayout, scodes, snorm_o, sf_o, svecs, k=eng.k,
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
             cap_shard=eng.cap_shard, budget=eng.shard_budget,
-            backend=eng.backend, pred_state=pred_state,
+            backend=eng.backend, fused=eng.fused, pred_state=pred_state,
             pred_count=eng.pred_count)
 
 
@@ -230,6 +231,13 @@ class SearchEngine:
     backend: str | None = None
     vectors: jax.Array | None = None  # required for kind == "ivf"
     pred_count: int | None = None     # predictive re-rank pool target
+    # fused-scan switch for the quantized methods (None = per-searcher
+    # default: bound-fused RaBitQ everywhere, fused PQ on TPU); False pins
+    # the two-phase reference paths, e.g. for A/B benchmarking
+    fused: bool | None = None
+    # layout-ordered candidate stream materialized at build time (RaBitQ
+    # single-device; saves the per-call 30+ MB stream gathers)
+    stream_cache: Any = None
     # -- sharded deployment state (all None/unused on a single device) ------
     mesh: Any = None
     slayout: ivf_mod.ShardedLayout | None = None
@@ -250,20 +258,26 @@ class SearchEngine:
               use_bbc: bool = True, m: int = 128,
               backend: str | None = None, vectors=None,
               mesh=None, shard_budget: int | None = None,
-              pred_count: int | None = None) -> "SearchEngine":
+              pred_count: int | None = None,
+              fused: bool | None = None) -> "SearchEngine":
         """Construct a serving engine; ``mesh`` (a 1-D ("model",) device
         mesh) switches on the sharded deployment — same code path, the
         corpus stream is partitioned and placed at build time.
         ``pred_count`` overrides the predictive re-rank pool target used
-        when searches are called with a ``PredictorState``."""
+        when searches are called with a ``PredictorState``; ``fused``
+        pins the quantized methods' fused-scan switch (None = per-searcher
+        default)."""
         strategy, ivf = _resolve_strategy(index, vectors)
         if n_cand is None:
             n_cand = strategy.default_n_cand(index, k)
         if pred_count is None:
             pred_count = strategy.default_pred_count(k, n_cand)
         layout, slayout, cap_shard, streams = None, None, 1, ()
+        stream_cache = None
         if mesh is None:
             layout = ivf_mod.flat_layout(ivf)
+            if strategy.kind == "ivfrabitq":
+                stream_cache = search_mod.rabitq_stream(index, layout)
         else:
             n_shards = mesh.shape["model"]
             slayout, cap_shard = ivf_mod.sharded_layout(ivf, n_shards)
@@ -277,8 +291,9 @@ class SearchEngine:
         return SearchEngine(index=index, layout=layout, kind=strategy.kind,
                             k=k, n_probe=n_probe, n_cand=n_cand,
                             use_bbc=use_bbc, m=m, backend=backend,
-                            vectors=vectors, pred_count=pred_count, mesh=mesh,
-                            slayout=slayout, cap_shard=cap_shard,
+                            vectors=vectors, pred_count=pred_count,
+                            fused=fused, stream_cache=stream_cache,
+                            mesh=mesh, slayout=slayout, cap_shard=cap_shard,
                             shard_budget=shard_budget, shard_streams=streams)
 
     # -- query-time ---------------------------------------------------------

@@ -51,6 +51,7 @@ from repro.index import ivf as ivf_mod
 from repro.index import pq as pq_mod
 from repro.index import rabitq as rq_mod
 from repro.kernels import ops
+from repro.kernels import ref as kref
 
 INF = jnp.inf
 
@@ -66,6 +67,31 @@ class RabitqIndex(NamedTuple):
     ivf: ivf_mod.IVFIndex
     rq: rq_mod.RabitqCodes
     vectors: jax.Array
+
+
+class RabitqStream(NamedTuple):
+    """Layout-ordered RaBitQ candidate stream (the per-call gather of the
+    codes/vectors/factors into FlatLayout order, hoisted out of the
+    searchers).  The engine materializes it once at build time — at stream
+    scale the two 30+ MB gathers cost as much as the bounds matmul, every
+    batch, on BOTH the fused and two-phase paths."""
+
+    codes: jax.Array    # (n_flat, d) fp32 ±1
+    vectors: jax.Array  # (n_flat, d) fp32
+    norm_o: jax.Array   # (n_flat,)
+    f_o: jax.Array      # (n_flat,)
+    cl: jax.Array       # (n_flat,) clamped owning cluster per lane
+
+
+def rabitq_stream(index: RabitqIndex,
+                  layout: ivf_mod.FlatLayout) -> RabitqStream:
+    rq = index.rq
+    return RabitqStream(
+        codes=rq.codes[layout.order].astype(jnp.float32),
+        vectors=index.vectors[layout.order],
+        norm_o=rq.norm_o[layout.order],
+        f_o=rq.f_o[layout.order],
+        cl=jnp.minimum(layout.cluster_of, index.ivf.n_clusters - 1))
 
 
 class SearchResult(NamedTuple):
@@ -770,66 +796,126 @@ def _ivf_pq_predictive_batch(index, qs, layout, probed, lane_valid,
     return res, rerank.predictor_update(pred_state, hist)
 
 
-def _rabitq_bounds_stream(codes_s: jax.Array, norm_o: jax.Array,
-                          f_o: jax.Array, cl: jax.Array,
-                          centroids: jax.Array, rot: jax.Array,
-                          qs: jax.Array, d2: jax.Array,
-                          lane_valid: jax.Array, eps0: float):
-    """Batched RaBitQ estimator over a candidate stream (shared by the
-    single-device and mesh-sharded paths — a shard's local stream is just a
-    shorter stream).
-
-    The per-(query, cluster) rotated residual decomposes as
-    ``P(q - c) = Pq - Pc``, so the code inner products for every query are
-    ONE (n_stream, d) x (d, B) matmul plus a per-lane centroid correction —
-    the batched-native form of ``rabitq.query_factors`` + ``estimate``
-    (mathematically identical; floating-point association differs from the
-    per-cluster matvec of the single-query path).  ``d2`` is the (B, C)
-    squared query-centroid distance matrix the routing pass already built;
-    ``cl`` maps each stream lane to its (clamped) owning cluster.
-    """
-    g = qs @ rot.T                                            # (B, d) = Pq
-    h = centroids @ rot.T                                     # (C, d) = Pc
-    s1 = codes_s @ g.T                                        # (n_stream, B)
-    s2 = jnp.sum(codes_s * h[cl], axis=1)                     # (n_stream,)
-    nq = jnp.sqrt(d2)                                         # (B, C) norm_q
-    nq_lane = nq[:, cl]                                       # (B, n_stream)
-    d = codes_s.shape[1]
-    xv = (s1.T - s2[None, :]) / (
-        jnp.sqrt(jnp.float32(d)) * jnp.maximum(nq_lane, 1e-12))
-    ip = xv / f_o[None, :]
-    err = eps0 * jnp.sqrt((1.0 - f_o ** 2) / (f_o ** 2 * (d - 1)))
-    scale = 2.0 * nq_lane * norm_o[None, :]
-    base = nq_lane ** 2 + norm_o[None, :] ** 2
-    zero = jnp.zeros_like(base)
-    est = jnp.sqrt(jnp.maximum(base - scale * ip, zero))
-    lb = jnp.sqrt(jnp.maximum(base - scale * (ip + err[None, :]), zero))
-    ub = jnp.sqrt(jnp.maximum(base - scale * (ip - err[None, :]), zero))
-    bad = ~lane_valid
-    return (jnp.where(bad, INF, est), jnp.where(bad, INF, lb),
-            jnp.where(bad, INF, ub))
-
-
-def _rabitq_batch_bounds(index: RabitqIndex, layout: ivf_mod.FlatLayout,
+def _rabitq_batch_bounds(index: RabitqIndex, stream: RabitqStream,
                          qs: jax.Array, lane_valid: jax.Array, eps0: float,
                          d2: jax.Array):
-    """Batched RaBitQ bounds over the single-device shared stream (see
-    ``_rabitq_bounds_stream``)."""
-    rq = index.rq
-    ivf = index.ivf
-    return _rabitq_bounds_stream(
-        codes_s=rq.codes[layout.order].astype(jnp.float32),
-        norm_o=rq.norm_o[layout.order],
-        f_o=rq.f_o[layout.order],
-        cl=jnp.minimum(layout.cluster_of, ivf.n_clusters - 1),
-        centroids=ivf.centroids, rot=rq.rot, qs=qs, d2=d2,
-        lane_valid=lane_valid, eps0=eps0)
+    """Batched RaBitQ bounds over the single-device shared stream.  The
+    stream-level estimator itself lives with the kernels
+    (``kernels.ref.rabitq_bounds_stream`` — it is the inner math of the
+    bound-fused kernel's mirror, shared by the mesh-sharded path)."""
+    return kref.rabitq_bounds_stream(
+        codes_s=stream.codes, norm_o=stream.norm_o, f_o=stream.f_o,
+        cl=stream.cl, centroids=index.ivf.centroids, rot=index.rq.rot,
+        qs=qs, d2=d2, lane_valid=lane_valid, eps0=eps0)
+
+
+# --------------------------------------------------------------------------
+# Bound-fused RaBitQ scan plumbing (the executed Table-2 path)
+# --------------------------------------------------------------------------
+#
+# The fused RaBitQ searchers size their band from per-query SAMPLE-prefix
+# codebooks (the paper's 5-10-nearest-cluster sample, like the PQ paths and
+# the sharded deployment) instead of the full-stream upper-bound top-k the
+# two-phase path sorts for: the band threshold tau_ub then comes from the
+# scan's own histogram/bucket outputs, which is exact at bucket granularity
+# — any lane excluded has lb beyond the bucket containing the k-th smallest
+# ub, hence beyond Dist_k (certainly out) for ANY codebook.  The inline
+# gate tau_inline only decides WHERE a band member's exact distance comes
+# from (the fused scan vs the straggler gather), never whether it is
+# evaluated, so correctness cannot ride on it.
+
+_TAU_INLINE_MARGIN = 2   # buckets of slack on the static sample-derived gate
+# Stride of the predictor's ub-histogram subsample: the EMA must track the
+# FULL probed set's upper-bound distribution (the nearest-tile sample prefix
+# is distance-skewed and lands systematically low at depth — the same effect
+# bench_tau_pred documents for PQ prefix ranks), but the full scatter
+# histogram is the CPU bottleneck.  A strided slice of the cluster-ordered
+# stream is an unbiased (roughly cluster-stratified) subsample; predict_tau
+# is queried at the stride-scaled count.
+_PRED_HIST_STRIDE = 8
+# Predictive-gate margin: per-query band thresholds scatter a few buckets
+# around the EMA's global prediction; overshooting certifies extra lanes for
+# free (their exact distances ride the resident tile) while every
+# undershot bucket is real second-gather traffic, so the gate leans high.
+_PRED_GATE_MARGIN = 3
+
+
+def _tau_bucket_search(bucket: jax.Array, valid: jax.Array, count: int,
+                       m: int) -> jax.Array:
+    """First bucket whose cumulative in-range count reaches ``count`` —
+    exactly ``rb.threshold_bucket`` of the bucket histogram, computed by
+    bisection over row-wise compare-sums.  On CPU the (m+1)-bin scatter
+    histogram is the stream-scale bottleneck (~5x the cost of the bounds
+    matmul); ceil(log2(m+2)) masked compare-sums replace it.  Rows are
+    independent, so callers stack several searches (e.g. both bounds) into
+    one call.  Returns m (overflow id) when fewer than ``count`` in-range
+    lanes exist, matching ``threshold_bucket``."""
+    rows = bucket.shape[0]
+    # fold validity and the overflow bucket into one effective array so the
+    # bisection body is a single compare + reduce per step
+    eff = jnp.where(valid & (bucket < m), bucket, m)
+    lo = jnp.zeros((rows,), jnp.int32)
+    hi = jnp.full((rows,), m, jnp.int32)
+    for _ in range((m + 1).bit_length()):
+        mid = (lo + hi) // 2
+        cnt = jnp.sum(eff <= mid[:, None], axis=1)
+        ok = cnt >= count
+        hi = jnp.where(ok, mid, hi)
+        lo = jnp.where(ok, lo, mid + 1)
+    return hi
+
+
+def _rabitq_inline_rank(k: int, st: int, n_probe: int, k_cb: int) -> int:
+    """Sample-prefix rank of the k-th upper bound (Alg. 4 line 4's
+    |sample|/|O| scaling with the static tile ratio st/n_probe)."""
+    return max(1, min(k_cb, round(k * st / max(n_probe, 1))))
+
+
+def _rabitq_sample_plan(sample_ub: jax.Array, k: int, count: int, st: int,
+                        n_probe: int, m: int):
+    """Per-query codebook + static inline gate from the sample-prefix upper
+    bounds.  One top-k serves both: the codebook quantiles (anchored at k,
+    like the two-phase plan's ub top-k) and the rank-scaled ``count``-th-ub
+    seed whose bucket (+ margin) is the static ``tau_inline``."""
+    k_cb = min(k, sample_ub.shape[1])
+    topk_s = -jax.lax.top_k(-sample_ub, k_cb)[0]              # (B, k_cb) asc
+    cbs = jax.vmap(lambda t: rb.build_codebook_from_topk(t, m=m))(topk_s)
+    rank = _rabitq_inline_rank(count, st, n_probe, k_cb)
+    kth_s = topk_s[:, rank - 1]
+    tau_static = jax.vmap(lambda c, v: rb.bucketize(c, v[None])[0])(cbs,
+                                                                    kth_s)
+    tau_static = jnp.minimum(tau_static + _TAU_INLINE_MARGIN, m - 1)
+    return cbs, tau_static.astype(jnp.int32)
+
+
+def _rabitq_sample_ub(codes, norm_o, f_o, cl, centroids, rot,
+                      layout: ivf_mod.FlatLayout, probed: jax.Array,
+                      qs: jax.Array, d2: jax.Array, st: int, cap: int,
+                      eps0: float):
+    """Sample-prefix upper bounds for the kernel paths: a small dedicated
+    bounds pass over the nearest ``st`` probed tiles, run BEFORE the fused
+    kernel (which needs the codebook as an input).  Stream-level arrays in,
+    so the batched path (the engine's ``RabitqStream``) and each shard's
+    local stream share the one implementation; the composed CPU path
+    instead samples the full bounds it has already computed."""
+    spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], cap)
+
+    def one(a):
+        pos, okr, q, d2q = a
+        safe = jnp.where(okr, pos, 0)
+        _, _, ubq = kref.rabitq_bounds_stream(
+            codes[safe].astype(jnp.float32), norm_o[safe], f_o[safe],
+            cl[safe], centroids, rot, q[None], d2q[None], okr[None], eps0)
+        return ubq[0]
+
+    sample_ub = jax.lax.map(one, (spos, sok, qs, d2))
+    return sample_ub, sok
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "n_probe", "use_bbc", "m", "eps0", "backend",
-                     "pred_count"))
+                     "fused", "pred_count"))
 def ivf_rabitq_search_batch(
     index: RabitqIndex,
     qs: jax.Array,                 # (B, d)
@@ -840,33 +926,68 @@ def ivf_rabitq_search_batch(
     m: int = 128,
     eps0: float = 3.0,
     backend: str | None = None,
+    fused: bool | None = None,
+    stream: RabitqStream | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
 ) -> SearchResult:
     """Batched IVF+RaBitQ (±BBC) on the shared candidate stream.
 
-    With ``pred_state``: RaBitQ's bounds already make the re-rank band
-    minimal, so prediction cannot shrink it (the paper's RaBitQ gain is
-    cache misses, not re-rank count).  ``n_second_pass`` becomes the MODELED
-    second-pass gather volume of a bound-fused scan — band members whose
-    lb-bucket lies above tau_pred, i.e. the lanes an inline early-exact pass
-    keyed on the prediction would NOT have covered (the structural analogue
-    of the paper's Table-2 cache-miss counts, like ``collector_stats``'s
-    byte counts).  The executed math is unchanged on every backend: the
-    whole band is evaluated in one shared matmul, and the result is
-    bit-identical to the static path.  Returns ``(SearchResult, new_state)``;
-    the EMA tracks the UPPER-bound histogram (the codebook's anchor).
+    ``stream`` is the layout-ordered ``RabitqStream`` (pass the engine's
+    build-time copy to skip the per-call gathers; built on the fly when
+    None, e.g. for direct test calls).
+
+    The BBC path runs the bound-fused scan by default (``fused=None`` ->
+    True): per stream tile the scan computes estimates AND bounds,
+    bucketizes them against the sample-prefix codebook, and exact-re-ranks
+    lanes whose lower-bound bucket the inline gate certifies while the
+    vector tile is resident — on TPU inside ``ops.fused_rabitq_scan_batch``
+    (codes and vectors co-tiled in VMEM), on CPU as the composed
+    restructure of the same math (one shared exact matmul; the win there is
+    the planning — sample codebooks + bisected threshold buckets replace
+    the two full-stream top-k sorts of the two-phase path).  Only
+    bound-uncertain stragglers (band members the gate missed) take a second
+    gather pass, and ``n_second_pass`` is their MEASURED count — the
+    executed form of the Table-2 cache-miss story PR 3 only modeled.
+    ``fused=False`` keeps the two-phase reference path (full-stream
+    ub-top-k plan + one dense band matmul; its predictive counters are the
+    modeled volume the fused path's measured counts are benchmarked
+    against in ``bench_rabitq_fused``).
+
+    With ``pred_state``: the bounds already make the band minimal, so
+    prediction cannot shrink the re-rank count (the paper's RaBitQ gain is
+    cache misses, not re-ranks); instead the engine's EMA ``tau_pred``
+    gates the inline band exactly as it gates the PQ pool — while cold
+    (tau_pred = -1) nothing is certified and the whole band goes through
+    the gather, exactly like the two-phase path.  Returns
+    ``(SearchResult, new_state)``; on this deployment the EMA tracks a
+    strided-subsample upper-bound histogram and is queried at the
+    stride-scaled count (``_PRED_HIST_STRIDE``) — the sharded deployment
+    tracks the psum'd full histogram at k; states are engine-owned and
+    never cross deployments.  Results are id-set identical to the
+    two-phase path for any gate (the band always covers the bound-straddle
+    set).
     """
     if pred_state is not None and not use_bbc:
         raise ValueError("predictive search requires use_bbc=True")
+    if fused is None:
+        fused = True
+    if stream is None:
+        stream = rabitq_stream(index, layout)
     ivf = index.ivf
     b = qs.shape[0]
     cap = ivf.cap
     probed, lane_valid, d2 = _routing(ivf, layout, qs, n_probe)
-    est, lb, ub = _rabitq_batch_bounds(index, layout, qs, lane_valid, eps0,
-                                      d2=d2)
     n_flat = layout.n_flat
     stream_ids = layout.order
+
+    if use_bbc and fused:
+        return _ivf_rabitq_fused_batch(
+            index, stream, qs, layout, probed, lane_valid, d2, k, n_probe,
+            m, eps0, backend, pred_state, pred_count)
+
+    est, lb, ub = _rabitq_batch_bounds(index, stream, qs, lane_valid, eps0,
+                                       d2=d2)
 
     if not use_bbc:
         # ---- baseline: per-cluster threshold re-ranking, vmapped ----------
@@ -907,18 +1028,16 @@ def ivf_rabitq_search_batch(
         return SearchResult(pd, pi, n_rr.astype(jnp.int32),
                             n_rr.astype(jnp.int32))
 
-    # ---- BBC path (Alg. 3, batched greedy) ---------------------------------
-    # Plan without per-query histogram scatters (order-statistic thresholds),
-    # then resolve the whole uncertain band in ONE shared exact-distance
-    # matmul over the stream.  The single-query path phases its evaluations
-    # (est-priority, budgeted) to bound gather traffic; with the candidate
-    # vectors already streaming through the batched L2 kernel, evaluating the
-    # full band is cheaper than compacting it, and the final top-k is
-    # unchanged: every band member the phases skip has lb above the phase-1
-    # threshold, so its exact distance can never enter the top-k.
+    # ---- two-phase BBC reference path (Alg. 3, batched greedy) -------------
+    # Plan from the full-stream ub top-k (order-statistic thresholds), then
+    # resolve the whole uncertain band in ONE shared exact-distance matmul
+    # over the stream — the separate estimate-then-gather structure whose
+    # second-pass traffic the fused path eliminates.  Kept as the reference
+    # contender (``fused=False``): bench_rabitq_fused measures the fused
+    # path against it, and its predictive counters are the MODELED
+    # second-pass volume the fused path's measured counts must reproduce.
     plan = rerank.greedy_rerank_plan_batch(lb, ub, k, lane_valid, m=m)
-    stream_vecs = index.vectors[layout.order]
-    exact_all = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
+    exact_all = ops.l2_exact_batch(stream.vectors, qs, backend=backend)
     exact_flat = jnp.where(plan.rerank_mask, exact_all, INF)
 
     res = jax.vmap(
@@ -939,6 +1058,153 @@ def ivf_rabitq_search_batch(
         res_p = SearchResult(res.topk_dists, res.topk_ids, n_evals, n_second)
         return res_p, rerank.predictor_update(pred_state, hist_ub)
     return SearchResult(res.topk_dists, res.topk_ids, n_evals, n_evals)
+
+
+def _ivf_rabitq_fused_batch(index, stream, qs, layout, probed, lane_valid,
+                            d2, k, n_probe, m, eps0, backend, pred_state,
+                            pred_count):
+    """Bound-fused RaBitQ batch core (the executed Table-2 path).
+
+    One logical pass over the stream: estimates + bounds + bucketization +
+    the inline exact re-rank of gate-certified lanes, then a straggler-only
+    second gather for band members the gate missed.  The band itself is
+    exact at bucket granularity for any codebook (tau_ub comes from the
+    scan's own ub histogram at k), so the id set matches the two-phase path
+    — the gate moves memory traffic, never correctness.
+    """
+    ivf = index.ivf
+    rq = index.rq
+    b = qs.shape[0]
+    n_flat = layout.n_flat
+    kernel = ops.resolve_backend(backend) == "pallas"
+    st = min(4, n_probe)
+    count = k if pred_count is None else max(pred_count, k)
+
+    est = lb = ub = None
+    if kernel:
+        sample_ub, sok = _rabitq_sample_ub(
+            stream.codes, stream.norm_o, stream.f_o, stream.cl,
+            ivf.centroids, index.rq.rot, layout, probed, qs, d2, st,
+            ivf.cap, eps0)
+    else:
+        est, lb, ub = _rabitq_batch_bounds(index, stream, qs, lane_valid,
+                                           eps0, d2=d2)
+        spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], ivf.cap)
+        sample_ub = jnp.where(sok, jnp.take_along_axis(ub, spos, axis=1),
+                              INF)
+    cbs, tau_static = _rabitq_sample_plan(sample_ub, k, count, st, n_probe,
+                                          m)
+    if pred_state is not None:
+        # the EMA gate, exactly as it gates the PQ pool: -1 while cold
+        # (nothing certified inline — the first batch behaves like the
+        # two-phase path), the predicted bucket once warm.  The EMA tracks
+        # the strided-subsample ub histogram, so the query count scales by
+        # the stride.
+        count_s = max(1, -(-count // _PRED_HIST_STRIDE))
+        # margin biased up: an overshooting gate certifies a few extra
+        # lanes (free — their exact distances ride the resident tile), an
+        # undershooting one pays real second-pass gathers
+        tau_inline = jnp.full(
+            (b,), rerank.predict_tau(pred_state, count_s,
+                                     margin=_PRED_GATE_MARGIN),
+            jnp.int32)
+    else:
+        tau_inline = tau_static
+
+    if kernel:
+        # the fused kernel: codes + vectors co-tiled through VMEM, exact
+        # distances of certified lanes computed while the tile is resident
+        (est, lb, ub, bucket_lb, bucket_ub, _hist_lb, hist_ub, exact_c,
+         certified, _nmiss) = ops.fused_rabitq_scan_batch(
+            stream.codes, stream.vectors, stream.norm_o, stream.f_o,
+            stream.cl, ivf.centroids, rq.rot, qs, d2, lane_valid,
+            cbs.d_min, cbs.delta, cbs.ew_map, m, tau_inline, eps0=eps0,
+            backend=backend)
+        tau_ub = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(
+            hist_ub, k)[0]
+        tau_lb = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(
+            _hist_lb, k)[0]
+    else:
+        # composed CPU form of the same math: the scatter histograms the
+        # kernel accumulates for free are replaced by bisected threshold
+        # buckets (identical values), and the certified mask is applied to
+        # one shared exact matmul — no gather/fusion axis exists on CPU,
+        # so the restructured planning IS the speedup
+        bucket_lb = jax.vmap(rb.bucketize)(cbs, lb)
+        bucket_ub = jax.vmap(rb.bucketize)(cbs, ub)
+        taus = _tau_bucket_search(
+            jnp.concatenate([bucket_ub, bucket_lb], axis=0),
+            jnp.concatenate([lane_valid, lane_valid], axis=0), k, m)
+        tau_ub, tau_lb = taus[:b], taus[b:]
+        if pred_state is None:
+            # the stream-parallel CPU form has the full scan before the
+            # re-rank leg, so the static gate refreshes to the true band
+            # threshold (Alg. 4 line 14 at full progress — the same
+            # refresh the single-query PQ path documents); the predictive
+            # gate stays exactly tau_pred so the measured straggler count
+            # is the EMA's miss, comparable with the modeled volume
+            tau_inline = jnp.maximum(tau_inline, tau_ub)
+        certified = lane_valid & (bucket_lb <= tau_inline[:, None])
+
+    certain_in = lane_valid & (bucket_ub < tau_lb[:, None])
+    band = lane_valid & (bucket_lb <= tau_ub[:, None]) & ~certain_in
+    straggler = band & ~certified
+    n_second = jnp.sum(straggler, axis=1).astype(jnp.int32)
+    n_evals = jnp.sum(band, axis=1).astype(jnp.int32)
+
+    if kernel:
+        # straggler-only second gather (the measured residue of Table 2):
+        # lb-priority compaction into a static budget, per-row exact, with
+        # a dense fallback should the gate miss more than the budget (a
+        # cold/undershooting predictor) — correctness never rides on it
+        budget = int(min(n_flat, ((max(2 * k, 2048) + 127) // 128) * 128))
+        key_lb = jnp.where(straggler, lb, INF)
+        neg, pos = jax.lax.top_k(-key_lb, budget)
+        okp = jnp.isfinite(-neg)
+        sids = jnp.where(okp, layout.order[pos], -1)
+        sd = _exact_dists_rows(index.vectors, jnp.where(okp, sids, 0), qs)
+        filled = jnp.full((b, n_flat + 1), INF, sd.dtype)
+        filled = jax.vmap(
+            lambda f, p, v, o: f.at[jnp.where(o, p, n_flat)].set(v))(
+                filled, pos, sd, okp)[:, :n_flat]
+        exact_band = jnp.where(certified, exact_c, filled)
+
+        def dense(_):
+            allx = ops.l2_exact_batch(stream.vectors, qs, backend=backend)
+            return jnp.where(certified, exact_c, allx)
+
+        overflow = jnp.any(n_second > budget)
+        exact_band = jax.lax.cond(overflow, dense,
+                                  lambda _: exact_band, None)
+        exact_band = jnp.where(band, exact_band, INF)
+    else:
+        # one shared matmul serves the inline AND straggler legs (single
+        # float source: cold/warm/static variants stay bitwise identical);
+        # the counter is still the straggler-lane count of the executed
+        # certified gate — on TPU those lanes are the literal second gather
+        exact_all = ops.l2_exact_batch(stream.vectors, qs, backend=backend)
+        exact_band = jnp.where(band, exact_all, INF)
+
+    plan = rerank.GreedyRerankPlan(
+        rerank_mask=band, certain_in=certain_in,
+        certain_out=lane_valid & ~band & ~certain_in,
+        tau_ub=tau_ub, tau_lb=tau_lb, a_lb=bucket_lb, a_ub=bucket_ub)
+    res = jax.vmap(
+        lambda p, ef, lbv, e: rerank.greedy_rerank_finalize(
+            p, ef, lbv, layout.order, k, est=e)
+    )(plan, exact_band, lb, est)
+    out = SearchResult(res.topk_dists, res.topk_ids, n_evals, n_second)
+    if pred_state is not None:
+        # EMA over the strided-subsample ub histogram: unbiased for the
+        # full probed set (see _PRED_HIST_STRIDE) at 1/stride of the
+        # scatter cost; bucket indices stay comparable batch-to-batch
+        # because the codebooks are equal-depth over samples of the same
+        # distribution
+        hist_s = jax.vmap(rb.histogram, in_axes=(0, None, 0))(
+            bucket_ub[:, ::_PRED_HIST_STRIDE], m,
+            lane_valid[:, ::_PRED_HIST_STRIDE])
+        return out, rerank.predictor_update(pred_state, hist_s)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -1237,7 +1503,8 @@ def ivf_pq_search_sharded(
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "k", "n_probe", "use_bbc", "m", "eps0",
-                     "cap_shard", "budget", "backend", "pred_count"))
+                     "cap_shard", "budget", "backend", "fused",
+                     "pred_count"))
 def ivf_rabitq_search_sharded(
     mesh,
     qs: jax.Array,
@@ -1256,6 +1523,7 @@ def ivf_rabitq_search_sharded(
     cap_shard: int = 1,
     budget: int | None = None,
     backend: str | None = None,
+    fused: bool | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
 ) -> SearchResult:
@@ -1269,59 +1537,137 @@ def ivf_rabitq_search_sharded(
     are exact-re-ranked on their shard; the gathered top-k by exact distance
     therefore equals the single-device result set.
 
+    Bound-fused form (``fused=None`` -> True): each shard's scan certifies
+    survivors whose lb-bucket sits at or below the inline gate — the
+    sample-derived static tau, or the engine's ``tau_pred`` floor on the
+    predictive path, exactly as on the batched deployment — and the
+    on-shard second gather pass covers ONLY the straggler survivors the
+    gate missed (on TPU the certified survivors' exact distances come out
+    of the fused kernel; survivor values and the collective payload are
+    unchanged).  ``n_second_pass`` is the psum'd measured straggler count.
+
     Predictive path (``pred_state``): the survivor band is bound-determined
-    (already minimal), so prediction does not floor tau here; the psum'd UB
-    histogram feeds the engine's EMA so the batched/fused deployments of the
-    same engine predict from serving traffic wherever it runs.  Returns
-    ``(SearchResult, new_state)``; results are identical to the static path.
+    (already minimal), so prediction does not floor the survivor tau; the
+    psum'd UB histogram feeds the engine's EMA (full-histogram convention,
+    queried at max(pred_count, k) — k under the engine's RaBitQ default;
+    unlike the batched deployment's strided-subsample EMA; states never
+    cross deployments).  Returns ``(SearchResult, new_state)``; results
+    are identical to the static path.
     """
     predictive = pred_state is not None
     if predictive and not use_bbc:
         raise ValueError("predictive search requires use_bbc=True")
+    if fused is None:
+        fused = True
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=4.0)
+    count = k if pred_count is None else max(pred_count, k)
+    kernelized = fused and ops.resolve_backend(backend) == "pallas"
 
-    def body(qs, rot, cent, sl, codes, norm_o, f_o, vecs):
+    def body(qs, rot, cent, sl, codes, norm_o, f_o, vecs, tau_p=None):
         layout = _local_block(sl)
         codes, norm_o, f_o, vecs = codes[0], norm_o[0], f_o[0], vecs[0]
+        b = qs.shape[0]
         probed, d2 = _local_routing(cent, qs, n_probe)
         lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
         cl = jnp.minimum(layout.cluster_of, n_clusters - 1)
-        est, lb, ub = _rabitq_bounds_stream(
-            codes.astype(jnp.float32), norm_o, f_o, cl, cent, rot, qs, d2,
-            lane_valid, eps0)
         ghist = None
-        if use_bbc:
+        n_second = jnp.zeros((b,), jnp.int32)
+        if not use_bbc:
+            est, _, _ = kref.rabitq_bounds_stream(
+                codes.astype(jnp.float32), norm_o, f_o, cl, cent, rot, qs,
+                d2, lane_valid, eps0)
+            pos, ok, _ = _naive_local_topk(est, layout, k)
+            ex = _exact_at_positions(vecs, qs, pos, ok)
+        else:
             st = min(4, n_probe)
-            cbs = _sharded_codebooks(layout, probed, ub, st, cap_shard, k, m)
-            _, hist_ub = ops.bucket_hist_batch(
-                ub, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
-                backend=backend)
-            bucket_lb = jax.vmap(rb.bucketize)(cbs, lb)
+            if kernelized:
+                s_local, _ = _rabitq_sample_ub(codes, norm_o, f_o, cl,
+                                               cent, rot, layout, probed,
+                                               qs, d2, st, cap_shard, eps0)
+            else:
+                _, lb, ub = kref.rabitq_bounds_stream(
+                    codes.astype(jnp.float32), norm_o, f_o, cl, cent, rot,
+                    qs, d2, lane_valid, eps0)
+                spos, sok_l = ivf_mod.tile_positions(layout,
+                                                     probed[:, :st],
+                                                     cap_shard)
+                s_local = jnp.where(sok_l,
+                                    jnp.take_along_axis(ub, spos, axis=1),
+                                    INF)
+            # gathered sample = the union of the nearest st clusters' full
+            # membership, as on every sharded path; identical codebooks to
+            # the pre-fused formulation (build_codebook = topk + from_topk)
+            (sample,) = dist.gather_survivors(SHARD_AXIS, s_local)
+            cbs, tau_static = _rabitq_sample_plan(sample, k, count, st,
+                                                  n_probe, m)
+            if fused:
+                tau_inline = jnp.full((b,), tau_p, jnp.int32) \
+                    if tau_p is not None else tau_static
+            if kernelized:
+                (_, lb, _, bucket_lb, _, _, hist_ub, exact_c, certified,
+                 _nm) = ops.fused_rabitq_scan_batch(
+                    codes, vecs, norm_o, f_o, cl, cent, rot, qs, d2,
+                    lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+                    tau_inline, eps0=eps0, backend=backend)
+            else:
+                bucket_lb = jax.vmap(rb.bucketize)(cbs, lb)
+                _, hist_ub = ops.bucket_hist_batch(
+                    ub, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
+                    backend=backend)
+                if fused:
+                    certified = lane_valid & \
+                        (bucket_lb <= tau_inline[:, None])
             pos, ok, _, _, ghist = dist.bbc_survivors_batch(
                 bucket_lb, lb, lane_valid, hist_ub, k, bud, SHARD_AXIS)
-        else:
-            pos, ok, _ = _naive_local_topk(est, layout, k)
-        ex = _exact_at_positions(vecs, qs, pos, ok)
+            if fused:
+                cert_pos, strag = dist.split_certified_survivors(
+                    pos, ok, certified)
+                n_second = jax.lax.psum(
+                    jnp.sum(strag, axis=1), SHARD_AXIS).astype(jnp.int32)
+                if kernelized:
+                    # certified survivors: inline exacts from the fused
+                    # kernel; the on-shard gather covers only stragglers
+                    ex_in = jnp.take_along_axis(exact_c, pos, axis=1)
+                    ex_st = _exact_at_positions(vecs, qs, pos, strag)
+                    ex = jnp.where(cert_pos, ex_in,
+                                   jnp.where(strag, ex_st, INF))
+                else:
+                    # CPU: one position-gather serves both legs (single
+                    # float source keeps static/cold/warm variants
+                    # bitwise identical); the counter is the executed
+                    # gate's straggler-survivor count
+                    ex = _exact_at_positions(vecs, qs, pos, ok)
+            else:
+                ex = _exact_at_positions(vecs, qs, pos, ok)
         gids = jnp.where(ok, layout.order[pos], -1)
         n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
         gx, gi = dist.gather_survivors(SHARD_AXIS, ex, gids)
         d, i = _final_topk(gx, gi, k)
         if predictive:
-            return d, i, n_rr.astype(jnp.int32), ghist
-        return d, i, n_rr.astype(jnp.int32)
+            return d, i, n_rr.astype(jnp.int32), n_second, ghist
+        return d, i, n_rr.astype(jnp.int32), n_second
 
     in_specs = (P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM2_SPEC,
                 _STREAM2_SPEC, _STREAM3_SPEC)
-    out_specs = (P(), P(), P())
+    out_specs = (P(), P(), P(), P())
     if predictive:
-        fn = dist.shard_map(body, mesh, in_specs=in_specs,
-                            out_specs=out_specs + (P(),))
-        d, i, n_rr, ghist = fn(qs, rot, centroids, slayout, scodes, snorm_o,
-                               sf_o, svecs)
-        res = SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
+        tau_p = rerank.predict_tau(pred_state, count) if fused else None
+        if tau_p is not None:
+            fn = dist.shard_map(body, mesh, in_specs=in_specs + (P(),),
+                                out_specs=out_specs + (P(),))
+            d, i, n_rr, n_second, ghist = fn(qs, rot, centroids, slayout,
+                                             scodes, snorm_o, sf_o, svecs,
+                                             tau_p)
+        else:
+            fn = dist.shard_map(body, mesh, in_specs=in_specs,
+                                out_specs=out_specs + (P(),))
+            d, i, n_rr, n_second, ghist = fn(qs, rot, centroids, slayout,
+                                             scodes, snorm_o, sf_o, svecs)
+        res = SearchResult(d, i, n_rr, n_second)
         return res, rerank.predictor_update(pred_state, ghist)
     fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
-    d, i, n_rr = fn(qs, rot, centroids, slayout, scodes, snorm_o, sf_o, svecs)
-    return SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
+    d, i, n_rr, n_second = fn(qs, rot, centroids, slayout, scodes, snorm_o,
+                              sf_o, svecs)
+    return SearchResult(d, i, n_rr, n_second)

@@ -29,6 +29,7 @@ from repro.kernels import fused_scan as _fs
 from repro.kernels import l2_rerank as _l2
 from repro.kernels import pq_adc as _adc
 from repro.kernels import rabitq_est as _rq
+from repro.kernels import rabitq_fused as _rqf
 from repro.kernels import ref as _ref
 from repro.kernels.platform import default_interpret, on_tpu
 
@@ -198,6 +199,86 @@ def fused_scan_batch(codes: jax.Array, vectors: jax.Array, valid: jax.Array,
         codes_p, vecs_p, valid_p.T, luts_p, qs_p, d_min_p, delta_p, ew_p, m,
         tau_p, tile=tile, mc=mc, interpret=_interpret())
     return est[:b, :n], bucket[:b, :n], hist[:b], early[:b, :n], nmiss[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "eps0", "tile", "backend"))
+def fused_rabitq_scan_batch(codes: jax.Array, vectors: jax.Array,
+                            norm_o: jax.Array, f_o: jax.Array,
+                            cl: jax.Array, centroids: jax.Array,
+                            rot: jax.Array, qs: jax.Array, d2: jax.Array,
+                            valid: jax.Array, d_min: jax.Array,
+                            delta: jax.Array, ew_maps: jax.Array, m: int,
+                            tau_inline: jax.Array, eps0: float = 3.0,
+                            tile: int = _rqf.TILE,
+                            backend: str | None = None):
+    """Batched bound-fused RaBitQ scan over a shared candidate stream.
+
+    ``codes``/``vectors``/``norm_o``/``f_o``/``cl`` are the stream shared by
+    every query (``cl`` maps each lane to its clamped owning cluster);
+    ``qs``, the (B, C) squared routing distances ``d2``, the per-query
+    codebook params and ``tau_inline`` are per-query.  Returns
+    ``(est, lb, ub, bucket_lb, bucket_ub, hist_lb, hist_ub, exact,
+    certified, nmiss)`` — see ``kernels.ref.fused_rabitq_scan_batch`` for
+    the contract; ``exact`` is finite exactly on certified lanes (the
+    bound-certified inline band the second gather pass can skip).
+    """
+    backend = resolve_backend(backend)
+    tau_inline = tau_inline.astype(jnp.int32)
+    if backend == "ref":
+        return _ref.fused_rabitq_scan_batch(
+            codes.astype(jnp.float32), vectors, norm_o, f_o, cl, centroids,
+            rot, qs, d2, valid, d_min, delta, ew_maps, m, tau_inline, eps0)
+    n, d = vectors.shape
+    b = qs.shape[0]
+    bp = _pad_batch(b, _rqf.BQ)
+    codes_f = codes.astype(jnp.float32)
+    # query-independent decomposition inputs (see ref.rabitq_bounds_stream)
+    h = centroids @ rot.T
+    s2 = jnp.sum(codes_f * h[cl], axis=1)
+    g = qs @ rot.T
+    nq_lane = jnp.sqrt(d2)[:, cl]                              # (B, n)
+    codes_p = _pad_cols(_pad_rows(codes_f, tile, 0.0), 128, 0.0)
+    vecs_p = _pad_cols(_pad_rows(vectors, tile, 0.0), 128, 0.0)
+    dp = vecs_p.shape[1] - d
+    s2_p = _pad_rows(s2, tile, 0.0)
+    norm_p = _pad_rows(norm_o, tile, 0.0)
+    f_p = _pad_rows(f_o, tile, 1.0)
+    valid_p = jnp.pad(_pad_cols(valid, tile, False), ((0, bp), (0, 0)))
+    nq_p = jnp.pad(_pad_cols(nq_lane, tile, 1.0), ((0, bp), (0, 0)),
+                   constant_values=1.0)
+    g_p = jnp.pad(g, ((0, bp), (0, dp)))
+    qs_p = jnp.pad(qs, ((0, bp), (0, dp)))
+    d_min_p = jnp.pad(d_min, (0, bp))
+    delta_p = jnp.pad(delta, (0, bp), constant_values=1.0)
+    ew_p = jnp.pad(ew_maps.astype(jnp.int32), ((0, bp), (0, 0)))
+    tau_p = jnp.pad(tau_inline, (0, bp), constant_values=-1)
+    outs = _rqf.fused_rabitq_scan_batch_pallas(
+        codes_p, vecs_p, s2_p, norm_p, f_p, valid_p.T, nq_p.T, g_p, qs_p,
+        d_min_p, delta_p, ew_p, m, tau_p, d_logical=d, eps0=eps0, tile=tile,
+        interpret=_interpret())
+    (est, lb, ub, blb, bub, hist_lb, hist_ub, exact, cert, nmiss) = outs
+    return (est[:b, :n], lb[:b, :n], ub[:b, :n], blb[:b, :n], bub[:b, :n],
+            hist_lb[:b], hist_ub[:b], exact[:b, :n], cert[:b, :n],
+            nmiss[:b])
+
+
+@functools.partial(jax.jit, static_argnames=("m", "eps0", "tile", "backend"))
+def fused_rabitq_scan(codes: jax.Array, vectors: jax.Array,
+                      norm_o: jax.Array, f_o: jax.Array, cl: jax.Array,
+                      centroids: jax.Array, rot: jax.Array, q: jax.Array,
+                      d2: jax.Array, valid: jax.Array, d_min: jax.Array,
+                      delta: jax.Array, ew_map: jax.Array, m: int,
+                      tau_inline: jax.Array, eps0: float = 3.0,
+                      tile: int = _rqf.TILE, backend: str | None = None):
+    """Single-query bound-fused RaBitQ scan: the batched kernel on a
+    singleton batch (the batched formulation is the native one — a single
+    query is just B == 1)."""
+    outs = fused_rabitq_scan_batch(
+        codes, vectors, norm_o, f_o, cl, centroids, rot, q[None], d2[None],
+        valid[None], jnp.asarray(d_min)[None], jnp.asarray(delta)[None],
+        ew_map[None], m, jnp.asarray(tau_inline, jnp.int32)[None],
+        eps0=eps0, tile=tile, backend=backend)
+    return tuple(o[0] for o in outs)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "tile", "backend"))

@@ -122,6 +122,102 @@ def fused_scan_batch(
     return est, b, hist, early, nmiss
 
 
+def rabitq_bounds_stream(codes_s: jax.Array, norm_o: jax.Array,
+                         f_o: jax.Array, cl: jax.Array,
+                         centroids: jax.Array, rot: jax.Array,
+                         qs: jax.Array, d2: jax.Array,
+                         lane_valid: jax.Array, eps0: float):
+    """Batched RaBitQ estimator over a candidate stream (the CPU production
+    bounds pass AND the inner math of the fused-kernel mirror; a shard's
+    local stream is just a shorter stream).
+
+    The per-(query, cluster) rotated residual decomposes as
+    ``P(q - c) = Pq - Pc``, so the code inner products for every query are
+    ONE (n_stream, d) x (d, B) matmul plus a per-lane centroid correction —
+    the batched-native form of ``rabitq.query_factors`` + ``estimate``
+    (mathematically identical; floating-point association differs from the
+    per-cluster matvec of the single-query path).  ``d2`` is the (B, C)
+    squared query-centroid distance matrix the routing pass already built;
+    ``cl`` maps each stream lane to its (clamped) owning cluster.
+    """
+    g = qs @ rot.T                                            # (B, d) = Pq
+    h = centroids @ rot.T                                     # (C, d) = Pc
+    s1 = codes_s @ g.T                                        # (n_stream, B)
+    s2 = jnp.sum(codes_s * h[cl], axis=1)                     # (n_stream,)
+    nq = jnp.sqrt(d2)                                         # (B, C) norm_q
+    nq_lane = nq[:, cl]                                       # (B, n_stream)
+    d = codes_s.shape[1]
+    xv = (s1.T - s2[None, :]) / (
+        jnp.sqrt(jnp.float32(d)) * jnp.maximum(nq_lane, 1e-12))
+    ip = xv / f_o[None, :]
+    err = eps0 * jnp.sqrt((1.0 - f_o ** 2) / (f_o ** 2 * (d - 1)))
+    scale = 2.0 * nq_lane * norm_o[None, :]
+    base = nq_lane ** 2 + norm_o[None, :] ** 2
+    zero = jnp.zeros_like(base)
+    est = jnp.sqrt(jnp.maximum(base - scale * ip, zero))
+    lb = jnp.sqrt(jnp.maximum(base - scale * (ip + err[None, :]), zero))
+    ub = jnp.sqrt(jnp.maximum(base - scale * (ip - err[None, :]), zero))
+    bad = ~lane_valid
+    inf = jnp.inf
+    return (jnp.where(bad, inf, est), jnp.where(bad, inf, lb),
+            jnp.where(bad, inf, ub))
+
+
+def fused_rabitq_scan_batch(
+    codes_s: jax.Array,   # (n, d) ±1 stream codes (fp32)
+    vectors: jax.Array,   # (n, d) shared fp32 re-rank vectors
+    norm_o: jax.Array,    # (n,)
+    f_o: jax.Array,       # (n,)
+    cl: jax.Array,        # (n,) clamped owning cluster per lane
+    centroids: jax.Array,  # (C, d)
+    rot: jax.Array,       # (d, d)
+    qs: jax.Array,        # (B, d)
+    d2: jax.Array,        # (B, C) squared query-centroid distances
+    valid: jax.Array,     # (B, n)
+    d_min, delta,         # (B,)
+    ew_maps: jax.Array,   # (B, n_ew)
+    m: int,
+    tau_inline: jax.Array,  # (B,) int32; -1 certifies nothing
+    eps0: float = 3.0,
+):
+    """Oracle for the bound-fused RaBitQ kernel.
+
+    Returns ``(est, lb, ub, bucket_lb, bucket_ub, hist_lb, hist_ub, exact,
+    certified, nmiss)`` where ``exact`` carries the inline exact re-rank of
+    bound-certified lanes (lower-bound bucket at or below ``tau_inline``)
+    and +inf elsewhere, and ``nmiss`` counts the valid lanes the inline
+    pass left to the second gather.  ``hist_ub`` is the band anchor (the
+    codebook is built from upper bounds) and the cross-batch predictor's
+    EMA input; ``hist_lb`` feeds the certain-in threshold.
+    """
+    est, lb, ub = rabitq_bounds_stream(codes_s, norm_o, f_o, cl, centroids,
+                                       rot, qs, d2, valid, eps0)
+    bucket_lb = bucketize_batch(lb, d_min, delta, ew_maps, m)
+    bucket_ub = bucketize_batch(ub, d_min, delta, ew_maps, m)
+    w = jnp.where(valid, 1, 0).astype(jnp.int32)
+    hist = jax.vmap(
+        lambda bb, ww: jnp.zeros((m + 1,), jnp.int32).at[bb].add(ww))
+    hist_lb = hist(bucket_lb, w)
+    hist_ub = hist(bucket_ub, w)
+    ex = l2_exact_batch(vectors, qs)
+    certified = valid & (bucket_lb <= tau_inline[:, None])
+    exact = jnp.where(certified, ex, jnp.inf)
+    nmiss = jnp.sum(valid & ~certified, axis=1).astype(jnp.int32)
+    return (est, lb, ub, bucket_lb, bucket_ub, hist_lb, hist_ub, exact,
+            certified, nmiss)
+
+
+def fused_rabitq_scan(codes_s, vectors, norm_o, f_o, cl, centroids, rot,
+                      q, d2, valid, d_min, delta, ew_map, m, tau_inline,
+                      eps0: float = 3.0):
+    """Single-query oracle: the batched mirror on a singleton batch."""
+    outs = fused_rabitq_scan_batch(
+        codes_s, vectors, norm_o, f_o, cl, centroids, rot, q[None],
+        d2[None], valid[None], d_min[None], delta[None], ew_map[None], m,
+        jnp.asarray(tau_inline, jnp.int32)[None], eps0)
+    return tuple(o[0] for o in outs)
+
+
 def fused_scan(
     codes: jax.Array,    # (n, M) uint8/int32 PQ codes
     vectors: jax.Array,  # (n, d) fp32

@@ -8,7 +8,12 @@ enqueue time, using the only two facts it can know cheaply:
 * a per-bucket **service-time EMA** (`ServiceEMA`) fed by the measured wall
   time of every completed batch — the same estimate the batcher's
   fire-on-slack rule uses, so scheduling and admission agree on capacity;
-* the current **queue depth** per bucket, read from the batcher.
+* the current **queue depth** per bucket, read from the batcher;
+* the **in-flight batch**'s remaining EMA service time (``in_flight``):
+  a request that arrives mid-batch cannot start before the executor frees
+  up, so the server folds the currently-executing batch's estimated
+  remainder into the wait — decided at ARRIVAL time with what a live
+  server would know (the EMA estimate, not the eventually-measured time).
 
 For a request whose deadline is unmeetable at its own bucket the controller
 first tries to **degrade** it — cap ``k`` to a smaller bucket ceiling whose
@@ -89,8 +94,14 @@ class AdmissionController:
                    for b, depth in depths.items() if depth > 0)
 
     def decide(self, req: Request, now: float,
-               depths: Mapping[ShapeBucket, int]) -> Decision:
-        wait = self._backlog(depths)
+               depths: Mapping[ShapeBucket, int],
+               in_flight: float = 0.0) -> Decision:
+        """Admission verdict at time ``now``.  ``in_flight`` is the
+        estimated remaining service time of the batch occupying the
+        executor (0 when idle); it delays every queued batch, so it adds
+        to the backlog wait.  Still a pure function of its arguments —
+        seeded traces with a fixed service model replay identically."""
+        wait = in_flight + self._backlog(depths)
         # own bucket first; then (k-cap) smaller ceilings, largest first,
         # so a degraded request keeps as much of its k as the deadline allows
         ladder = [c for c in self.ceilings if c >= req.k] or \

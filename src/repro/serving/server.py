@@ -157,6 +157,25 @@ class Server:
 
     # -- the event loop -----------------------------------------------------
 
+    def _admit(self, req: Request, now: float,
+               outcomes: dict[int, Outcome], in_flight: float = 0.0) -> None:
+        """Run one request through admission (or straight to the batcher
+        when admission is off).  ``in_flight`` carries the estimated
+        remaining service time of the batch occupying the executor — a
+        request arriving mid-batch is decided at its ARRIVAL time with
+        that estimate folded into its deadline feasibility."""
+        if self.admission is None:
+            self.batcher.submit(req.k_capped(self.batcher.ceilings[-1]))
+            return
+        dec = self.admission.decide(req, now, self.batcher.depths(),
+                                    in_flight=in_flight)
+        if dec.action == adm.SHED:
+            outcomes[req.rid] = Outcome(
+                request=req, status=SHED, bucket=None, ids=None,
+                dists=None, t_done=now, k_effective=0)
+        else:
+            self.batcher.submit(req.k_capped(dec.k))
+
     def _finish(self, batch: Batch, res, t_done: float,
                 outcomes: dict[int, Outcome]) -> None:
         ids = np.asarray(res.ids)
@@ -183,24 +202,34 @@ class Server:
             while i < len(trace) and trace[i].arrival <= t:
                 req = trace[i]
                 i += 1
-                if self.admission is None:
-                    self.batcher.submit(req.k_capped(
-                        self.batcher.ceilings[-1]))
-                    continue
-                dec = self.admission.decide(req, t, self.batcher.depths())
-                if dec.action == adm.SHED:
-                    outcomes[req.rid] = Outcome(
-                        request=req, status=SHED, bucket=None, ids=None,
-                        dists=None, t_done=t, k_effective=0)
-                else:
-                    self.batcher.submit(req.k_capped(dec.k))
+                self._admit(req, t, outcomes)
 
             fired = self.batcher.fire_ready(t)
             if fired:
-                for batch in fired:
+                for j, batch in enumerate(fired):
+                    t0 = t
+                    # what a live server knows while the batch runs: its
+                    # EMA estimate, frozen before the measurement lands —
+                    # plus the estimates of batches already fired behind it
+                    # (popped from the queue, so invisible to depths())
+                    est = self.service.estimate(batch.bucket)
+                    pending = sum(self.service.estimate(b2.bucket)
+                                  for b2 in fired[j + 1:])
                     dt, res = self._serve(batch)
+                    t = t0 + dt
+                    # requests that arrived DURING this batch's service are
+                    # decided at their arrival instant, with the executor's
+                    # estimated remainder folded into the wait (ROADMAP
+                    # PR-4 future-work note: the backlog model previously
+                    # ignored in-flight completion time — those arrivals
+                    # were judged only after the batch finished)
+                    while i < len(trace) and trace[i].arrival <= t:
+                        req = trace[i]
+                        i += 1
+                        remaining = max(0.0, (t0 + est) - req.arrival)
+                        self._admit(req, req.arrival, outcomes,
+                                    in_flight=remaining + pending)
                     self.service.observe(batch.bucket, dt)
-                    t += dt
                     self._finish(batch, res, t, outcomes)
                 continue   # service time passed: re-check arrivals first
 

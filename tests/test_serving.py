@@ -189,6 +189,65 @@ def test_oversized_k_is_capped_at_top_rung():
     assert d.action == adm.DEGRADE and d.k == 128
 
 
+def test_admission_folds_in_flight_remainder():
+    """A request whose deadline is feasible on an idle executor becomes
+    infeasible when the in-flight batch's remaining EMA service time is
+    folded in — the ROADMAP PR-4 backlog-model gap."""
+    svc = _seeded_service({(64, N_PROBE): 0.4, (128, N_PROBE): 0.4})
+    ac = adm.AdmissionController(svc, CEILS, BATCH, allow_degrade=False)
+    r = req(0, k=50, deadline=1.0)
+    assert ac.decide(r, 0.0, {}).action == adm.ACCEPT
+    # 0.4s of wait still fits a 1.0s deadline; 0.7s of in-flight does not
+    assert ac.decide(r, 0.0, {}, in_flight=0.4).action == adm.ACCEPT
+    assert ac.decide(r, 0.0, {}, in_flight=0.7).action == adm.SHED
+    # in-flight time stacks with the queued-batch backlog
+    depths = {bt.ShapeBucket(k=64, batch=BATCH, n_probe=N_PROBE): BATCH}
+    assert ac.decide(r, 0.0, depths, in_flight=0.3).action == adm.SHED
+    # pure function: identical arguments replay the identical decision
+    d1 = ac.decide(r, 0.0, depths, in_flight=0.3)
+    d2 = ac.decide(r, 0.0, depths, in_flight=0.3)
+    assert d1 == d2
+
+
+def test_server_admits_mid_batch_arrivals_at_arrival_time(corpus, pq_index):
+    """Requests arriving while a batch executes are decided at their
+    arrival instant with the in-flight remainder: with an injected service
+    model making the executor busy for 2s, a mid-batch arrival whose
+    deadline falls inside that window is shed AT ITS ARRIVAL TIME (not
+    judged after the batch completes), deterministically."""
+    _, qs = corpus
+    svc_time = 2.0
+    reqs = [
+        rq.Request(rid=0, q=np.asarray(qs[0]), k=50, n_probe=N_PROBE,
+                   arrival=0.0, deadline=10.0),
+        # arrives at t=0.5 while the first batch (fired at 0, 2s long)
+        # occupies the executor; deadline 1.0 < 0 + est-remainder -> shed
+        rq.Request(rid=1, q=np.asarray(qs[1]), k=50, n_probe=N_PROBE,
+                   arrival=0.5, deadline=1.0),
+        # same arrival, generous deadline -> accepted and served
+        rq.Request(rid=2, q=np.asarray(qs[2]), k=50, n_probe=N_PROBE,
+                   arrival=0.5, deadline=30.0),
+    ]
+    state = ServingState(pq_index, use_bbc=True)
+    srv = sv.Server(state, CEILS, BATCH, allow_degrade=False,
+                    service_time_fn=lambda b: svc_time,
+                    service_cold=svc_time)
+    outcomes = srv.run_trace(reqs, warmup=False)
+    by_rid = {o.request.rid: o for o in outcomes}
+    assert by_rid[0].status == sv.OK
+    assert by_rid[1].status == sv.SHED
+    # shed decision is stamped at the request's arrival, not batch end
+    assert by_rid[1].t_done == pytest.approx(0.5)
+    assert by_rid[2].status == sv.OK
+    # deterministic replay
+    srv2 = sv.Server(state, CEILS, BATCH, allow_degrade=False,
+                     service_time_fn=lambda b: svc_time,
+                     service_cold=svc_time)
+    outcomes2 = srv2.run_trace(reqs, warmup=False)
+    assert [(o.request.rid, o.status, o.t_done) for o in outcomes] == \
+        [(o.request.rid, o.status, o.t_done) for o in outcomes2]
+
+
 # ---------------------------- end-to-end serving ----------------------------
 
 def test_padding_parity_mixed_k_vs_direct_engine(corpus, pq_index):
