@@ -1,0 +1,250 @@
+"""Multi-replica failover under deterministic fault injection.
+
+Acceptance benchmark for the fault-tolerant serving tier
+(``repro.serving.router.ReplicaServer``): one seeded open-loop trace at
+**3x single-replica capacity** is served by a 4-replica pool three times —
+
+* **fault_free** — no fault schedule: the healthy-path baseline the
+  degraded run's tail is compared against;
+* **faulted** — one of the four replicas takes a ``crash`` fault mid-trace
+  (plus, optionally, extra seeded faults via REPRO_FO_EXTRA_FAULTS): its
+  in-flight batch dies, its lanes strand, heartbeats stop, the supervisor
+  respawns it through the checksummed predictor-checkpoint path, and the
+  routed-around traffic is recovered by timeouts, retries, and hedges;
+* **replay** — the faulted run again, same seeds: the outcome digests and
+  the JSON summaries must be byte-identical (the deterministic-replay
+  contract).
+
+The engine calls are REAL (the same PQ engines ``bench_serve.py`` drives);
+the timeline uses a fixed per-bucket service model measured post-compile,
+so scheduling, fault timing, and the replay contract are exact while every
+completed id set still comes from an actual search.
+
+Acceptance (ISSUE 6):
+
+* parity 1.0 vs direct engine calls for every NON-degraded completion;
+* zero lost requests: completed + shed + failed == offered (conservation);
+* p99 latency under the crash fault <= 3x the fault-free 4-replica p99;
+* the replayed faulted run is byte-identical to the first.
+
+Writes ``BENCH_failover.json`` (override with REPRO_BENCH_OUT).  Scale via
+REPRO_FO_N / REPRO_FO_NREQ / REPRO_FO_REPLICAS / REPRO_FO_BATCH /
+REPRO_FO_RATE_X / REPRO_FO_DEADLINE_X; CI's chaos smoke runs a tiny
+configuration with REPRO_FO_STRICT=1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+from repro.index import search
+from repro.serving import admission as sv_adm
+from repro.serving import batcher as sv_batcher
+from repro.serving import faults as sv_faults
+from repro.serving import queue as sv_queue
+from repro.serving import server as sv_server
+from repro.serving.router import HedgePolicy, ReplicaServer, RetryPolicy, \
+    outcome_digest
+from repro.serving.state import ServingState
+
+N = int(os.environ.get("REPRO_FO_N", 40_000))
+D = int(os.environ.get("REPRO_FO_D", 64))
+KS = tuple(int(s) for s in os.environ.get("REPRO_FO_KS", "500,2000").split(","))
+NREQ = int(os.environ.get("REPRO_FO_NREQ", 96))
+BATCH = int(os.environ.get("REPRO_FO_BATCH", 8))
+N_REPLICAS = int(os.environ.get("REPRO_FO_REPLICAS", 4))
+RATE_X = float(os.environ.get("REPRO_FO_RATE_X", 3.0))
+DEADLINE_X = float(os.environ.get("REPRO_FO_DEADLINE_X", 12.0))
+N_PROBE = int(os.environ.get("REPRO_FO_NPROBE", 0)) or None
+EXTRA_FAULTS = int(os.environ.get("REPRO_FO_EXTRA_FAULTS", 0))
+FAULT_SEED = int(os.environ.get("REPRO_FO_FAULT_SEED", 11))
+
+
+def _build():
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(common.make_corpus(rng, N, D))
+    qs = synthetic.queries_from(np.random.default_rng(7), np.asarray(x),
+                                NREQ)
+    n_clusters = max(int(np.sqrt(N)), 16)
+    index = search.build_pq_index(jax.random.key(0), x, n_clusters, n_iter=6)
+    return qs, index, n_clusters
+
+
+def _measure_service(state: ServingState, qs, ceilings, n_probe):
+    """Fixed per-bucket BATCH-call service model, measured post-compile —
+    the deterministic clock every run (and the replay) shares."""
+    per_bucket = {}
+    for k in ceilings:
+        bucket = sv_batcher.bucket_of(k, n_probe, ceilings, BATCH)
+        eng = state.engine(bucket).warmup(batch_sizes=(BATCH,))
+        batch_qs = jnp.asarray(np.asarray(qs)[:BATCH])
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = eng.search_batch(batch_qs)
+            jax.block_until_ready((res.dists, res.ids))
+            ts.append(time.perf_counter() - t0)
+        per_bucket[(k, n_probe)] = float(np.median(ts))
+    fallback = float(np.median(list(per_bucket.values())))
+
+    def service_time_fn(bucket: sv_batcher.ShapeBucket) -> float:
+        return per_bucket.get((bucket.k, bucket.n_probe), fallback)
+
+    return per_bucket, service_time_fn
+
+
+def _serve(index, trace, ceilings, n_probe, service_time_fn, schedule,
+           ladder, deadline):
+    # policy tuning, sized in estimated service times: batches wait at most
+    # a third of the deadline budget (tail latency under LOW load must not
+    # equal the deadline), every request hedges once remaining slack falls
+    # to 6 service estimates (crash-stranded work recovers via the hedge
+    # well before its timeout), and timeouts fire 2 estimates past the
+    # deadline (the backstop for work stranded with no hedge slack left)
+    state = ServingState(index, use_bbc=True)
+    srv = ReplicaServer(
+        state, N_REPLICAS, ceilings, BATCH,
+        retry=RetryPolicy(timeout_mult=2.0),
+        hedge=HedgePolicy(slack_mult=6.0),
+        ladder=ladder, faults=schedule,
+        service_time_fn=service_time_fn,
+        max_wait=deadline / 3,
+        # heartbeat / respawn cadence scaled to the trace's timescale
+        # (deadline = DEADLINE_X service estimates): detection within ~one
+        # estimated service time, supervisor restart ~1.5 estimates later
+        hb_interval=float(os.environ.get("REPRO_FO_HB", deadline / 40)),
+        respawn_delay=float(os.environ.get("REPRO_FO_RESPAWN",
+                                           deadline / 8)))
+    outcomes = srv.run_trace(trace)
+    return state, srv, outcomes
+
+
+def _row(mode, outcomes, srv):
+    return dict(mode=mode, **sv_server.summarize(outcomes),
+                digest=outcome_digest(outcomes),
+                stats=dict(sorted(srv.stats.items())))
+
+
+def run():
+    qs, index, n_clusters = _build()
+    n_probe = N_PROBE or max(n_clusters // 4, 8)
+    ceilings = sv_batcher.k_ceilings(KS)
+
+    cal_state = ServingState(index, use_bbc=True)
+    per_bucket, service_time_fn = _measure_service(cal_state, qs, ceilings,
+                                                   n_probe)
+    # single-replica capacity = one executor draining BATCH-wide calls;
+    # the pool is offered RATE_X times that, so with one of N_REPLICAS
+    # replicas crash-faulted the survivors still have headroom and the
+    # tier must degrade gracefully instead of collapsing
+    mean_service = float(np.mean(list(per_bucket.values())))
+    capacity_1 = BATCH / mean_service
+    rate = RATE_X * capacity_1
+    deadline = DEADLINE_X * mean_service
+    trace = sv_queue.make_trace(np.random.default_rng(5), np.asarray(qs),
+                                KS, rate=rate, deadline=deadline,
+                                n_probe=n_probe, pattern="poisson")
+    horizon = max(r.arrival for r in trace)
+    ladder = sv_adm.DegradeLadder(
+        ((2.0, min(KS), None), (4.0, min(KS), max(n_probe // 2, 1))))
+
+    # one replica crash-faulted mid-trace, plus optional seeded extras
+    faults = [sv_faults.Fault(t=0.5 * horizon, replica=1,
+                              kind=sv_faults.CRASH)]
+    if EXTRA_FAULTS:
+        extra = sv_faults.FaultSchedule.seeded(
+            np.random.default_rng(FAULT_SEED), N_REPLICAS, horizon,
+            n_faults=EXTRA_FAULTS)
+        faults.extend(extra.faults)
+    schedule = sv_faults.FaultSchedule(faults)
+
+    runs = {}
+    for mode, sched in (("fault_free", sv_faults.FaultSchedule()),
+                        ("faulted", schedule),
+                        ("replay", schedule)):
+        state, srv, outcomes = _serve(index, trace, ceilings, n_probe,
+                                      service_time_fn, sched, ladder,
+                                      deadline)
+        runs[mode] = (state, srv, outcomes)
+
+    rows = [_row(mode, outcomes, srv)
+            for mode, (_, srv, outcomes) in runs.items()]
+    by_mode = {r["mode"]: r for r in rows}
+
+    # -- gates ---------------------------------------------------------------
+    state_f, _, out_f = runs["faulted"]
+    non_degraded = [o for o in out_f if o.status == sv_server.OK]
+    parity, n_checked = sv_server.parity_vs_direct(state_f, non_degraded)
+    conserved = all(r["conserved"] for r in rows)
+    p99_free = by_mode["fault_free"]["p99_ms"]
+    p99_fault = by_mode["faulted"]["p99_ms"]
+    p99_ok = bool(p99_fault is not None and p99_free is not None
+                  and p99_fault <= 3.0 * p99_free)
+    def strip_mode(r):
+        return {k: v for k, v in r.items() if k != "mode"}
+
+    replay_identical = bool(
+        by_mode["faulted"]["digest"] == by_mode["replay"]["digest"]
+        and json.dumps(strip_mode(by_mode["faulted"]), sort_keys=True)
+        == json.dumps(strip_mode(by_mode["replay"]), sort_keys=True))
+
+    for r in rows:
+        common.emit(
+            f"failover/{r['mode']}", 1e6 / max(r["qps"], 1e-9),
+            f"qps={r['qps']};p99_ms={r['p99_ms']};failed={r['failed']};"
+            f"degraded={r['degraded']};retried={r['retried']};"
+            f"hedged={r['hedged']}")
+
+    payload = {
+        "bench": "failover",
+        "corpus": {"n": N, "d": D, "corpus": common.CORPUS},
+        "config": {
+            "ks": list(KS), "n_requests": NREQ, "batch": BATCH,
+            "n_replicas": N_REPLICAS, "n_probe": n_probe,
+            "offered_rate": round(rate, 2),
+            "rate_x_single_replica_capacity": RATE_X,
+            "deadline_ms": round(deadline * 1e3, 2),
+            "faults": [
+                {"kind": f.kind, "replica": f.replica,
+                 "t": round(f.t, 4), "duration": round(f.duration, 4),
+                 "factor": f.factor} for f in schedule.faults],
+            "service_ms_per_bucket": {
+                f"k{k}_np{np_}": round(v * 1e3, 3)
+                for (k, np_), v in per_bucket.items()},
+        },
+        "platform": jax.devices()[0].platform,
+        "results": rows,
+        "acceptance": {
+            "parity_non_degraded": round(parity, 4),
+            "parity_checked": n_checked,
+            "conserved": conserved,
+            "p99_fault_free_ms": p99_free,
+            "p99_faulted_ms": p99_fault,
+            "p99_ratio_limit": 3.0,
+            "replay_identical": replay_identical,
+            # n_checked > 0 guards the vacuous case: a run where every
+            # completion was degraded verified no parity at all
+            "pass": bool(parity == 1.0 and n_checked > 0 and conserved
+                         and p99_ok and replay_identical),
+        },
+    }
+    out_path = os.environ.get("REPRO_BENCH_OUT", "BENCH_failover.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
+    if os.environ.get("REPRO_FO_STRICT") == "1" and \
+            not payload["acceptance"]["pass"]:
+        raise SystemExit(f"bench_failover acceptance failed: "
+                         f"{payload['acceptance']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,7 +1,11 @@
 """Checkpointing: sharded-pytree save/restore with async writes and
 elastic re-sharding.
 
-Layout:  <dir>/step_<n>/manifest.json + one .npy per leaf.
+Layout:  <dir>/step_<n>/manifest.json + one .npy per leaf.  The manifest
+records a sha256 per leaf file plus a whole-checkpoint content checksum;
+``restore`` verifies both BEFORE deserializing and raises
+``CorruptCheckpointError`` on any mismatch (the serving tier's replica
+respawn path loads through here after a crash fault).
 Writes land in a tmp dir and are renamed atomically; a background thread
 performs the serialization so the train loop is not blocked (async_save).
 Restore accepts a target sharding tree — the arrays are placed with
@@ -15,6 +19,7 @@ full arrays (the manifest schema already carries the spec strings).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -24,6 +29,22 @@ from typing import Any
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint's on-disk bytes do not match its manifest checksums.
+
+    Raised on restore BEFORE any array is deserialized, so a replica
+    respawning after a crash fault (serving tier) either loads a verified
+    state or falls back to a cold start — it never resumes from garbage."""
+
+
+def _file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten(tree) -> list[tuple[str, Any]]:
@@ -76,13 +97,22 @@ class CheckpointManager:
         manifest = {"step": step, "leaves": {}}
         treedef = jax.tree.structure(host_tree)
         manifest["treedef"] = str(treedef)
+        digests = []
         for i, (key, leaf) in enumerate(_flatten(host_tree)):
             fname = f"leaf_{i:05d}.npy"
             np.save(os.path.join(tmp, fname), leaf)
+            digest = _file_sha256(os.path.join(tmp, fname))
+            digests.append(digest)
             manifest["leaves"][key] = {
                 "file": fname, "shape": list(np.shape(leaf)),
                 "dtype": str(np.asarray(leaf).dtype), "index": i,
+                "sha256": digest,
             }
+        # whole-checkpoint content checksum: order-stable over leaf digests,
+        # so a truncated/garbled leaf OR a manifest/leaf mismatch both fail
+        # verification on load
+        manifest["checksum"] = hashlib.sha256(
+            "".join(digests).encode()).hexdigest()
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         shutil.rmtree(final, ignore_errors=True)
@@ -108,6 +138,44 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify(self, step: int) -> None:
+        """Check a checkpoint's content checksums without deserializing it.
+
+        Raises :class:`CorruptCheckpointError` when any leaf file's bytes
+        disagree with the manifest, or the manifest-level checksum disagrees
+        with the per-leaf digests.  Pre-checksum checkpoints (no ``sha256``
+        entries) pass: they carry nothing to verify against."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            raise CorruptCheckpointError(
+                f"{d}: unreadable manifest ({e})") from e
+        metas = sorted(manifest["leaves"].values(), key=lambda m: m["index"])
+        digests = []
+        for meta in metas:
+            want = meta.get("sha256")
+            if want is None:
+                return  # legacy manifest: nothing recorded to verify
+            path = os.path.join(d, meta["file"])
+            if not os.path.exists(path):
+                raise CorruptCheckpointError(
+                    f"{d}: missing leaf file {meta['file']}")
+            got = _file_sha256(path)
+            if got != want:
+                raise CorruptCheckpointError(
+                    f"{d}: leaf {meta['file']} checksum mismatch "
+                    f"(manifest {want[:12]}…, on disk {got[:12]}…)")
+            digests.append(got)
+        want_total = manifest.get("checksum")
+        if want_total is not None:
+            got_total = hashlib.sha256(
+                "".join(digests).encode()).hexdigest()
+            if got_total != want_total:
+                raise CorruptCheckpointError(
+                    f"{d}: manifest checksum mismatch")
+
     def restore(self, like, step: int | None = None, shardings=None):
         """Restore into the structure of ``like``; optionally re-shard with
         ``shardings`` (a matching pytree of Sharding) — the elastic path."""
@@ -115,8 +183,13 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            raise CorruptCheckpointError(
+                f"{d}: unreadable manifest ({e})") from e
+        self.verify(step)
         flat_like = _flatten(like)
         leaves = []
         for key, leaf_like in flat_like:

@@ -44,6 +44,7 @@ batch shape.  The engine is deliberately thin: all numerics live in
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -308,6 +309,17 @@ class SearchEngine:
     def predictor_init(self) -> rerank.PredictorState:
         """Cold cross-batch threshold-predictor state for this engine."""
         return rerank.predictor_init(self.m)
+
+    def replica_clone(self) -> "SearchEngine":
+        """Replica-build hook for the multi-replica serving tier: a fresh
+        engine INSTANCE sharing every build-time artifact by reference —
+        the flat layout, the RaBitQ ``stream_cache``, the placed shard
+        streams.  This is what a respawned replica process gets from a
+        shared artifact store instead of re-running the host-side packing;
+        the engine is immutable, so sharing is safe and the clone costs
+        nothing.  (``ServingState.fork(clone_engines=True)`` is the
+        consumer.)"""
+        return dataclasses.replace(self)
 
     @property
     def dim(self) -> int:

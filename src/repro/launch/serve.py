@@ -219,10 +219,31 @@ def run_async(args, x, qs, index, mesh, n_probe):
     state = ServingState(
         index, use_bbc=args.method.endswith("bbc"), tau_pred=tau_pred_on,
         mesh=mesh, pred_count=args.pred_count)
-    srv = sv_server.Server(
-        state, ceilings=sv_batcher.k_ceilings(ks), batch=args.max_batch,
-        admission=not args.no_admission,
-        max_wait=(args.max_wait_ms / 1e3 if args.max_wait_ms else None))
+    max_wait = args.max_wait_ms / 1e3 if args.max_wait_ms else None
+    if args.replicas > 1:
+        # fault-tolerant multi-replica tier: affinity routing, health
+        # checks, retries/hedges, supervisor respawn (serving/router.py)
+        from repro.serving import faults as sv_faults
+        from repro.serving.router import (HedgePolicy, ReplicaServer,
+                                          RetryPolicy, outcome_digest)
+        schedule = sv_faults.FaultSchedule.parse(args.faults) \
+            if args.faults else None
+        srv = ReplicaServer(
+            state, args.replicas, ceilings=sv_batcher.k_ceilings(ks),
+            batch=args.max_batch,
+            retry=RetryPolicy(max_retries=args.retries),
+            hedge=HedgePolicy(enabled=args.hedge == "on"),
+            faults=schedule, max_wait=max_wait,
+            hb_interval=args.hb_ms / 1e3,
+            respawn_delay=args.respawn_ms / 1e3)
+    elif args.faults:
+        raise SystemExit("--faults requires --replicas > 1 (faults are "
+                         "injected at the replica service boundary)")
+    else:
+        srv = sv_server.Server(
+            state, ceilings=sv_batcher.k_ceilings(ks),
+            batch=args.max_batch, admission=not args.no_admission,
+            max_wait=max_wait)
     n_buckets = len({(min(r.k, max(ks)), r.n_probe) for r in trace})
     t0 = time.monotonic()
     srv.warmup(trace)
@@ -231,6 +252,12 @@ def run_async(args, x, qs, index, mesh, n_probe):
     outcomes = srv.run_trace(trace, warmup=False)
 
     summary = sv_server.summarize(outcomes)
+    if args.replicas > 1:
+        summary.update({
+            "replicas": args.replicas, "faults": args.faults or "",
+            "outcome_digest": outcome_digest(outcomes),
+            "fault_stats": dict(sorted(srv.stats.items())),
+        })
     done = [o for o in outcomes if o.status != sv_server.SHED]
     idx = sample_indices(len(done), RECALL_SAMPLE)
     # None (json null), not NaN, when everything was shed — the summary
@@ -316,6 +343,28 @@ def main():
                     help="[async] verify every completed request's ids "
                          "against a direct engine call; exit non-zero on "
                          "any mismatch")
+    # -- multi-replica fault-tolerance knobs (async mode) ---------------------
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="[async] replica pool size; > 1 routes through the "
+                         "fault-tolerant tier (affinity routing, health "
+                         "checks, retries, hedges, supervisor respawn)")
+    ap.add_argument("--faults", type=str, default="",
+                    help="[async] deterministic fault schedule, e.g. "
+                         "'crash@1:t=0.5;stall@0:t=0.2,dur=0.1;"
+                         "slow@2:t=0.0,dur=1.0,factor=4;corrupt@3:t=0.3,"
+                         "dur=0.2' (requires --replicas > 1)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="[async] max retry attempts per request after a "
+                         "timeout or corrupt response (--replicas > 1)")
+    ap.add_argument("--hedge", choices=("on", "off"), default="on",
+                    help="[async] hedged second sends when deadline slack "
+                         "runs low; first response wins (--replicas > 1)")
+    ap.add_argument("--hb-ms", type=float, default=20.0,
+                    help="[async] replica heartbeat interval, ms "
+                         "(--replicas > 1)")
+    ap.add_argument("--respawn-ms", type=float, default=50.0,
+                    help="[async] supervisor respawn delay after a replica "
+                         "is marked DOWN, ms (--replicas > 1)")
     ap.add_argument("--seed", type=int, default=0,
                     help="trace/corpus RNG seed")
     args = ap.parse_args()

@@ -2,13 +2,21 @@
 engine); see ``server.Server`` for the composition root."""
 from repro.serving.admission import (ACCEPT, DEGRADE, SHED, # noqa: F401
                                      AdmissionController, Decision,
-                                     ServiceEMA)
+                                     DegradeLadder, ServiceEMA)
 from repro.serving.batcher import (Batch, MicroBatcher,      # noqa: F401
                                    ShapeBucket, assemble, bucket_of,
                                    k_ceilings)
+from repro.serving.faults import (Fault, FaultSchedule,      # noqa: F401
+                                  corrupt_payload, payload_checksum)
+from repro.serving.health import HealthView                  # noqa: F401
 from repro.serving.queue import (Request, RequestQueue,      # noqa: F401
                                  bursty_arrivals, make_trace,
                                  poisson_arrivals)
+from repro.serving.replica import (Replica, ReplicaPool,     # noqa: F401
+                                   ReplicaResponse)
+from repro.serving.router import (HedgePolicy, ReplicaServer,  # noqa: F401
+                                  RetryPolicy, RouteDecision, Router,
+                                  outcome_digest)
 from repro.serving.server import (Outcome, Server,             # noqa: F401
                                   parity_vs_direct, summarize, trim_topk)
 from repro.serving.state import ServingState                 # noqa: F401

@@ -74,6 +74,48 @@ class Decision:
     finish_est: float                # estimated completion time
 
 
+@dataclass(frozen=True)
+class DegradeLadder:
+    """Capacity-pressure degradation rungs for the multi-replica tier.
+
+    When healthy capacity drops below offered load (replicas crashed or
+    stalled), the serving tier should slide DOWN the recall/latency frontier
+    — smaller k, narrower n_probe — before it starts shedding: fewer/coarser
+    results beat no results.  Each rung is ``(load_factor, k_cap,
+    n_probe_cap)``: at ``offered/capacity >= load_factor`` requests are
+    capped to ``k_cap`` / ``n_probe_cap`` (None leaves that knob alone).
+    Rungs are evaluated in ascending ``load_factor`` order and the LAST
+    matching rung wins, so deeper overload degrades harder.  ``caps`` is a
+    pure function of its argument — seeded fault runs replay identically.
+    """
+
+    rungs: tuple = ()       # ((load_factor, k_cap | None, np_cap | None), …)
+
+    def __post_init__(self):
+        thresholds = [r[0] for r in self.rungs]
+        if thresholds != sorted(thresholds):
+            raise ValueError(
+                f"ladder rungs must be sorted by load factor: {self.rungs}")
+
+    def caps(self, load_factor: float) -> tuple[int | None, int | None]:
+        k_cap = n_probe_cap = None
+        for threshold, kc, nc in self.rungs:
+            if load_factor >= threshold:
+                k_cap, n_probe_cap = kc, nc
+        return k_cap, n_probe_cap
+
+    def apply(self, req: Request, load_factor: float) -> Request:
+        """Cap a request per the rung the current overload selects; the
+        capped request is flagged (``k_requested`` / ``n_probe_requested``)
+        so its outcome reports ``degraded``."""
+        k_cap, n_probe_cap = self.caps(load_factor)
+        if k_cap is not None:
+            req = req.k_capped(k_cap)
+        if n_probe_cap is not None:
+            req = req.n_probe_capped(n_probe_cap)
+        return req
+
+
 class AdmissionController:
     """Shed-or-degrade admission over the bucket ladder."""
 

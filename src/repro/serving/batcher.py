@@ -130,6 +130,29 @@ class MicroBatcher:
     def pending(self) -> int:
         return sum(len(lane) for lane in self._lanes.values())
 
+    # -- withdrawal (the retry path pulls timed-out requests back) -----------
+
+    def withdraw(self, rid: int) -> Request | None:
+        """Remove and return a queued (not yet fired) request by id, or
+        None when it is not waiting here.  The multi-replica retry path
+        uses this to pull a timed-out request out of a dead or stalled
+        replica's lane before re-dispatching it elsewhere — without it the
+        request could complete twice from one attempt."""
+        for bucket in sorted(self._lanes):
+            lane = self._lanes[bucket]
+            for i, r in enumerate(lane):
+                if r.rid == rid:
+                    return lane.pop(i)
+        return None
+
+    def clear(self) -> int:
+        """Drop every queued request (crash respawn: a restarted replica
+        process has lost its queue; the requests are recovered by their
+        timeouts).  Returns the number dropped."""
+        n = self.pending()
+        self._lanes.clear()
+        return n
+
     # -- firing -------------------------------------------------------------
 
     # float jitter guard: next_fire_time's "due" instant must round-trip

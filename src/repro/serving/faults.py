@@ -1,0 +1,213 @@
+"""Deterministic fault injection at the replica service boundary.
+
+The multi-replica tier is only production-shaped if it survives replicas
+that stall, crash, or lie — and a fault run is only debuggable if it
+REPLAYS.  This module therefore models faults as a static, fully seeded
+:class:`FaultSchedule`: a sorted tuple of :class:`Fault` records, each
+pinned to (replica, time).  The schedule is consulted exclusively inside
+``Replica.serve`` and the replica-side heartbeat — the service boundary —
+so the router sees only the observable consequences (missed heartbeats,
+overdue batches, checksum mismatches) and cannot cheat by peeking at the
+schedule.
+
+Fault taxonomy:
+
+=========  ===============================================================
+kind       effect at the service boundary
+=========  ===============================================================
+crash      the replica dies at ``t``: an in-flight batch never completes,
+           queued work is stranded, heartbeats stop.  One-shot; a
+           supervisor may respawn the replica after a delay (the respawn
+           consumes the crash).
+stall      for ``duration`` seconds from ``t`` the replica makes no
+           progress: any batch whose service overlaps the window finishes
+           ``duration`` late, and heartbeats inside the window are
+           suppressed (so the health view sees the stall).
+slow       batches STARTED inside ``[t, t + duration)`` take ``factor``
+           times their normal service time (e.g. a noisy neighbor); the
+           health view's service-time anomaly detector is the defense.
+corrupt    responses to batches started inside the window have their
+           payload corrupted AFTER the integrity checksum is computed —
+           the router's checksum verification must catch it and retry.
+=========  ===============================================================
+
+Schedules come from either a spec string (``--faults`` on the serving CLI;
+see :meth:`FaultSchedule.parse`) or a seeded generator
+(:meth:`FaultSchedule.seeded`).  Both are pure data: identical spec/seed ⇒
+identical schedule ⇒ (with a fixed service model) byte-identical outcome
+summaries — the deterministic replay contract ``tests/test_replica.py``
+and ``benchmarks/bench_failover.py`` gate on.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+import numpy as np
+
+CRASH = "crash"
+STALL = "stall"
+SLOW = "slow"
+CORRUPT = "corrupt"
+KINDS = (CRASH, STALL, SLOW, CORRUPT)
+
+
+@dataclass(frozen=True, order=True)
+class Fault:
+    """One injected fault, pinned to (time, replica)."""
+
+    t: float                 # injection instant (trace clock, seconds)
+    replica: int             # target replica id
+    kind: str                # CRASH | STALL | SLOW | CORRUPT
+    duration: float = 0.0    # window length (stall/slow/corrupt)
+    factor: float = 1.0      # service-time multiplier (slow)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.kind != CRASH and self.duration <= 0:
+            raise ValueError(f"{self.kind} fault needs duration > 0")
+        if self.kind == SLOW and self.factor <= 1.0:
+            raise ValueError(f"slow fault needs factor > 1, "
+                             f"got {self.factor}")
+
+    def active(self, now: float) -> bool:
+        return self.t <= now < self.t + self.duration
+
+
+class FaultSchedule:
+    """Immutable, sorted set of faults with boundary-side query helpers."""
+
+    def __init__(self, faults: Iterable[Fault] = ()):
+        self.faults = tuple(sorted(faults))
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)
+
+    def for_replica(self, rid: int) -> tuple[Fault, ...]:
+        return tuple(f for f in self.faults if f.replica == rid)
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def parse(spec: str) -> "FaultSchedule":
+        """Parse a ``--faults`` spec string.
+
+        Grammar: ``kind@replica:key=val[,key=val…]`` joined by ``;`` —
+        e.g. ``crash@1:t=0.5;stall@2:t=1.0,dur=0.4;``
+        ``slow@0:t=0.2,dur=1.0,factor=4;corrupt@3:t=0.8,dur=0.3``.
+        """
+        faults = []
+        for part in filter(None, (p.strip() for p in spec.split(";"))):
+            try:
+                head, params = part.split(":", 1)
+                kind, rid = head.split("@", 1)
+                kv = dict(item.split("=", 1)
+                          for item in params.split(",") if item)
+                faults.append(Fault(
+                    t=float(kv.pop("t")), replica=int(rid),
+                    kind=kind.strip(),
+                    duration=float(kv.pop("dur", 0.0)),
+                    factor=float(kv.pop("factor", 1.0))))
+                if kv:
+                    raise ValueError(f"unknown keys {sorted(kv)}")
+            except (KeyError, ValueError) as e:
+                raise ValueError(
+                    f"bad fault spec {part!r}: {e} — expected "
+                    f"kind@replica:t=SECONDS[,dur=S][,factor=F]") from e
+        return FaultSchedule(faults)
+
+    @staticmethod
+    def seeded(rng: np.random.Generator, n_replicas: int, horizon: float,
+               n_faults: int = 4,
+               kinds: Sequence[str] = KINDS) -> "FaultSchedule":
+        """Seeded random schedule: ``n_faults`` faults uniform over the
+        middle 80% of ``[0, horizon]`` (faults at the very edges are
+        uninteresting — nothing in flight), kinds and replicas drawn from
+        the rng.  Identical (seed, args) ⇒ identical schedule."""
+        faults = []
+        for _ in range(n_faults):
+            kind = str(rng.choice(list(kinds)))
+            faults.append(Fault(
+                t=float(rng.uniform(0.1, 0.9)) * horizon,
+                replica=int(rng.integers(n_replicas)),
+                kind=kind,
+                duration=(0.0 if kind == CRASH
+                          else float(rng.uniform(0.05, 0.25)) * horizon),
+                factor=(float(rng.choice([2.0, 4.0, 8.0]))
+                        if kind == SLOW else 1.0)))
+        return FaultSchedule(faults)
+
+    # -- boundary-side queries ----------------------------------------------
+    #
+    # ``since`` is the replica's last respawn time: a supervisor restart
+    # consumes every fault at or before it, so a respawned replica is only
+    # subject to faults injected AFTER it came back.
+
+    def crashed(self, rid: int, now: float, since: float = -np.inf) -> bool:
+        return any(f.kind == CRASH and since < f.t <= now
+                   for f in self.faults if f.replica == rid)
+
+    def crash_times(self, rid: int) -> tuple[float, ...]:
+        return tuple(f.t for f in self.faults
+                     if f.replica == rid and f.kind == CRASH)
+
+    def stalled(self, rid: int, now: float,
+                since: float = -np.inf) -> bool:
+        """True while a stall window covers ``now`` (heartbeats suppressed)."""
+        return any(f.kind == STALL and f.t > since and f.active(now)
+                   for f in self.faults if f.replica == rid)
+
+    def corrupts(self, rid: int, t_start: float,
+                 since: float = -np.inf) -> bool:
+        """True when a batch STARTED at ``t_start`` gets a corrupt response."""
+        return any(f.kind == CORRUPT and f.t > since and f.active(t_start)
+                   for f in self.faults if f.replica == rid)
+
+    def perturb(self, rid: int, t_start: float, dt: float,
+                since: float = -np.inf) -> tuple[float, bool]:
+        """Fault-adjusted service time for a batch started at ``t_start``.
+
+        Returns ``(dt_adjusted, completes)``: slow faults active at the
+        start multiply ``dt``, stall windows intersecting the (stretched)
+        service interval add their full duration, and a crash anywhere in
+        ``(since, t_start + dt_adjusted]`` means the batch NEVER completes
+        (``completes=False`` — its requests are recovered by timeouts)."""
+        out = float(dt)
+        mine = [f for f in self.faults if f.replica == rid and f.t > since]
+        for f in mine:
+            if f.kind == SLOW and f.active(t_start):
+                out *= f.factor
+        for f in mine:     # stalls extend the already-stretched interval
+            if f.kind == STALL and f.t < t_start + out and \
+                    f.t + f.duration > t_start:
+                out += f.duration
+        for f in mine:
+            if f.kind == CRASH and f.t <= t_start + out:
+                return out, False
+        return out, True
+
+
+# --------------------------------------------------------------------------
+# Response integrity (the corrupt fault's detection surface)
+# --------------------------------------------------------------------------
+
+def payload_checksum(dists: np.ndarray, ids: np.ndarray) -> int:
+    """CRC over the result payload.  The replica computes it over the TRUE
+    payload before the fault layer touches anything; the router recomputes
+    it over what it received — a corrupt fault therefore surfaces as a
+    checksum mismatch, exactly like a wire-level integrity check would."""
+    crc = zlib.crc32(np.ascontiguousarray(dists).tobytes())
+    return zlib.crc32(np.ascontiguousarray(ids).tobytes(), crc)
+
+
+def corrupt_payload(ids: np.ndarray) -> np.ndarray:
+    """Deterministic payload corruption: flip the low bit of every id —
+    plausible-looking, definitely-wrong results (the worst case for a
+    router that trusts payloads)."""
+    return np.asarray(ids) ^ 1

@@ -40,6 +40,29 @@ class Request:
     arrival: float
     deadline: float
     k_requested: int | None = None
+    n_probe_requested: int | None = None
+
+    def __post_init__(self):
+        # Validate at construction, not only at queue intake: the fault /
+        # retry layer synthesizes requests (k-caps, n_probe-caps, hedged
+        # duplicates) that never pass through RequestQueue.push, and a
+        # malformed retry must fail loudly instead of corrupting the
+        # scheduler's timeline.
+        if self.k <= 0:
+            raise ValueError(
+                f"request {self.rid}: k must be >= 1, got {self.k}")
+        if self.n_probe <= 0:
+            raise ValueError(
+                f"request {self.rid}: n_probe must be >= 1, "
+                f"got {self.n_probe}")
+        if not np.isfinite(self.deadline) or self.deadline < 0:
+            raise ValueError(
+                f"request {self.rid}: deadline must be finite and "
+                f">= 0, got {self.deadline}")
+        if not np.isfinite(self.arrival):
+            raise ValueError(
+                f"request {self.rid}: arrival must be finite, "
+                f"got {self.arrival}")
 
     def slack(self, now: float) -> float:
         return self.deadline - now
@@ -49,6 +72,21 @@ class Request:
             return self
         return replace(self, k=k,
                        k_requested=self.k_requested or self.k)
+
+    def n_probe_capped(self, n_probe: int) -> "Request":
+        """Degrade the routing width (capacity-ladder brownout rung);
+        ``n_probe_requested`` records the original so the outcome is
+        flagged ``degraded``, never silently narrower."""
+        if n_probe >= self.n_probe:
+            return self
+        return replace(self, n_probe=n_probe,
+                       n_probe_requested=self.n_probe_requested
+                       or self.n_probe)
+
+    @property
+    def degraded(self) -> bool:
+        return self.k_requested is not None or \
+            self.n_probe_requested is not None
 
 
 class RequestQueue:

@@ -40,6 +40,13 @@ from repro.serving.state import ServingState
 OK = "ok"
 DEGRADED = "degraded"
 SHED = "shed"
+# terminal failure: every attempt (retries included) timed out, crashed, or
+# was corrupt-rejected, and no healthy replica remained to try.  Only the
+# multi-replica tier (serving/router.py) emits it; the single-engine Server
+# never does.  Like SHED it carries no results — absent, never incorrect —
+# but it counts separately so "completed + shed + failed == offered" is
+# checkable (the chaos-smoke conservation gate).
+FAILED = "failed"
 
 
 def trim_topk(dists: np.ndarray, ids: np.ndarray,
@@ -69,7 +76,7 @@ def parity_vs_direct(state: ServingState,
     bench (bench_serve.py) both call it so "parity" cannot drift between
     them.  Callers must treat a zero count as a failure, not a pass: an
     all-shed run verified nothing."""
-    done = [o for o in outcomes if o.status != SHED]
+    done = [o for o in outcomes if o.ids is not None]
     bad = 0
     for o in done:
         direct = state.engine(o.bucket).search_batch(
@@ -86,20 +93,28 @@ class Outcome:
     """Terminal record for one request."""
 
     request: Request
-    status: str                     # OK | DEGRADED | SHED
+    status: str                     # OK | DEGRADED | SHED | FAILED
     bucket: ShapeBucket | None
-    ids: np.ndarray | None          # (k_effective,) — None when shed
+    ids: np.ndarray | None          # (k_effective,) — None when shed/failed
     dists: np.ndarray | None
     t_done: float
     k_effective: int
+    # multi-replica provenance (None / zero on the single-engine Server)
+    replica: int | None = None      # replica whose response won
+    retries: int = 0                # retry attempts consumed
+    hedged: bool = False            # a hedged duplicate was sent
 
     @property
     def latency(self) -> float:
         return self.t_done - self.request.arrival
 
     @property
+    def completed(self) -> bool:
+        return self.status in (OK, DEGRADED)
+
+    @property
     def deadline_met(self) -> bool:
-        return self.status != SHED and self.t_done <= self.request.deadline
+        return self.completed and self.t_done <= self.request.deadline
 
 
 class Server:
@@ -246,26 +261,52 @@ class Server:
         return [outcomes[r.rid] for r in sorted(trace, key=lambda r: r.rid)]
 
 
+def _pctiles(sub: Sequence[Outcome]) -> dict:
+    lat = np.array([o.latency for o in sub])
+    return {
+        "count": len(sub),
+        # null, not a fabricated 0.0, when nothing completed
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3)
+        if len(sub) else None,
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3)
+        if len(sub) else None,
+    }
+
+
 def summarize(outcomes: Sequence[Outcome]) -> dict:
-    """Aggregate serving metrics for reporting (QPS over the busy span,
-    latency percentiles over completed requests, shed / degrade /
-    deadline-met rates)."""
+    """Aggregate serving metrics for reporting: QPS over the busy span,
+    latency percentiles over completed requests, per-outcome counts AND
+    per-outcome p50/p99 (``by_status``), shed / degrade / failure /
+    deadline-met rates, retry / hedge counts, and the request-conservation
+    check (completed + shed + failed == offered — zero unaccounted
+    requests).  Degraded and retried traffic is surfaced explicitly instead
+    of hiding inside the headline QPS number."""
     n = len(outcomes)
-    done = [o for o in outcomes if o.status != SHED]
-    lat = np.array([o.latency for o in done])
+    done = [o for o in outcomes if o.completed]
+    shed = [o for o in outcomes if o.status == SHED]
+    failed = [o for o in outcomes if o.status == FAILED]
     t0 = min(o.request.arrival for o in outcomes) if outcomes else 0.0
     t1 = max(o.t_done for o in done) if done else t0
     span = max(t1 - t0, 1e-9)
     return {
         "requests": n,
         "completed": len(done),
+        "shed": len(shed),
+        "failed": len(failed),
+        "degraded": sum(o.status == DEGRADED for o in outcomes),
+        "retried": sum(o.retries > 0 for o in outcomes),
+        "hedged": sum(o.hedged for o in outcomes),
+        # zero unaccounted requests: every offered request is terminal
+        "conserved": bool(len(done) + len(shed) + len(failed) == n),
         "qps": round(len(done) / span, 2),
-        # null, not a fabricated 0.0, when nothing completed
-        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3)
-        if done else None,
-        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3)
-        if done else None,
-        "shed_rate": round((n - len(done)) / max(n, 1), 4),
+        "p50_ms": _pctiles(done)["p50_ms"],
+        "p99_ms": _pctiles(done)["p99_ms"],
+        "by_status": {
+            status: _pctiles([o for o in done if o.status == status])
+            for status in (OK, DEGRADED)
+        },
+        "shed_rate": round(len(shed) / max(n, 1), 4),
+        "failed_rate": round(len(failed) / max(n, 1), 4),
         "degraded_rate": round(
             sum(o.status == DEGRADED for o in outcomes) / max(n, 1), 4),
         "deadline_met_rate": round(

@@ -24,6 +24,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import rerank
 from repro.index import engine as engine_mod
@@ -90,6 +91,38 @@ class ServingState:
             self.engine(bucket).warmup(batch_sizes=(bucket.batch,),
                                        predictive=self.tau_pred)
         return self
+
+    # -- replica hooks ------------------------------------------------------
+
+    @property
+    def centroids(self) -> "np.ndarray":
+        """Host copy of the index's coarse centroids — the routing geometry
+        the affinity router scores queries against (PQ / RaBitQ indexes
+        carry them on ``.ivf``; a bare IVF index carries them directly)."""
+        ivf = self.index if hasattr(self.index, "centroids") \
+            else self.index.ivf
+        return np.asarray(ivf.centroids)
+
+    def fork(self, clone_engines: bool = False) -> "ServingState":
+        """Replica-build hook: a new ``ServingState`` sharing this one's
+        (immutable) built engines but owning FRESH per-bucket predictor
+        states — each replica self-tunes on the traffic slice the affinity
+        router sends it.
+
+        With ``clone_engines=False`` (pool construction) the lazy
+        engine-build cache is the SAME dict, so a bucket's one-time layout
+        packing is shared across the whole pool.  With ``clone_engines=True``
+        (crash respawn) the fork gets its own cache seeded with
+        ``SearchEngine.replica_clone()`` of every engine built so far —
+        the respawned process re-reads shared build artifacts instead of
+        re-packing the corpus, but later builds stay private to it."""
+        twin = ServingState.__new__(ServingState)
+        twin.__dict__.update(self.__dict__)
+        if clone_engines:
+            twin._engines = {key: eng.replica_clone()
+                             for key, eng in self._engines.items()}
+        twin._pred = {}
+        return twin
 
     # -- predictor states ---------------------------------------------------
 

@@ -1,0 +1,451 @@
+"""Fault-tolerant multi-replica serving tier (ISSUE 6).
+
+Scheduling, routing, and failure recovery are tested against a stub engine
+state with a FIXED service-time model, so every scenario is exactly
+reproducible (crash/stall/slow/corrupt faults, hedges, retries, brownout,
+the degrade ladder, supervisor respawn).  The correctness contract — a
+completed request's ids match a direct engine call at its bucket — is
+tested once against the real engine, under a crash fault, exactly the way
+``benchmarks/bench_failover.py`` gates it at scale.
+"""
+import copy
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointManager,
+                                      CorruptCheckpointError)
+from repro.core import rerank
+from repro.serving import admission as adm
+from repro.serving import faults as flt
+from repro.serving import health as hlt
+from repro.serving import queue as rq
+from repro.serving import server as sv
+from repro.serving.batcher import ShapeBucket
+from repro.serving.replica import ReplicaPool, ReplicaResponse
+from repro.serving.router import (HedgePolicy, ReplicaServer, RetryPolicy,
+                                  outcome_digest)
+
+D = 8
+SVC = 0.01      # fixed per-batch service model (seconds)
+
+
+def req(rid, k=16, arrival=0.0, deadline=None, n_probe=4, seed=None):
+    rng = np.random.default_rng(rid if seed is None else seed)
+    return rq.Request(rid=rid, q=rng.standard_normal(D).astype(np.float32),
+                      k=k, n_probe=n_probe, arrival=arrival,
+                      deadline=(arrival + 12 * SVC if deadline is None
+                                else deadline))
+
+
+class _Result:
+    def __init__(self, dists, ids):
+        self.dists, self.ids = dists, ids
+
+
+class _StubState:
+    """Engine-free ServingState: deterministic ids from each row's query,
+    ascending distances — enough for the scheduler, router, and fault layer
+    to run a full timeline without jit."""
+
+    def __init__(self, n_centroids=16, m=8):
+        rng = np.random.default_rng(0)
+        self._cents = rng.standard_normal((n_centroids, D)) \
+            .astype(np.float32)
+        self.m = m
+        self._pred = {}
+
+    @property
+    def centroids(self):
+        return self._cents
+
+    def fork(self, clone_engines=False):
+        twin = copy.copy(self)
+        twin._pred = {}
+        return twin
+
+    def warmup(self, buckets):
+        return self
+
+    def pred_states(self):
+        return dict(self._pred)
+
+    @staticmethod
+    def ids_for(q, k):
+        base = int(abs(float(np.sum(q))) * 1e4) % 100_000
+        return base + np.arange(k, dtype=np.int64)
+
+    def run(self, batch):
+        k = batch.bucket.k
+        ids = np.stack([self.ids_for(q, k) for q in batch.queries])
+        dists = np.tile(np.arange(k, dtype=np.float32), (len(ids), 1))
+        return _Result(dists, ids)
+
+
+def make_server(n_replicas=3, faults=None, ladder=None, batch=4,
+                ceilings=(16, 32), hedge=True, retry=None, **kw):
+    kw.setdefault("hb_interval", 0.005)
+    kw.setdefault("respawn_delay", 0.02)
+    kw.setdefault("max_wait", 4 * SVC)
+    return ReplicaServer(
+        _StubState(), n_replicas, ceilings, batch,
+        retry=retry or RetryPolicy(timeout_mult=2.0),
+        hedge=HedgePolicy(enabled=hedge, slack_mult=6.0),
+        ladder=ladder, faults=faults,
+        service_time_fn=lambda bucket: SVC, **kw)
+
+
+def make_trace(n, rate=200.0, seed=5, **kw):
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [req(i, arrival=float(times[i]), **kw) for i in range(n)]
+
+
+def conserved(outcomes, trace):
+    assert len(outcomes) == len(trace)
+    assert [o.request.rid for o in outcomes] == \
+        sorted(r.rid for r in trace)
+    s = sv.summarize(outcomes)
+    assert s["conserved"], s
+    return s
+
+
+# ------------------------- request validation (satellite) -------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(k=0), dict(k=-3), dict(n_probe=0), dict(n_probe=-1),
+    dict(deadline=float("nan")), dict(deadline=float("inf")),
+    dict(deadline=-0.5), dict(arrival=float("nan")),
+])
+def test_request_validates_at_construction(kw):
+    with pytest.raises(ValueError):
+        req(0, **kw)
+
+
+def test_request_degraded_flags():
+    r = req(0, k=32, n_probe=8)
+    assert not r.degraded
+    assert r.k_capped(64) is r and r.n_probe_capped(8) is r
+    capped = r.k_capped(16).n_probe_capped(4)
+    assert (capped.k, capped.n_probe) == (16, 4)
+    assert (capped.k_requested, capped.n_probe_requested) == (32, 8)
+    assert capped.degraded
+    # double-capping keeps the ORIGINAL request values
+    assert capped.k_capped(8).k_requested == 32
+
+
+# ------------------------------ fault taxonomy ------------------------------
+
+def test_fault_spec_parse_and_validation():
+    sched = flt.FaultSchedule.parse(
+        "crash@1:t=0.5; stall@2:t=1.0,dur=0.4;"
+        "slow@0:t=0.2,dur=1.0,factor=4;corrupt@3:t=0.8,dur=0.3")
+    assert [f.kind for f in sched.faults] == \
+        ["slow", "crash", "corrupt", "stall"]       # sorted by time
+    assert sched.crashed(1, now=0.6) and not sched.crashed(1, now=0.4)
+    for bad in ("crash@1", "nap@1:t=0.5", "stall@1:t=1.0",
+                "slow@0:t=0.2,dur=1.0,factor=0.5",
+                "crash@1:t=0.5,bogus=2"):
+        with pytest.raises(ValueError):
+            flt.FaultSchedule.parse(bad)
+
+
+def test_fault_seeded_is_deterministic():
+    a = flt.FaultSchedule.seeded(np.random.default_rng(3), 4, 10.0, 6)
+    b = flt.FaultSchedule.seeded(np.random.default_rng(3), 4, 10.0, 6)
+    assert a.faults == b.faults and len(a) == 6
+
+
+def test_perturb_semantics():
+    sched = flt.FaultSchedule([
+        flt.Fault(t=1.0, replica=0, kind=flt.SLOW, duration=1.0, factor=4.0),
+        flt.Fault(t=5.0, replica=0, kind=flt.STALL, duration=0.5),
+        flt.Fault(t=9.0, replica=0, kind=flt.CRASH),
+    ])
+    assert sched.perturb(0, 1.5, 0.1) == (0.4, True)     # slow: 4x
+    assert sched.perturb(0, 3.0, 0.1) == (0.1, True)     # outside window
+    dt, ok = sched.perturb(0, 4.8, 0.4)                  # stall overlaps
+    assert ok and dt == pytest.approx(0.9)
+    assert sched.perturb(0, 8.95, 0.2)[1] is False       # crash mid-service
+    assert sched.perturb(1, 8.95, 0.2) == (0.2, True)    # other replica
+    # a respawn consumes every fault at or before it
+    assert sched.perturb(0, 8.95, 0.2, since=9.0) == (0.2, True)
+    assert sched.crashed(0, 9.5, since=9.0) is False
+
+
+def test_payload_checksum_catches_corruption():
+    dists = np.arange(8, dtype=np.float32).reshape(2, 4)
+    ids = np.arange(8, dtype=np.int64).reshape(2, 4)
+    resp = ReplicaResponse(dists, ids, flt.payload_checksum(dists, ids))
+    assert resp.verified()
+    bad = ReplicaResponse(dists, flt.corrupt_payload(ids), resp.checksum)
+    assert not bad.verified()
+    assert not np.array_equal(bad.ids, ids)
+
+
+# --------------------------------- health -----------------------------------
+
+def test_health_transitions():
+    hv = hlt.HealthView(2, hb_interval=0.1, miss_factor=3.0,
+                        anomaly_factor=3.0)
+    hv.start(0.0)
+    assert hv.status(0, 0.2) == hlt.HEALTHY
+    assert hv.status(0, 0.31) == hlt.DOWN                # missed 3 beats
+    hv.beat(0, 0.5)
+    assert hv.status(0, 0.6) == hlt.HEALTHY
+    for _ in range(6):                                   # anomaly EMA -> 8x
+        hv.observe(1, 8 * SVC, baseline=SVC)
+    hv.beat(1, 0.5)
+    assert hv.status(1, 0.55) == hlt.SUSPECT
+    assert hv.healthy(0.55) == [0] and hv.alive(0.55) == [0, 1]
+    hv.reset(1, 0.6)                                     # respawn: history gone
+    assert hv.status(1, 0.65) == hlt.HEALTHY
+
+
+# ----------------------- checkpoint checksums (satellite) -------------------
+
+def _tree():
+    return {"a": np.arange(6, dtype=np.float32),
+            "b": np.ones((2, 3), np.float32)}
+
+
+def test_checkpoint_roundtrip_verifies(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    mgr.verify(1)
+    tree, step = mgr.restore(_tree())
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(tree["a"]), _tree()["a"])
+
+
+def _leaf_paths(tmp_path, step=1):
+    d = os.path.join(str(tmp_path), f"step_{step:08d}")
+    return d, sorted(p for p in os.listdir(d) if p.endswith(".npy"))
+
+
+def test_checkpoint_detects_corrupt_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    d, leaves = _leaf_paths(tmp_path)
+    with open(os.path.join(d, leaves[0]), "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(CorruptCheckpointError):
+        mgr.verify(1)
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(_tree())
+
+
+def test_checkpoint_detects_missing_leaf_and_bad_manifest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    d, leaves = _leaf_paths(tmp_path)
+    os.remove(os.path.join(d, leaves[0]))
+    with pytest.raises(CorruptCheckpointError):
+        mgr.verify(1)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(_tree())
+
+
+def test_checkpoint_legacy_manifest_passes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    d, _ = _leaf_paths(tmp_path)
+    mpath = os.path.join(d, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest.pop("checksum")
+    for meta in manifest["leaves"].values():
+        meta.pop("sha256")
+    json.dump(manifest, open(mpath, "w"))
+    mgr.verify(1)                       # nothing recorded: nothing to fail
+    tree, _ = mgr.restore(_tree())
+    np.testing.assert_allclose(np.asarray(tree["b"]), _tree()["b"])
+
+
+def test_respawn_restores_pred_state_and_falls_back_cold(tmp_path):
+    bucket = ShapeBucket(k=16, batch=4, n_probe=4)
+    pool = ReplicaPool(_StubState(), 2, (16, 32), 4,
+                       service_est=lambda b: SVC,
+                       checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    state = rerank.predictor_init(8)
+    state = state._replace(ema=state.ema + 3.5)
+    pool[0].state._pred[bucket] = state
+    pool[0].served_batches = 1
+    assert pool.maybe_checkpoint(0)
+    # intact checkpoint: the respawned replica resumes the warmed state
+    rep = pool.respawn(0, now=1.0)
+    assert rep.respawned_at == 1.0 and rep.batcher.pending() == 0
+    got = rep.state._pred[bucket]
+    np.testing.assert_allclose(np.asarray(got.ema), np.asarray(state.ema))
+    # corrupt the leaf: the next respawn must come up cold, not garbled
+    ckpt_root = os.path.join(str(tmp_path), "replica_0")
+    step_dir = os.path.join(ckpt_root, sorted(os.listdir(ckpt_root))[-1])
+    leaf = sorted(p for p in os.listdir(step_dir) if p.endswith(".npy"))[0]
+    with open(os.path.join(step_dir, leaf), "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    rep = pool.respawn(0, now=2.0)
+    assert rep.state._pred == {}
+
+
+# --------------------------------- routing ----------------------------------
+
+def test_router_affinity_prefers_warm_working_set():
+    srv = make_server(n_replicas=3)
+    srv.health.start(0.0)
+    r0 = req(0)
+    top = srv.router.top_centroids(r0.q)
+    srv.pool[2].note_probed(top, 0.0)
+    dec = srv.router.route(r0, 0.001)
+    assert (dec.replica, dec.reason) == (2, "affinity")
+    # cold working sets everywhere: deterministic least-loaded (lowest rid)
+    dec = srv.router.route(req(1, seed=99), 0.001)
+    assert dec.reason == "least-loaded" and dec.replica == 0
+
+
+def test_router_brownout_when_nothing_healthy():
+    srv = make_server(n_replicas=2, hb_interval=0.1)
+    srv.health.start(0.0)
+    for _ in range(6):                  # both replicas anomaly-flagged
+        srv.health.observe(0, 8 * SVC, SVC)
+        srv.health.observe(1, 8 * SVC, SVC)
+    dec = srv.router.route(req(0), 0.05)
+    assert dec.brownout and dec.reason == "brownout"
+    # nothing alive at all: route declines
+    srv2 = make_server(n_replicas=2, hb_interval=0.001)
+    srv2.health.start(0.0)
+    assert srv2.router.route(req(0), 10.0) is None
+
+
+# ------------------------- end-to-end fault scenarios -----------------------
+
+def test_fault_free_pool_serves_everything():
+    srv = make_server(n_replicas=3)
+    trace = make_trace(24)
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    assert s["completed"] == 24 and s["failed"] == 0 and s["shed"] == 0
+    for o in out:
+        want = _StubState.ids_for(o.request.q, o.bucket.k)[: o.k_effective]
+        got = np.sort(o.ids)
+        np.testing.assert_array_equal(got, np.sort(want))
+
+
+def test_crash_fault_recovers_without_losing_requests():
+    trace = make_trace(32)
+    horizon = max(r.arrival for r in trace)
+    faults = flt.FaultSchedule(
+        [flt.Fault(t=0.4 * horizon, replica=1, kind=flt.CRASH)])
+    srv = make_server(n_replicas=3, faults=faults)
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    assert s["completed"] == 32 and s["failed"] == 0
+    assert s["retried"] + s["hedged"] > 0        # recovery actually happened
+    assert srv.stats["respawns"] >= 1
+
+
+def test_corrupt_fault_is_detected_and_retried():
+    trace = make_trace(16, rate=400.0)
+    horizon = max(r.arrival for r in trace)
+    faults = flt.FaultSchedule([flt.Fault(
+        t=0.0, replica=0, kind=flt.CORRUPT, duration=2 * horizon + 1.0)])
+    srv = make_server(n_replicas=2, faults=faults, hedge=False)
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    assert srv.stats["corrupt_detected"] > 0
+    assert s["completed"] == 16 and s["failed"] == 0
+    # every completion came from the clean replica with TRUE ids
+    for o in out:
+        assert o.replica == 1
+        want = _StubState.ids_for(o.request.q, o.bucket.k)[: o.k_effective]
+        np.testing.assert_array_equal(np.sort(o.ids), np.sort(want))
+
+
+def test_all_replicas_dead_terminates_failed_not_hung():
+    trace = make_trace(8, rate=400.0)
+    faults = flt.FaultSchedule(
+        [flt.Fault(t=0.0, replica=r, kind=flt.CRASH) for r in range(2)])
+    srv = make_server(n_replicas=2, faults=faults, respawn_delay=999.0)
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    assert s["failed"] == 8 and s["completed"] == 0
+    assert all(o.ids is None for o in out)
+
+
+def test_degrade_ladder_caps_under_overload():
+    ladder = adm.DegradeLadder(((1.0, 16, None), (2.5, 16, 2)))
+    srv = make_server(n_replicas=2, ladder=ladder, batch=4)
+    trace = [req(i, k=32, arrival=i * 1e-6, deadline=0.5)
+             for i in range(40)]
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    degraded = [o for o in out if o.status == sv.DEGRADED]
+    assert degraded, s
+    assert all(o.request.k_requested == 32 and o.k_effective == 16
+               for o in degraded if o.request.k_requested)
+    narrowed = [o for o in degraded if o.request.n_probe_requested]
+    assert all(o.request.n_probe == 2 for o in narrowed)
+
+
+def test_stall_marks_suspect_and_brownout_still_serves():
+    trace = make_trace(24, rate=300.0)
+    horizon = max(r.arrival for r in trace)
+    # both replicas slowed 8x for the whole run: anomaly EMAs cross the
+    # 3x threshold, nothing is healthy, yet brownout keeps serving
+    faults = flt.FaultSchedule([
+        flt.Fault(t=0.0, replica=r, kind=flt.SLOW,
+                  duration=horizon + 10.0, factor=8.0)
+        for r in range(2)])
+    srv = make_server(n_replicas=2, faults=faults, respawn_delay=999.0,
+                      hb_interval=0.05)
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    assert s["completed"] == 24
+    assert srv.stats["brownouts"] > 0
+    assert any(o.status == sv.DEGRADED for o in out)     # brownout flag
+
+
+def test_hedge_fires_and_first_response_wins():
+    trace = make_trace(12, rate=50.0)
+    horizon = max(r.arrival for r in trace)
+    # replica 0 stalls hard mid-run: requests stuck there are recovered by
+    # hedges to replica 1 well before their timeouts
+    faults = flt.FaultSchedule([flt.Fault(
+        t=0.0, replica=0, kind=flt.STALL, duration=horizon + 5.0)])
+    srv = make_server(n_replicas=2, faults=faults, respawn_delay=999.0,
+                      hb_interval=0.2)    # liveness never flags: hedges only
+    out = srv.run_trace(trace)
+    s = conserved(out, trace)
+    assert s["completed"] == 12 and s["failed"] == 0
+    assert srv.stats["hedges_sent"] > 0 and srv.stats["hedges_won"] > 0
+    assert all(o.replica == 1 for o in out if o.hedged)
+
+
+# ------------------------------- determinism --------------------------------
+
+def _digest_run(seed, n_replicas, n_req, fault_seed):
+    trace = make_trace(n_req, seed=seed)
+    horizon = max(r.arrival for r in trace)
+    faults = flt.FaultSchedule.seeded(
+        np.random.default_rng(fault_seed), n_replicas, horizon, n_faults=3)
+    srv = make_server(n_replicas=n_replicas, faults=faults)
+    out = srv.run_trace(trace)
+    return out, srv, trace
+
+
+def test_seeded_fault_run_replays_byte_identical():
+    o1, s1, trace = _digest_run(5, 3, 24, 11)
+    o2, s2, _ = _digest_run(5, 3, 24, 11)
+    assert outcome_digest(o1) == outcome_digest(o2)
+    assert s1.assignments == s2.assignments
+    assert json.dumps(sv.summarize(o1), sort_keys=True) == \
+        json.dumps(sv.summarize(o2), sort_keys=True)
+    conserved(o1, trace)

@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the multi-replica serving tier (ISSUE 6).
+
+Split from test_replica.py so the deterministic unit tests stay runnable
+when ``hypothesis`` is not installed (optional dev dependency, same pattern
+as test_buffer_properties.py).
+
+Two properties over random traces x seeded fault schedules:
+
+* **router determinism** — an identical trace plus an identical
+  ``FaultSchedule`` seed replays to identical per-request outcomes AND
+  identical replica assignments (the tier's whole decision log);
+* **request conservation** — retries and hedges never duplicate or drop a
+  request id: ``summarize()`` sees every offered rid exactly once, with
+  completed + shed + failed == offered.
+"""
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import faults as flt                   # noqa: E402
+from repro.serving import server as sv                    # noqa: E402
+from repro.serving.router import outcome_digest           # noqa: E402
+from test_replica import make_server, make_trace, req     # noqa: E402
+
+
+def _run(trace_seed, fault_seed, n_replicas, n_req, n_faults):
+    trace = make_trace(n_req, seed=trace_seed)
+    horizon = max(r.arrival for r in trace)
+    faults = flt.FaultSchedule.seeded(
+        np.random.default_rng(fault_seed), n_replicas, horizon,
+        n_faults=n_faults)
+    srv = make_server(n_replicas=n_replicas, faults=faults)
+    outcomes = srv.run_trace(trace)
+    return trace, srv, outcomes
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    trace_seed=st.integers(0, 2**31 - 1),
+    fault_seed=st.integers(0, 2**31 - 1),
+    n_replicas=st.integers(2, 4),
+    n_req=st.integers(6, 28),
+    n_faults=st.integers(0, 4),
+)
+def test_property_router_determinism(trace_seed, fault_seed, n_replicas,
+                                     n_req, n_faults):
+    """Identical trace + identical fault seed => identical outcomes,
+    assignments, and summaries — byte for byte."""
+    t1, s1, o1 = _run(trace_seed, fault_seed, n_replicas, n_req, n_faults)
+    t2, s2, o2 = _run(trace_seed, fault_seed, n_replicas, n_req, n_faults)
+    assert outcome_digest(o1) == outcome_digest(o2)
+    assert s1.assignments == s2.assignments
+    assert s1.stats == s2.stats
+    assert json.dumps(sv.summarize(o1), sort_keys=True) == \
+        json.dumps(sv.summarize(o2), sort_keys=True)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    trace_seed=st.integers(0, 2**31 - 1),
+    fault_seed=st.integers(0, 2**31 - 1),
+    n_replicas=st.integers(2, 4),
+    n_req=st.integers(6, 28),
+    n_faults=st.integers(0, 5),
+)
+def test_property_retry_hedge_conserves_request_ids(
+        trace_seed, fault_seed, n_replicas, n_req, n_faults):
+    """No duplicated or dropped rids, whatever the fault schedule throws:
+    every offered request terminates exactly once and the summary's
+    conservation invariant holds."""
+    trace, srv, outcomes = _run(trace_seed, fault_seed, n_replicas, n_req,
+                                n_faults)
+    rids = [o.request.rid for o in outcomes]
+    assert rids == sorted(r.rid for r in trace)      # once each, in order
+    assert len(set(rids)) == len(trace)
+    s = sv.summarize(outcomes)
+    assert s["conserved"], s
+    assert s["completed"] + s["shed"] + s["failed"] == len(trace)
+    # results only on completions; absent (never wrong) otherwise
+    for o in outcomes:
+        if o.status in (sv.OK, sv.DEGRADED):
+            assert o.ids is not None and len(o.ids) == o.k_effective
+        else:
+            assert o.ids is None and o.dists is None
