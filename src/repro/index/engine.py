@@ -90,8 +90,8 @@ class _IvfStrategy:
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         return (np.asarray(vectors)[order],)
 
-    def stream_specs(self) -> tuple:
-        return (P("model", None, None),)
+    def stream_specs(self, axes) -> tuple:
+        return (P(axes, None, None),)
 
     def search_sharded(self, eng: "SearchEngine", qs: jax.Array,
                        pred_state=None):
@@ -132,8 +132,8 @@ class _IvfPqStrategy:
         return (np.asarray(index.codes)[order],
                 np.asarray(index.vectors)[order])
 
-    def stream_specs(self) -> tuple:
-        return (P("model", None, None), P("model", None, None))
+    def stream_specs(self, axes) -> tuple:
+        return (P(axes, None, None), P(axes, None, None))
 
     def search_sharded(self, eng: "SearchEngine", qs: jax.Array,
                        pred_state=None):
@@ -176,9 +176,9 @@ class _IvfRabitqStrategy:
         return (np.asarray(rq.codes)[order], np.asarray(rq.norm_o)[order],
                 np.asarray(rq.f_o)[order], np.asarray(index.vectors)[order])
 
-    def stream_specs(self) -> tuple:
-        return (P("model", None, None), P("model", None),
-                P("model", None), P("model", None, None))
+    def stream_specs(self, axes) -> tuple:
+        return (P(axes, None, None), P(axes, None),
+                P(axes, None), P(axes, None, None))
 
     def search_sharded(self, eng: "SearchEngine", qs: jax.Array,
                        pred_state=None):
@@ -261,9 +261,12 @@ class SearchEngine:
               mesh=None, shard_budget: int | None = None,
               pred_count: int | None = None,
               fused: bool | None = None) -> "SearchEngine":
-        """Construct a serving engine; ``mesh`` (a 1-D ("model",) device
-        mesh) switches on the sharded deployment — same code path, the
-        corpus stream is partitioned and placed at build time.
+        """Construct a serving engine; ``mesh`` switches on the sharded
+        deployment — same code path, the corpus stream is partitioned and
+        placed at build time.  A 1-D ("model",) mesh shards flat; a 2-D
+        ("host", "model") mesh shards over both axes and the searchers run
+        the hierarchical collective schedule (intra-host reduce, then the
+        inter-host round — see ``core.distributed.hier_psum``).
         ``pred_count`` overrides the predictive re-rank pool target used
         when searches are called with a ``PredictorState``; ``fused``
         pins the quantized methods' fused-scan switch (None = per-searcher
@@ -280,15 +283,16 @@ class SearchEngine:
             if strategy.kind == "ivfrabitq":
                 stream_cache = search_mod.rabitq_stream(index, layout)
         else:
-            n_shards = mesh.shape["model"]
+            axes = search_mod._shard_axes(mesh)
+            n_shards = search_mod._n_shards(mesh)
             slayout, cap_shard = ivf_mod.sharded_layout(ivf, n_shards)
             order = np.asarray(slayout.order)          # (S, F) global ids
             raw = strategy.shard_streams(index, vectors, order)
             streams = tuple(
                 jax.device_put(s, NamedSharding(mesh, spec))
-                for s, spec in zip(raw, strategy.stream_specs()))
+                for s, spec in zip(raw, strategy.stream_specs(axes)))
             slayout = jax.device_put(
-                slayout, NamedSharding(mesh, P("model", None)))
+                slayout, NamedSharding(mesh, P(axes, None)))
         return SearchEngine(index=index, layout=layout, kind=strategy.kind,
                             k=k, n_probe=n_probe, n_cand=n_cand,
                             use_bbc=use_bbc, m=m, backend=backend,

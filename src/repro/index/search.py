@@ -1233,17 +1233,47 @@ def _ivf_rabitq_fused_batch(index, stream, qs, layout, probed, lane_valid,
 # wire), the quantity ``core.distributed.collective_cost_model`` prices.
 
 SHARD_AXIS = "model"
+HOST_AXIS = "host"
 
-_LAYOUT_SPEC = P(SHARD_AXIS, None)       # every ShardedLayout leaf: (S, ...)
-_STREAM2_SPEC = P(SHARD_AXIS, None)          # (S, F) stream scalars
-_STREAM3_SPEC = P(SHARD_AXIS, None, None)    # (S, F, d) stream tensors
+
+def _shard_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the corpus stream is sharded over.  A 2-D multi-host mesh
+    (("host", "model")) selects the hierarchical collective schedule —
+    intra-host reduce over 'model' first, then the inter-host round over
+    'host' (see ``dist.hier_psum``); a flat 1-D mesh stays single-stage."""
+    if HOST_AXIS in mesh.axis_names:
+        return (HOST_AXIS, SHARD_AXIS)
+    return (SHARD_AXIS,)
+
+
+def _n_shards(mesh) -> int:
+    n = 1
+    for ax in _shard_axes(mesh):
+        n *= mesh.shape[ax]
+    return n
+
+
+def _layout_spec(axes):
+    return P(axes, None)        # every ShardedLayout leaf: (S, ...)
+
+
+def _stream2_spec(axes):
+    return P(axes, None)        # (S, F) stream scalars
+
+
+def _stream3_spec(axes):
+    return P(axes, None, None)  # (S, F, d) stream tensors
+
+
+def _mesh_sizes(mesh, axes) -> tuple:
+    """Static mesh axis sizes for ``dist.shard_rows`` call sites."""
+    return tuple(int(mesh.shape[ax]) for ax in axes)
 
 
 def _shard_budget(budget: int | None, count: int, mesh, shard_flat: int,
                   slack: float) -> int:
     if budget is None:
-        budget = dist.survivor_budget(count, mesh.shape[SHARD_AXIS],
-                                      slack=slack)
+        budget = dist.survivor_budget(count, _n_shards(mesh), slack=slack)
     return max(8, min(budget, shard_flat))
 
 
@@ -1278,18 +1308,83 @@ def _exact_at_positions(svecs: jax.Array, qs: jax.Array, pos: jax.Array,
 
 def _sharded_codebooks(layout: ivf_mod.FlatLayout, probed: jax.Array,
                        vals: jax.Array, st: int, cap_shard: int, k_cb: int,
-                       m: int):
+                       m: int, axes=(SHARD_AXIS,), sizes=()):
     """Per-query codebooks from the nearest ``st`` probed clusters, gathered
     across shards.  Each shard contributes its slice of those clusters; the
     union is exactly their full membership, so the codebook sees the same
     sample population as the single-device batched path (order differs,
     which build_codebook's top-k absorbs).  The gather is small: st * cap
-    lanes per query, the codebook-sample prefix only."""
+    lanes per query, the codebook-sample prefix only.  Returns
+    ``(codebooks, sample)`` — the gathered sample doubles as the seed for
+    the speculative compaction threshold (``_sample_spec_tau``)."""
     spos, sok = ivf_mod.tile_positions(layout, probed[:, :st], cap_shard)
     s_local = jnp.where(sok, jnp.take_along_axis(vals, spos, axis=1), INF)
-    (sample,) = dist.gather_survivors(SHARD_AXIS, s_local)
+    (sample,) = dist.gather_survivors(axes, s_local)
     k_cb = min(k_cb, sample.shape[1])
-    return jax.vmap(lambda s: rb.build_codebook(s, k=k_cb, m=m))(sample)
+
+    # ONE ascending sort serves both consumers: the codebook prefix here
+    # and the order-statistic threshold in _sample_spec_tau (which would
+    # otherwise re-sort the same sample).  The sample is replicated after
+    # the gather, so the sort + codebook build are row-split across the
+    # shard axis instead of running S identical copies.
+    def _sort_and_build(s):
+        asc = jax.lax.sort(s, dimension=1)
+        cbs = jax.vmap(lambda t: rb.build_codebook_from_topk(t, m=m))(
+            asc[:, :k_cb])
+        return cbs, asc
+
+    return dist.shard_rows(axes, sizes, _sort_and_build, sample)
+
+
+_SPEC_TAU_MARGIN = 2   # buckets of slack on the speculative threshold
+
+
+def _sample_spec_tau(cbs, sample: jax.Array, count: int,
+                     n_probed: jax.Array, m: int) -> jax.Array:
+    """Sample-derived speculative compaction threshold for the fused
+    shard-collect pass: the bucket of the rank-scaled ``count``-th smallest
+    sample value (rank = count * |sample| / |probed|, Alg. 4 line 4's
+    scaling), plus margin.  Overshoot is cheap — a few extra lanes in the
+    budget buffer; undershoot costs the bounded correction pass — so the
+    threshold leans high.  Returns m (compact the full in-range stream)
+    when the scaled rank runs off the sample: that is the degenerate
+    count >= n_probed regime, where the true tau is m as well.
+
+    ``sample`` must be sorted ascending per query (``_sharded_codebooks``
+    returns it that way — the sort is shared with the codebook build)."""
+    ns = sample.shape[1]
+    n_valid = jnp.sum(jnp.isfinite(sample), axis=1)
+    frac = n_valid.astype(jnp.float32) / jnp.maximum(
+        n_probed.astype(jnp.float32), 1.0)
+    rank = jnp.ceil(count * frac).astype(jnp.int32)
+    kth = jnp.take_along_axis(
+        sample, jnp.clip(rank - 1, 0, ns - 1)[:, None], axis=1)[:, 0]
+    tau = jax.vmap(lambda c, v: rb.bucketize(c, v[None])[0])(cbs, kth)
+    tau = jnp.minimum(tau + _SPEC_TAU_MARGIN, m).astype(jnp.int32)
+    return jnp.where(rank >= n_valid, m, tau)
+
+
+def _kth_value_mask(vals: jax.Array, kth: int) -> jax.Array:
+    """Mask of lanes at or below the per-row ``kth``-smallest value (ties
+    at the boundary value all kept).  Bisection on the int32 bit pattern —
+    monotone for the nonnegative-or-INF distances used here — so the cut
+    costs 31 compare-sum passes instead of a pool-wide ``top_k`` at
+    ``kth`` ~ pool/2, the dominant replicated cost of the post-gather
+    re-cut at large n_cand.  Value-identical to the ``top_k`` cut whenever
+    the boundary value is unique; on a tie it keeps every tied lane (the
+    ``top_k`` form kept an arbitrary pool-order subset of them, which
+    matched the batched path's own tie order only by accident)."""
+    bits = jax.lax.bitcast_convert_type(vals, jnp.int32)
+    rows = vals.shape[0]
+    lo = jnp.zeros((rows,), jnp.int32)
+    hi = jnp.full((rows,), jnp.int32(0x7F800000))   # +inf bit pattern
+    for _ in range(31):
+        mid = lo + (hi - lo) // 2
+        cnt = jnp.sum(bits <= mid[:, None], axis=1)
+        ok = cnt >= kth
+        hi = jnp.where(ok, mid, hi)
+        lo = jnp.where(ok, lo, mid + 1)
+    return bits <= hi[:, None]
 
 
 def _naive_local_topk(vals: jax.Array, layout: ivf_mod.FlatLayout, k: int):
@@ -1341,6 +1436,8 @@ def ivf_search_sharded(
         raise ValueError("predictive search requires use_bbc=True")
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
+    axes = _shard_axes(mesh)
+    sizes = _mesh_sizes(mesh, axes)
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=2.0)
 
     def body(qs, cent, sl, vecs, tau_floor=None):
@@ -1350,29 +1447,35 @@ def ivf_search_sharded(
         lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
         dists = ops.l2_exact_batch(vecs, qs, backend=backend)
         dv = jnp.where(lane_valid, dists, INF)
-        n = jax.lax.psum(jnp.sum(lane_valid, axis=1), SHARD_AXIS)
+        n = dist.hier_psum(jnp.sum(lane_valid, axis=1), axes)
         ghist = None
         if use_bbc:
             st = min(4, n_probe)
-            cbs = _sharded_codebooks(layout, probed, dv, st, cap_shard, k, m)
-            bucket, hist = ops.bucket_hist_batch(
+            cbs, sample = _sharded_codebooks(layout, probed, dv, st,
+                                             cap_shard, k, m, axes, sizes)
+            tau_spec = _sample_spec_tau(cbs, sample, k, n, m)
+            if tau_floor is not None:
+                tau_spec = jnp.maximum(tau_spec, tau_floor)
+            bucket, hist, spos, sok, scnt = ops.shard_collect_batch(
                 dv, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
-                backend=backend)
+                tau_spec, bud, backend=backend)
             pos, ok, _, _, ghist = dist.bbc_survivors_batch(
-                bucket, dv, lane_valid, hist, k, bud, SHARD_AXIS,
-                tau_floor=tau_floor)
+                bucket, dv, lane_valid, hist, k, bud, axes,
+                tau_floor=tau_floor, spec=(spos, sok, scnt, tau_spec))
             sd = jnp.where(ok, jnp.take_along_axis(dv, pos, axis=1), INF)
             gids = jnp.where(ok, layout.order[pos], -1)
         else:
             pos, ok, gids = _naive_local_topk(dv, layout, k)
             sd = jnp.where(ok, jnp.take_along_axis(dv, pos, axis=1), INF)
-        gd, gi = dist.gather_survivors(SHARD_AXIS, sd, gids)
-        d, i = _final_topk(gd, gi, k)
+        gd, gi = dist.gather_survivors(axes, sd, gids)
+        # the gathered pool is replicated: row-split the final selection
+        d, i = dist.shard_rows(axes, sizes,
+                               lambda a, b_: _final_topk(a, b_, k), gd, gi)
         if predictive:
             return d, i, n.astype(jnp.int32), ghist
         return d, i, n.astype(jnp.int32)
 
-    in_specs = (P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC)
+    in_specs = (P(), P(), _layout_spec(axes), _stream3_spec(axes))
     out_specs = (P(), P(), P())
     if predictive:
         count = max(pred_count, k) if pred_count is not None else k
@@ -1432,6 +1535,8 @@ def ivf_pq_search_sharded(
         raise ValueError("predictive search requires use_bbc=True")
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
+    axes = _shard_axes(mesh)
+    sizes = _mesh_sizes(mesh, axes)
     count = _resolve_pred_count(pred_count, k, n_cand) if predictive \
         else n_cand
     bud = _shard_budget(budget, count, mesh, shard_flat, slack=2.0)
@@ -1447,21 +1552,26 @@ def ivf_pq_search_sharded(
         ghist = None
         if use_bbc:
             st = min(4, n_probe)
-            cbs = _sharded_codebooks(layout, probed, est, st, cap_shard,
-                                     n_cand, m)
-            bucket, hist = ops.bucket_hist_batch(
+            cbs, sample = _sharded_codebooks(layout, probed, est, st,
+                                             cap_shard, n_cand, m, axes,
+                                             sizes)
+            n_probed = dist.hier_psum(jnp.sum(lane_valid, axis=1), axes)
+            tau_spec = _sample_spec_tau(cbs, sample, count, n_probed, m)
+            if tau_floor is not None:
+                tau_spec = jnp.maximum(tau_spec, tau_floor)
+            bucket, hist, spos, sok, scnt = ops.shard_collect_batch(
                 est, lane_valid, cbs.d_min, cbs.delta, cbs.ew_map, m,
-                backend=backend)
+                tau_spec, bud, backend=backend)
             pos, ok, _, _, ghist = dist.bbc_survivors_batch(
-                bucket, est, lane_valid, hist, count, bud, SHARD_AXIS,
-                tau_floor=tau_floor)
+                bucket, est, lane_valid, hist, count, bud, axes,
+                tau_floor=tau_floor, spec=(spos, sok, scnt, tau_spec))
         else:
             pos, ok, _ = _naive_local_topk(est, layout, k)
         sel_est = jnp.where(ok, jnp.take_along_axis(est, pos, axis=1), INF)
         ex = _exact_at_positions(vecs, qs, pos, ok)
         gids = jnp.where(ok, layout.order[pos], -1)
-        n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
-        ge, gx, gi = dist.gather_survivors(SHARD_AXIS, sel_est, ex, gids)
+        n_rr = dist.hier_psum(jnp.sum(ok, axis=1), axes)
+        ge, gx, gi = dist.gather_survivors(axes, sel_est, ex, gids)
         if use_bbc:
             # Replicated selection alignment with the single-device batched
             # path.  Static: the blunt n_cand-by-estimate re-cut (the full
@@ -1470,22 +1580,43 @@ def ivf_pq_search_sharded(
             # pred_count granularity; only the SAME est-priority truncation
             # the batched predictive path applies (its static top_k width)
             # remains, so both deployments select the identical pool.
+            # Either way the cut only bites when the gathered pool holds
+            # MORE than ncs finite lanes; n_rr (the psum'd survivor count)
+            # is replicated, so when every query's pool already fits the
+            # cut is provably vacuous and skipped at run time.
             if predictive:
-                n_flat_global = shard_flat * mesh.shape[SHARD_AXIS]
-                ncs = min(_pred_budget(count, n_flat_global), n_cand,
-                          ge.shape[1])
+                ncs = min(_pred_budget(count, shard_flat * _n_shards(mesh)),
+                          n_cand, ge.shape[1])
             else:
                 ncs = min(n_cand, ge.shape[1])
-            nege, osel = jax.lax.top_k(-ge, ncs)
-            keep = jnp.isfinite(-nege)
-            gx = jnp.where(keep, jnp.take_along_axis(gx, osel, axis=1), INF)
-            gi = jnp.where(keep, jnp.take_along_axis(gi, osel, axis=1), -1)
-        d, i = _final_topk(gx, gi, k)
+            fit = jnp.all(n_rr <= ncs)
+
+            # re-cut + final selection over the replicated gathered pool,
+            # row-split across the shard axis (one slice+gather covers
+            # both).  The re-cut is a tie-inclusive value threshold at the
+            # ncs-th smallest estimate (see _kth_value_mask) — lanes above
+            # it are masked, widths unchanged, so both cond branches are
+            # shape-identical without re-padding
+            def _tail(ge, gx, gi):
+                def _recut(_):
+                    keep = _kth_value_mask(ge, ncs)
+                    return (jnp.where(keep, gx, INF),
+                            jnp.where(keep, gi, -1))
+
+                cx, ci = jax.lax.cond(fit, lambda _: (gx, gi), _recut, None)
+                return _final_topk(cx, ci, k)
+
+            d, i = dist.shard_rows(axes, sizes, _tail, ge, gx, gi)
+        else:
+            d, i = dist.shard_rows(axes, sizes,
+                                   lambda a, b_: _final_topk(a, b_, k),
+                                   gx, gi)
         if predictive:
             return d, i, n_rr.astype(jnp.int32), ghist
         return d, i, n_rr.astype(jnp.int32)
 
-    in_specs = (P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM3_SPEC)
+    in_specs = (P(), P(), P(), _layout_spec(axes), _stream3_spec(axes),
+                _stream3_spec(axes))
     out_specs = (P(), P(), P())
     if predictive:
         tau_p = rerank.predict_tau(pred_state, count)
@@ -1561,6 +1692,8 @@ def ivf_rabitq_search_sharded(
         fused = True
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
+    axes = _shard_axes(mesh)
+    sizes = _mesh_sizes(mesh, axes)
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=4.0)
     count = k if pred_count is None else max(pred_count, k)
     kernelized = fused and ops.resolve_backend(backend) == "pallas"
@@ -1599,12 +1732,16 @@ def ivf_rabitq_search_sharded(
             # gathered sample = the union of the nearest st clusters' full
             # membership, as on every sharded path; identical codebooks to
             # the pre-fused formulation (build_codebook = topk + from_topk)
-            (sample,) = dist.gather_survivors(SHARD_AXIS, s_local)
-            cbs, tau_static = _rabitq_sample_plan(sample, k, count, st,
-                                                  n_probe, m)
+            (sample,) = dist.gather_survivors(axes, s_local)
+            cbs, tau_static = dist.shard_rows(
+                axes, sizes,
+                lambda s: _rabitq_sample_plan(s, k, count, st, n_probe, m),
+                sample)
+            tau_spec = tau_static
             if fused:
                 tau_inline = jnp.full((b,), tau_p, jnp.int32) \
                     if tau_p is not None else tau_static
+                tau_spec = jnp.maximum(tau_spec, tau_inline)
             if kernelized:
                 (_, lb, _, bucket_lb, _, _, hist_ub, exact_c, certified,
                  _nm) = ops.fused_rabitq_scan_batch(
@@ -1619,13 +1756,21 @@ def ivf_rabitq_search_sharded(
                 if fused:
                     certified = lane_valid & \
                         (bucket_lb <= tau_inline[:, None])
+            # speculative survivor compaction over the lb buckets (one
+            # extra compact-only pass here — the lb/ub value split means
+            # the histogram and the survivor test read different bound
+            # streams, so the fully-fused collect applies to the other
+            # methods only)
+            spos, sok_b, scnt = ops.spec_compact_batch(
+                bucket_lb, lane_valid, tau_spec, bud, backend=backend)
             pos, ok, _, _, ghist = dist.bbc_survivors_batch(
-                bucket_lb, lb, lane_valid, hist_ub, k, bud, SHARD_AXIS)
+                bucket_lb, lb, lane_valid, hist_ub, k, bud, axes,
+                spec=(spos, sok_b, scnt, tau_spec))
             if fused:
                 cert_pos, strag = dist.split_certified_survivors(
                     pos, ok, certified)
-                n_second = jax.lax.psum(
-                    jnp.sum(strag, axis=1), SHARD_AXIS).astype(jnp.int32)
+                n_second = dist.hier_psum(
+                    jnp.sum(strag, axis=1), axes).astype(jnp.int32)
                 if kernelized:
                     # certified survivors: inline exacts from the fused
                     # kernel; the on-shard gather covers only stragglers
@@ -1642,15 +1787,17 @@ def ivf_rabitq_search_sharded(
             else:
                 ex = _exact_at_positions(vecs, qs, pos, ok)
         gids = jnp.where(ok, layout.order[pos], -1)
-        n_rr = jax.lax.psum(jnp.sum(ok, axis=1), SHARD_AXIS)
-        gx, gi = dist.gather_survivors(SHARD_AXIS, ex, gids)
-        d, i = _final_topk(gx, gi, k)
+        n_rr = dist.hier_psum(jnp.sum(ok, axis=1), axes)
+        gx, gi = dist.gather_survivors(axes, ex, gids)
+        d, i = dist.shard_rows(axes, sizes,
+                               lambda a, b_: _final_topk(a, b_, k), gx, gi)
         if predictive:
             return d, i, n_rr.astype(jnp.int32), n_second, ghist
         return d, i, n_rr.astype(jnp.int32), n_second
 
-    in_specs = (P(), P(), P(), _LAYOUT_SPEC, _STREAM3_SPEC, _STREAM2_SPEC,
-                _STREAM2_SPEC, _STREAM3_SPEC)
+    in_specs = (P(), P(), P(), _layout_spec(axes), _stream3_spec(axes),
+                _stream2_spec(axes), _stream2_spec(axes),
+                _stream3_spec(axes))
     out_specs = (P(), P(), P(), P())
     if predictive:
         tau_p = rerank.predict_tau(pred_state, count) if fused else None

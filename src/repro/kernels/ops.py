@@ -31,6 +31,7 @@ from repro.kernels import pq_adc as _adc
 from repro.kernels import rabitq_est as _rq
 from repro.kernels import rabitq_fused as _rqf
 from repro.kernels import ref as _ref
+from repro.kernels import shard_collect as _sc
 from repro.kernels.platform import default_interpret, on_tpu
 
 INF = jnp.inf
@@ -303,6 +304,66 @@ def bucket_hist_batch(dists: jax.Array, valid: jax.Array, d_min: jax.Array,
         d_p, v_p, d_min_p, delta_p, ew_p, m, tile=tile,
         interpret=_interpret())
     return bucket[:b, :n], hist[:b]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "budget", "tile", "backend"))
+def shard_collect_batch(dists: jax.Array, valid: jax.Array,
+                        d_min: jax.Array, delta: jax.Array,
+                        ew_maps: jax.Array, m: int, tau_spec: jax.Array,
+                        budget: int, tile: int = _sc.TILE,
+                        backend: str | None = None):
+    """Fused shard collect: (B, n) distances -> (bucket (B, n), hist
+    (B, m+1), spec_pos (B, budget), spec_ok (B, budget), spec_count (B,)).
+
+    One stream pass computes the bucket ids and histogram AND speculatively
+    compacts the lanes at or below the provisional ``tau_spec`` into the
+    fixed ``budget`` position buffer, in stream order (``tau_spec = -1``
+    compacts nothing).  ``spec_count`` is the total matching-lane count —
+    above ``budget`` signals overflow.  Feed the buffer to
+    ``core.distributed.bbc_survivors_batch(spec=...)``.
+    """
+    backend = resolve_backend(backend)
+    tau_spec = tau_spec.astype(jnp.int32)
+    if backend == "ref":
+        return _ref.shard_collect_batch(
+            dists, valid, d_min, delta, ew_maps.astype(jnp.int32), m,
+            tau_spec, budget)
+    b, n = dists.shape
+    bp = _pad_batch(b, _sc.BQ)
+    d_p = jnp.pad(_pad_cols(dists, tile, jnp.inf), ((0, bp), (0, 0)),
+                  constant_values=jnp.inf)
+    v_p = jnp.pad(_pad_cols(valid, tile, False), ((0, bp), (0, 0)))
+    d_min_p = jnp.pad(d_min, (0, bp))
+    delta_p = jnp.pad(delta, (0, bp), constant_values=1.0)
+    ew_p = jnp.pad(ew_maps.astype(jnp.int32), ((0, bp), (0, 0)))
+    tau_p = jnp.pad(tau_spec, (0, bp), constant_values=-1)
+    bucket, hist, pos, cnt = _sc.shard_collect_batch_pallas(
+        d_p, v_p, d_min_p, delta_p, ew_p, m, tau_p, budget, tile=tile,
+        interpret=_interpret())
+    pos = pos[:b]
+    ok = pos < n                  # padded-lane sentinel (n_pad) -> invalid
+    return (bucket[:b, :n], hist[:b], jnp.where(ok, pos, n), ok, cnt[:b])
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "tile", "backend"))
+def spec_compact_batch(bucket: jax.Array, valid: jax.Array,
+                       tau_spec: jax.Array, budget: int,
+                       tile: int = _sc.TILE, backend: str | None = None):
+    """Compaction-only form of ``shard_collect_batch`` for scans whose
+    bucket ids already exist (the bound-fused RaBitQ kernel emits
+    bucket_lb itself).  Returns (spec_pos, spec_ok, spec_count)."""
+    backend = resolve_backend(backend)
+    tau_spec = tau_spec.astype(jnp.int32)
+    if backend == "ref":
+        return _ref.spec_compact_batch(bucket, valid, tau_spec, budget)
+    b, n = bucket.shape
+    b_p = _pad_cols(bucket.astype(jnp.int32), tile, 0)
+    v_p = _pad_cols(valid, tile, False)
+    pos, cnt = _sc.spec_compact_batch_pallas(
+        b_p, v_p, tau_spec, budget, tile=tile, interpret=_interpret())
+    ok = pos < n
+    return jnp.where(ok, pos, n), ok, cnt
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "backend"))

@@ -78,9 +78,93 @@ def bucketize_batch(dists: jax.Array, d_min: jax.Array, delta: jax.Array,
 
 def bucket_hist_batch(dists: jax.Array, valid: jax.Array, d_min, delta,
                       ew_maps: jax.Array, m: int):
-    """Batched Eq. 6 + histogram.  Returns (bucket (B, n), hist (B, m+1))."""
-    return jax.vmap(bucket_hist, in_axes=(0, 0, 0, 0, 0, None))(
-        dists, valid, d_min, delta, ew_maps, m)
+    """Batched Eq. 6 + histogram.  Returns (bucket (B, n), hist (B, m+1)).
+
+    The histogram comes from a sort + searchsorted (cumulative counts at
+    the bucket edges) rather than a scatter-add: XLA lowers CPU scatters
+    to a serial element loop, and on the host-emulated mesh (S shards
+    round-robin on one core) that serial cost lands S times per batch —
+    the vectorized sort is ~2x faster at bench shapes and bit-identical."""
+    bucket = bucketize_batch(dists, d_min, delta, ew_maps, m)
+    masked = jnp.where(valid, bucket, m + 1)       # invalid past every edge
+    s = jax.lax.sort(masked, dimension=1)
+    edges = jnp.arange(m + 1, dtype=jnp.int32)
+    cum = jax.vmap(lambda row: jnp.searchsorted(row, edges, side="right"))(s)
+    hist = jnp.diff(cum, prepend=0, axis=-1).astype(jnp.int32)
+    return bucket, hist
+
+
+def spec_compact_batch(bucket: jax.Array, valid: jax.Array,
+                       tau_spec: jax.Array, budget: int):
+    """Stream-order compaction of the lanes at or below ``tau_spec`` into a
+    fixed ``budget`` position buffer (the speculative half of the fused
+    shard collector).  Returns ``(pos (B, budget) int32 — sentinel n beyond
+    the fill, ok (B, budget), count (B,) int32 — the TOTAL matching-lane
+    count, possibly above ``budget``: the overflow signal)``."""
+    n = bucket.shape[1]
+    specm = valid & (bucket <= tau_spec[:, None])
+    # stream-order compaction as a sort: matching lanes keep their stream
+    # position as the key, everything else sorts past them as the sentinel
+    # n — ascending sort + prefix slice IS "first budget matches in stream
+    # order", without the serial CPU scatter
+    key = jnp.where(specm, jnp.arange(n, dtype=jnp.int32)[None, :], n)
+    pos = jax.lax.sort(key, dimension=1)[:, :budget]
+    if budget > n:    # static: pad sentinel columns up to the budget width
+        pad = jnp.full((bucket.shape[0], budget - n), n, jnp.int32)
+        pos = jnp.concatenate([pos, pad], axis=1)
+    return pos, pos < n, jnp.sum(specm, axis=1).astype(jnp.int32)
+
+
+def shard_collect_batch(dists: jax.Array, valid: jax.Array, d_min, delta,
+                        ew_maps: jax.Array, m: int, tau_spec: jax.Array,
+                        budget: int):
+    """Oracle for the fused shard-collect kernel: bucketize + histogram +
+    speculative stream-order compaction at the provisional ``tau_spec``
+    (-1 compacts nothing).  Returns ``(bucket (B, n), hist (B, m+1),
+    spec_pos (B, budget), spec_ok (B, budget), spec_count (B,))``.
+
+    One composite-key sort serves both halves instead of the two
+    full-stream sorts of ``bucket_hist_batch`` + ``spec_compact_batch``:
+    ``key = masked_bucket * n + lane`` is bucket-major with stream order
+    inside each bucket, so cumulative counts at the bucket edges give the
+    histogram and — whenever every row's match count fits ``budget`` — the
+    sorted prefix holds ALL matching lanes, and a budget-width re-sort by
+    lane index restores the exact stream-order buffer the Pallas kernel
+    emits.  A row overflowing ``budget`` truncates stream-first, which the
+    bucket-major prefix cannot reproduce, so that (rare: the survivor
+    tiers discard the buffer anyway) batch falls back to the dedicated
+    position sort under a ``cond``.  Requires ``n * (m + 2) < 2**31``."""
+    bucket = bucketize_batch(dists, d_min, delta, ew_maps, m)
+    bq, n = bucket.shape
+    lane = jnp.arange(n, dtype=jnp.int32)[None, :]
+    key = jnp.where(valid, bucket, m + 1) * n + lane
+    skeys = jax.lax.sort(key, dimension=1)
+    edges = (jnp.arange(m + 1, dtype=jnp.int32) + 1) * n
+    cum = jax.vmap(
+        lambda row: jnp.searchsorted(row, edges, side="left"))(skeys)
+    hist = jnp.diff(cum, prepend=0, axis=-1).astype(jnp.int32)
+    t = jnp.clip(tau_spec, -1, m).astype(jnp.int32)
+    csum = jnp.concatenate(
+        [jnp.zeros((bq, 1), jnp.int32), cum.astype(jnp.int32)], axis=1)
+    count = jnp.take_along_axis(csum, (t + 1)[:, None], axis=1)[:, 0]
+
+    pw = min(budget, n)
+
+    def fast(_):
+        prefix = skeys[:, :pw]
+        match = prefix < (t[:, None] + 1) * n
+        pos = jax.lax.sort(jnp.where(match, prefix % n, n), dimension=1)
+        if budget > n:
+            pad = jnp.full((bq, budget - n), n, jnp.int32)
+            pos = jnp.concatenate([pos, pad], axis=1)
+        return pos
+
+    def slow(_):
+        p, _, _ = spec_compact_batch(bucket, valid, tau_spec, budget)
+        return p
+
+    pos = jax.lax.cond(jnp.all(count <= budget), fast, slow, None)
+    return bucket, hist, pos, pos < n, count
 
 
 def l2_exact_batch(x: jax.Array, qs: jax.Array) -> jax.Array:

@@ -167,21 +167,33 @@ class MicroBatcher:
         return self.max_wait is not None and \
             now - req.arrival >= self.max_wait - self._EPS
 
-    def fire_ready(self, now: float) -> list[Batch]:
-        """Pop and assemble every batch that must fire at ``now``: full
-        lanes first, then partial lanes whose oldest request's slack no
-        longer covers one estimated service time.  Buckets are visited in
-        sorted order so firing is deterministic."""
-        out: list[Batch] = []
+    def pop_ready(self, now: float) -> list[tuple[ShapeBucket,
+                                                  tuple[Request, ...]]]:
+        """Pop every batch that must fire at ``now`` — full lanes first,
+        then partial lanes whose oldest request's slack no longer covers
+        one estimated service time — WITHOUT assembling the padded query
+        arrays.  Buckets are visited in sorted order so firing is
+        deterministic.  The double-buffered server loop assembles each
+        popped batch inside the previous batch's device window
+        (``Server._serve``'s overlap hook); ``fire_ready`` keeps the eager
+        assemble-on-pop contract for consumers that want finished batches.
+        """
+        out: list[tuple[ShapeBucket, tuple[Request, ...]]] = []
         for bucket in sorted(self._lanes):
             lane = self._lanes[bucket]
             while len(lane) >= bucket.batch:
-                out.append(assemble(bucket, lane[:bucket.batch]))
+                out.append((bucket, tuple(lane[:bucket.batch])))
                 del lane[:bucket.batch]
             if lane and self._slack_expired(bucket, lane[0], now):
-                out.append(assemble(bucket, lane))
+                out.append((bucket, tuple(lane)))
                 lane.clear()
         return out
+
+    def fire_ready(self, now: float) -> list[Batch]:
+        """``pop_ready`` with eager assembly: every due batch, padded and
+        ready for the engine."""
+        return [assemble(bucket, reqs)
+                for bucket, reqs in self.pop_ready(now)]
 
     def next_fire_time(self, now: float) -> float | None:
         """Earliest future instant a slack-expiry fire is due (None when no

@@ -70,6 +70,27 @@ SCRIPT = textwrap.dedent(
     # cost model sanity: BBC moves far fewer bytes than naive for large k
     cm = dist.collective_cost_model(k=100_000, m=128, n_shards=16)
     assert cm["ratio"] > 4.0
+
+    # shard_rows: row-split replicated work == running it replicated, for
+    # row counts both divisible by S and requiring wrap padding, and for
+    # pytree (tuple) outputs
+    for b in (16, 11, 3):
+        a = jnp.asarray(rng.standard_normal((b, 97)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((b, 97)).astype(np.float32))
+
+        def rowfn(x2, y2):
+            s = jnp.sort(x2, axis=1)
+            return s, jnp.sum(x2 * y2, axis=1)
+
+        def body3(x2, y2):
+            return dist.shard_rows("model", (n_shards,), rowfn, x2, y2)
+
+        fn3 = shard_map(body3, mesh=mesh, in_specs=(P(), P()),
+                        out_specs=(P(), P()))
+        gs, gr = jax.jit(fn3)(a, w)
+        es, er = rowfn(a, w)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(es), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(gr), np.asarray(er), rtol=1e-5)
     print("DIST_OK")
     """
 )

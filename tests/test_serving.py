@@ -273,6 +273,32 @@ def test_padding_parity_mixed_k_vs_direct_engine(corpus, pq_index):
         assert np.all(np.diff(o.dists) >= 0)
 
 
+def test_overlapped_assembly_outcomes_identical(corpus, pq_index):
+    """Double-buffered host batch assembly (``overlap=True``, the default)
+    changes WHEN the next batch's padded array is built — inside the
+    current batch's device window — never WHAT is served: with a fixed
+    service-time model both modes produce identical outcome streams
+    (status, batch composition, ids, timestamps)."""
+    _, qs = corpus
+    trace = rq.make_trace(np.random.default_rng(7), qs, (50, 120),
+                          rate=800.0, deadline=30.0, n_probe=N_PROBE)
+    runs = {}
+    for overlap in (False, True):
+        state = ServingState(pq_index, use_bbc=True)
+        srv = sv.Server(state, CEILS, BATCH,
+                        service_time_fn=lambda b: 0.01, overlap=overlap)
+        runs[overlap] = srv.run_trace(trace)
+    assert len(runs[False]) == len(runs[True])
+    for a, b in zip(runs[False], runs[True]):
+        assert a.request.rid == b.request.rid
+        assert a.status == b.status
+        assert a.bucket == b.bucket
+        assert a.t_done == b.t_done
+        assert (a.ids is None) == (b.ids is None)
+        if a.ids is not None:
+            np.testing.assert_array_equal(a.ids, b.ids)
+
+
 @pytest.mark.parametrize("kind", ["ivf", "ivfrabitq"])
 def test_parity_other_method_kinds(corpus, pq_index, kind):
     """The serving layer is method-agnostic: the same trim-vs-direct parity

@@ -119,6 +119,79 @@ PARITY_SCRIPT = textwrap.dedent(
 )
 
 
+HIER_PARITY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data import synthetic
+    from repro.index import engine, ivf as ivf_mod, search
+
+    rng = np.random.default_rng(1)
+    n, d, C = 12000, 32, 48
+    k, n_probe, B = 1500, 40, 16
+    x = jnp.asarray(synthetic.clustered(rng, n, d, n_centers=64))
+    qs = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), B))
+    key = jax.random.key(0)
+    # 2-D ("host", "model") mesh: 2 emulated hosts x 4 chips; the searchers
+    # run the hierarchical collective schedule (intra-host, then inter-host)
+    mesh2d = jax.make_mesh((2, 4), ("host", "model"))
+
+    def assert_parity(name, single_eng, sharded_eng):
+        r1 = single_eng.search(qs)
+        r2 = sharded_eng.search(qs)
+        for b in range(B):
+            s1 = set(np.asarray(r1.ids[b]).tolist()) - {-1}
+            s2 = set(np.asarray(r2.ids[b]).tolist()) - {-1}
+            assert len(s1) == k, (name, b, len(s1))
+            assert s1 == s2, (name, b, len(s1 - s2), len(s2 - s1))
+        print(name, "OK", flush=True)
+
+    ivf_index = ivf_mod.build(key, x, C)
+    assert_parity(
+        "ivf_2d",
+        engine.SearchEngine.build(ivf_index, k=k, n_probe=n_probe, vectors=x),
+        engine.SearchEngine.build(ivf_index, k=k, n_probe=n_probe, vectors=x,
+                                  mesh=mesh2d))
+
+    pq_index = search.build_pq_index(key, x, C)
+    assert_parity(
+        "ivfpq_2d",
+        engine.SearchEngine.build(pq_index, k=k, n_probe=n_probe),
+        engine.SearchEngine.build(pq_index, k=k, n_probe=n_probe,
+                                  mesh=mesh2d))
+
+    rq_index = search.build_rabitq_index(key, x, C)
+    assert_parity(
+        "ivfrabitq_2d",
+        engine.SearchEngine.build(rq_index, k=k, n_probe=n_probe),
+        engine.SearchEngine.build(rq_index, k=k, n_probe=n_probe,
+                                  mesh=mesh2d))
+    print("SHARDED_2D_PARITY_OK")
+    """
+)
+
+
+@pytest.mark.multidevice
+def test_sharded_engine_parity_2d_hierarchical_mesh():
+    """On a 2-D ("host", "model") 2x4 mesh — the hierarchical psum /
+    gather schedule — all three methods return top-k id sets identical to
+    the single-device batched engine."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", HIER_PARITY_SCRIPT], capture_output=True,
+        text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "SHARDED_2D_PARITY_OK" in out.stdout, (
+        out.stdout[-2000:] + "\n" + out.stderr[-3000:])
+
+
 @pytest.mark.multidevice
 def test_sharded_engine_parity_all_methods():
     """Acceptance: on a forced 8-device host mesh, SearchEngine(mesh=...)
