@@ -226,18 +226,20 @@ def _pq_sample_est(layout: ivf_mod.FlatLayout, probed: jax.Array,
 
 def _predictive_select(est: jax.Array, bucket: jax.Array, hist: jax.Array,
                        lane_valid: jax.Array, tau_pred: jax.Array,
-                       count: int, budget: int):
+                       count: int, budget: int, gids: jax.Array):
     """Survivor selection under the predicted threshold.
 
     Survivors are lanes with bucket <= max(tau_pred, tau_true-at-count);
-    they are picked est-priority into the static ``budget`` (ascending), so
-    the first k columns are the exact top-k of the pool.  Returns
-    (sel_est ascending (B, budget), sel_pos, sel_ok, tau_true).
+    they are picked est-priority into the static ``budget`` (ascending,
+    boundary ties broken by smallest global id — see ``_topk_est_id`` —
+    so the truncated pool matches the sharded deployment's re-cut on tied
+    estimates), and the first k columns are the exact top-k of the pool.
+    Returns (sel_est ascending (B, budget), sel_pos, sel_ok, tau_true).
     """
     tau_true, _ = jax.vmap(rb.threshold_bucket, in_axes=(0, None))(hist, count)
     tau_used = jnp.maximum(tau_pred, tau_true)
     masked = jnp.where(lane_valid & (bucket <= tau_used[:, None]), est, INF)
-    neg, sel_pos = jax.lax.top_k(-masked, budget)
+    neg, sel_pos = _topk_est_id(masked, gids, budget)
     return -neg, sel_pos, jnp.isfinite(-neg), tau_true
 
 
@@ -553,7 +555,8 @@ def ivf_search_batch(
         tau_pred = rerank.predict_tau(pred_state, count)
         budget = _pred_budget(count, layout.n_flat)
         sel_d, sel_pos, sel_ok, _ = _predictive_select(
-            dists, bucket, hist, lane_valid, tau_pred, count, budget)
+            dists, bucket, hist, lane_valid, tau_pred, count, budget,
+            layout.order)
         ids = jnp.where(sel_ok, layout.order[sel_pos], -1)
         res = SearchResult(sel_d[:, :k], ids[:, :k], n, jnp.zeros_like(n))
         return res, rerank.predictor_update(pred_state, hist)
@@ -679,11 +682,12 @@ def ivf_pq_search_batch(
         # CPU fallback: there is no VMEM-residency win to collect inline, so
         # skip the prediction machinery and select the exact top-n_cand by
         # estimate with one batched top_k (same set the bucket collection
-        # yields — bucketize is monotone in the estimate), then one exact
+        # yields — bucketize is monotone in the estimate; boundary ties
+        # break by global id to match the sharded re-cut), then one exact
         # pass over the selection.
         est2 = ops.pq_adc_batch(stream_codes, luts, backend=backend)
         est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
-        sel_est, sel_pos = jax.lax.top_k(-est, n_cand)
+        sel_est, sel_pos = _topk_est_id(est, layout.order, n_cand)
         sel_ids = jnp.where(jnp.isfinite(-sel_est), layout.order[sel_pos], -1)
         e_at_sel = jnp.full(sel_pos.shape, INF, est.dtype)
         have = jnp.zeros(sel_pos.shape, bool)
@@ -761,7 +765,7 @@ def _ivf_pq_predictive_batch(index, qs, layout, probed, lane_valid,
     # the static selection, never pull in ids the static path couldn't see.
     budget = min(_pred_budget(count, n_flat), n_cand)
     _, sel_pos, sel_ok, tau_true = _predictive_select(
-        est, bucket, hist, lane_valid, tau_pred, count, budget)
+        est, bucket, hist, lane_valid, tau_pred, count, budget, layout.order)
     sel_ids = jnp.where(sel_ok, layout.order[sel_pos], -1)
 
     # Fallback pass (undershoot correctness): survivors not covered inline —
@@ -1364,16 +1368,19 @@ def _sample_spec_tau(cbs, sample: jax.Array, count: int,
     return jnp.where(rank >= n_valid, m, tau)
 
 
-def _kth_value_mask(vals: jax.Array, kth: int) -> jax.Array:
-    """Mask of lanes at or below the per-row ``kth``-smallest value (ties
-    at the boundary value all kept).  Bisection on the int32 bit pattern —
-    monotone for the nonnegative-or-INF distances used here — so the cut
-    costs 31 compare-sum passes instead of a pool-wide ``top_k`` at
-    ``kth`` ~ pool/2, the dominant replicated cost of the post-gather
-    re-cut at large n_cand.  Value-identical to the ``top_k`` cut whenever
-    the boundary value is unique; on a tie it keeps every tied lane (the
-    ``top_k`` form kept an arbitrary pool-order subset of them, which
-    matched the batched path's own tie order only by accident)."""
+def _kth_value_mask(vals: jax.Array, ids: jax.Array, kth: int) -> jax.Array:
+    """Exact-width mask of the per-row ``kth`` smallest (value, global-id)
+    pairs: every lane strictly below the kth-smallest value, plus the
+    smallest-id lanes at the boundary value up to the remaining width.
+    Global ids are unique, so the kept SET is a deterministic function of
+    the (value, id) multiset — identical for the batched stream order and
+    the sharded gathered-pool order.  PQ estimates tie exactly whenever two
+    vectors share codes, and a tie-inclusive or pool-order-arbitrary cut
+    diverges between the two deployments exactly there.  Bisection on int32
+    bit patterns — monotone for the nonnegative-or-INF distances used here
+    — so the cut costs ~62 compare-sum passes instead of a pool-wide
+    ``top_k`` at ``kth`` ~ pool/2, the dominant replicated cost of the
+    post-gather re-cut at large n_cand."""
     bits = jax.lax.bitcast_convert_type(vals, jnp.int32)
     rows = vals.shape[0]
     lo = jnp.zeros((rows,), jnp.int32)
@@ -1384,7 +1391,94 @@ def _kth_value_mask(vals: jax.Array, kth: int) -> jax.Array:
         ok = cnt >= kth
         hi = jnp.where(ok, mid, hi)
         lo = jnp.where(ok, lo, mid + 1)
-    return bits <= hi[:, None]
+    below = bits < hi[:, None]
+    tied = bits == hi[:, None]
+    rem = (kth - jnp.sum(below, axis=1)).astype(jnp.int32)
+    # Boundary ties: keep the ``rem`` smallest global ids among the tied
+    # lanes.  Padding lanes (id -1) map to int32 max, so they lose every
+    # tie-break against a real lane; they only tie at +inf, where keeping
+    # them is harmless (masked to (INF, -1) downstream either way).
+    eid = jnp.broadcast_to(ids, vals.shape) & jnp.int32(0x7FFFFFFF)
+    tlo = jnp.zeros((rows,), jnp.int32)
+    thi = jnp.full((rows,), jnp.int32(0x7FFFFFFF))
+    for _ in range(31):
+        mid = tlo + (thi - tlo) // 2
+        cnt = jnp.sum(tied & (eid <= mid[:, None]), axis=1)
+        ok = cnt >= rem
+        thi = jnp.where(ok, mid, thi)
+        tlo = jnp.where(ok, tlo, mid + 1)
+    return below | (tied & (eid <= thi[:, None]))
+
+
+def _topk_est_id(est: jax.Array, gids: jax.Array, width: int):
+    """Top-``width``-smallest selection over ``est`` with boundary-value
+    ties broken by smallest global id — the batched counterpart of the
+    sharded paths' ``_kth_value_mask`` re-cut, so both deployments keep the
+    identical candidate SET when estimates tie at the cut (PQ estimates tie
+    whenever two vectors share codes, which makes straddles routine, not
+    rare).  The tie-free case pays exactly the plain ``top_k`` (no straddle
+    means every boundary-tied lane is already selected, making the set
+    tie-order independent); the cond-gated repair needs no value bisection
+    — the plain ``top_k`` already yields the boundary value, and the id
+    threshold among its tied lanes is one more ``top_k`` — so even
+    straddling batches pay ~3 top_k passes, not a stream-wide bisection.
+    Returns ``(neg_est, sel_pos)`` with ``jax.lax.top_k(-est, width)``
+    semantics."""
+    _, pos = jax.lax.top_k(-est, width)
+    # XLA CPU's fast TopK rewrite only fires when the sorted VALUES output
+    # feeds nothing but the slice; any second consumer (even the boundary
+    # column) demotes the whole thing to a ~4x full sort.  So the values
+    # output stays dead and the selection is re-gathered from ``est`` —
+    # bit-identical, and a gather is free next to the sort it avoids.
+    sel = jnp.take_along_axis(est, pos, axis=1)
+    neg = -sel
+    v = sel[:, -1:]                        # width-th smallest value per row
+    bits = jax.lax.bitcast_convert_type(est, jnp.int32)
+    vb = jax.lax.bitcast_convert_type(v, jnp.int32)
+    tied = bits == vb
+    tsel = sel == v                        # boundary columns in the selection
+    rem = jnp.sum(tsel, axis=1)            # boundary-tied lanes selected
+    straddle = jnp.any(jnp.isfinite(v[:, 0])
+                       & (jnp.sum(tied, axis=1) > rem))
+    # padding ids (-1) map to int32 max, losing every tie-break that
+    # matters; they only tie at +inf, where keeping them is harmless
+    eid = jnp.broadcast_to(gids, est.shape) & jnp.int32(0x7FFFFFFF)
+    # Integer top_k is pathologically slow on CPU XLA (~20x the float
+    # form), so the tie-breaks run on a float view of the ids: patterns
+    # below 0x7F800000 bitcast to nonnegative floats whose ordering IS the
+    # bit-pattern (= id) ordering.  The clamp collapses only padding (and
+    # ids beyond ~2.13B, far past the int32 stream-key bound) onto the max
+    # finite pattern — duplicates only at +inf boundaries, harmless.
+    fid = jax.lax.bitcast_convert_type(
+        jnp.minimum(eid, jnp.int32(0x7F7FFFFF)), jnp.float32)
+    cap = min(width, 256)
+
+    def _patch(_):
+        # Tied lanes all carry the SAME est value, so only positions need
+        # fixing: swap the plain top_k's arbitrary tied subset for the
+        # rem smallest-id tied lanes.  One narrow top_k finds their stream
+        # positions (ascending id), a rank-gather drops them into the
+        # boundary columns; ``neg`` is already correct as-is.
+        _, cand = jax.lax.top_k(jnp.where(tied, -fid, -INF), cap)
+        rank = jnp.cumsum(tsel, axis=1) - 1
+        patched = jnp.take_along_axis(cand, jnp.clip(rank, 0, cap - 1),
+                                      axis=1)
+        return neg, jnp.where(tsel, patched, pos)
+
+    def _exact(_):
+        # > cap boundary lanes selected in some row (pathological tie
+        # plateau): fall back to the full-width threshold construction
+        nfid, _ = jax.lax.top_k(jnp.where(tied, -fid, -INF), width)
+        thr = jnp.take_along_axis(
+            -nfid, jnp.maximum(rem - 1, 0)[:, None], axis=1)
+        keep = (bits < vb) | (tied & (fid <= thr))
+        rneg, rpos = jax.lax.top_k(jnp.where(keep, -est, -INF), width)
+        return rneg, rpos
+
+    def _repair(_):
+        return jax.lax.cond(jnp.any(rem > cap), _exact, _patch, None)
+
+    return jax.lax.cond(straddle, _repair, lambda _: (neg, pos), None)
 
 
 def _naive_local_topk(vals: jax.Array, layout: ivf_mod.FlatLayout, k: int):
@@ -1593,13 +1687,16 @@ def ivf_pq_search_sharded(
 
             # re-cut + final selection over the replicated gathered pool,
             # row-split across the shard axis (one slice+gather covers
-            # both).  The re-cut is a tie-inclusive value threshold at the
-            # ncs-th smallest estimate (see _kth_value_mask) — lanes above
-            # it are masked, widths unchanged, so both cond branches are
+            # both).  The re-cut is a value threshold at the ncs-th
+            # smallest estimate with boundary ties broken by smallest
+            # global id (see _kth_value_mask) — the exact SET the batched
+            # path's tie-broken top_k keeps, so tied PQ estimates cannot
+            # make the two deployments' pools diverge.  Lanes outside are
+            # masked, widths unchanged, so both cond branches are
             # shape-identical without re-padding
             def _tail(ge, gx, gi):
                 def _recut(_):
-                    keep = _kth_value_mask(ge, ncs)
+                    keep = _kth_value_mask(ge, gi, ncs)
                     return (jnp.where(keep, gx, INF),
                             jnp.where(keep, gi, -1))
 

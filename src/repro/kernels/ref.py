@@ -136,6 +136,11 @@ def shard_collect_batch(dists: jax.Array, valid: jax.Array, d_min, delta,
     position sort under a ``cond``.  Requires ``n * (m + 2) < 2**31``."""
     bucket = bucketize_batch(dists, d_min, delta, ew_maps, m)
     bq, n = bucket.shape
+    # key max is (m+1)*n + (n-1) < (m+2)*n; past int32 the sort silently
+    # corrupts the histogram and buffer, so fail loudly at trace time
+    assert n * (m + 2) < 2**31, (
+        f"shard_collect_batch composite key overflows int32: "
+        f"n={n}, m={m} needs n*(m+2) < 2**31")
     lane = jnp.arange(n, dtype=jnp.int32)[None, :]
     key = jnp.where(valid, bucket, m + 1) * n + lane
     skeys = jax.lax.sort(key, dimension=1)

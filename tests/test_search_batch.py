@@ -213,3 +213,54 @@ def test_engine_dispatch(pq_index, rq_index, ivf_index, corpus):
         assert r1.ids.shape == (64,)
         assert set(np.asarray(rb_.ids[0]).tolist()) \
             == set(np.asarray(r1.ids).tolist())
+
+
+# ------------------------ deterministic tie-breaking -------------------------
+
+def test_tie_broken_cut_is_order_invariant():
+    """The selection SET of the (est, global-id) cut must be a function of
+    the (value, id) multiset alone — identical for the batched stream order
+    and any sharded gathered-pool permutation — even when PQ estimates tie
+    exactly at the cut boundary (shared codes make such ties common)."""
+    rng = np.random.default_rng(3)
+    b, n, width = 4, 256, 41
+    # few distinct levels -> boundary ties guaranteed
+    vals = rng.choice(np.linspace(0.2, 2.0, 9).astype(np.float32),
+                      size=(b, n))
+    vals[:, -13:] = np.inf
+    gids = rng.permutation(np.arange(n, dtype=np.int32))
+    gids[-13:] = -1
+
+    def kept_set(v_row, i_row):
+        keep = search._kth_value_mask(jnp.asarray(v_row[None]),
+                                      jnp.asarray(i_row[None]), width)
+        sel = np.flatnonzero(np.asarray(keep)[0] & np.isfinite(v_row))
+        return set(i_row[sel].tolist())
+
+    neg, pos = search._topk_est_id(jnp.asarray(vals), jnp.asarray(gids),
+                                   width)
+    neg, pos = np.asarray(neg), np.asarray(pos)
+    for bi in range(b):
+        base = kept_set(vals[bi], gids)
+        # lexicographic (value, id) oracle
+        order = np.lexsort((gids.astype(np.int64) & 0x7FFFFFFF, vals[bi]))
+        pick = order[:width]
+        want = set(gids[pick[np.isfinite(vals[bi][pick])]].tolist())
+        assert base == want
+        # mask set survives any pool permutation (the sharded gather order)
+        perm = rng.permutation(n)
+        assert kept_set(vals[bi][perm], gids[perm]) == want
+        # batched top_k-with-repair selects the same set
+        got = set(gids[pos[bi][np.isfinite(-neg[bi])]].tolist())
+        assert got == want
+
+
+def test_topk_est_id_matches_topk_without_ties():
+    """Tie-free rows must pay (and return) exactly the plain top_k."""
+    rng = np.random.default_rng(4)
+    vals = (rng.standard_normal((5, 128)).astype(np.float32)) ** 2
+    gids = np.arange(128, dtype=np.int32)
+    neg, pos = search._topk_est_id(jnp.asarray(vals), jnp.asarray(gids), 17)
+    rneg, rpos = jax.lax.top_k(-jnp.asarray(vals), 17)
+    assert np.array_equal(np.asarray(neg), np.asarray(rneg))
+    assert np.array_equal(np.asarray(pos), np.asarray(rpos))
