@@ -1,0 +1,222 @@
+"""Constrained auto-tuning acceptance bench: solve, gate, persist.
+
+Runs the tuner (``repro.tuning``) for every method at each k in
+REPRO_AT_KS (default 5000 and the k ~= N extreme) on a held-out query set
+with exact ground truth, then gates the solved operating points on the
+ISSUE's acceptance criteria:
+
+* **recall** — the tuned point at the primary target meets
+  recall@k >= 0.95 on the held-out queries (``feasible`` from the solver);
+* **QPS** — the tuned point's measured throughput is >= the hand-tuned
+  baseline it replaces.  The baseline is the PR 1-7 default configuration
+  when that configuration is itself feasible; when it is not (k ~= N, where
+  n_probe=64 cannot reach the target), the baseline is the cheapest
+  hand-style fix — the default with n_probe raised along the grid until
+  feasible — because that is the configuration an operator would have
+  hand-picked.  With no feasible hand baseline at all the QPS comparison is
+  vacuous and reported null.  REPRO_AT_QPS_TOL (default 1.0) relaxes the
+  ratio for tiny CI-smoke sizes where wall-clock noise dominates;
+* **determinism** — with REPRO_AT_REPLAY=1 the whole sweep re-runs
+  (untimed) and the canonical point JSON must be byte-identical.
+
+Solved points are persisted to the operating-point store
+(``tuned_points.json`` / REPRO_TUNED_POINTS) unless REPRO_AT_NO_STORE=1;
+the bench JSON goes to BENCH_autotune.json (REPRO_BENCH_OUT).  Strict
+gating for CI: REPRO_AT_STRICT=1.
+
+Scale via REPRO_BENCH_N / REPRO_AT_KS / REPRO_AT_Q / REPRO_AT_SEED.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+from repro.tuning import autotune, knobs, measure
+from repro.tuning import points as tn_points
+from repro.tuning import solver
+
+KS = tuple(int(s) for s in
+           os.environ.get("REPRO_AT_KS", f"5000,{common.N}").split(","))
+N_HELDOUT = int(os.environ.get("REPRO_AT_Q", 8))
+SEED = int(os.environ.get("REPRO_AT_SEED", 0))
+TARGET = 0.95
+QPS_TOL = float(os.environ.get("REPRO_AT_QPS_TOL", 1.0))
+
+
+def _heldout_queries(x: np.ndarray) -> np.ndarray:
+    """Held-out query set: drawn from the corpus distribution with a seed
+    DISJOINT from every other bench's query seed, so tuned points are never
+    solved on the queries they are later evaluated with."""
+    rng = np.random.default_rng(10_007)
+    return np.asarray(synthetic.queries_from(rng, x, N_HELDOUT))
+
+
+def _qps_wall(sample, n_queries: int) -> float | None:
+    if sample is None or sample.wall_s is None:
+        return None
+    return round(n_queries / sample.wall_s, 2)
+
+
+def _hand_baseline(cell, samples):
+    """The hand-tuned configuration the tuned point must beat: the PR 1-7
+    default when feasible, else the default with n_probe raised along the
+    grid to the smallest feasible width (the fix an operator would
+    hand-pick); None when no hand-style configuration reaches the target."""
+    default = knobs.default_config(cell)
+    by_key = {s.knobs.key(): s for s in samples}
+    for n_probe in sorted(knobs.grid(cell)["n_probe"]):
+        if n_probe < default.n_probe:
+            continue
+        cfg = knobs.clamp(knobs.KnobConfig(
+            n_probe=n_probe, n_cand=default.n_cand,
+            pred_count=default.pred_count, fused=default.fused,
+            budget_slack=default.budget_slack), cell)
+        s = by_key.get(cfg.key())
+        if s is not None and s.recall >= TARGET:
+            return s
+    return None
+
+
+def _tune_all(index_for, x, queries, gt_by_k, *, timed: bool):
+    """One full tuner pass over every (method, k) cell; returns
+    (points, per-cell records keyed "method/k")."""
+    points, cells = [], {}
+    fp = tn_points.corpus_fingerprint(x)
+    corpus = {"kind": common.CORPUS, "fingerprint": fp}
+    for method in knobs.METHODS:
+        index, extra = index_for(method)
+        for k_req in KS:
+            k = min(k_req, common.N)
+            out = autotune.tune_cell(
+                index, k, queries, gt_by_k[k], vectors=extra.get("vectors"),
+                seed=SEED, corpus=dict(corpus), timed=timed)
+            points.extend(out["points"])
+            cells[f"{method}/{k}"] = out
+    return points, cells
+
+
+def run():
+    x_j, _ = common.corpus()
+    x = np.asarray(x_j)
+    queries = _heldout_queries(x)
+    gt_by_k = {min(k, common.N): None for k in KS}
+    for k in gt_by_k:
+        gt_by_k[k] = measure.ground_truth_ids(x, queries, k)
+
+    def index_for(method):
+        if method == "ivf":
+            return common.pq_index().ivf, {"vectors": x_j}
+        if method == "ivfpq":
+            return common.pq_index(), {}
+        return common.rq_index(), {}
+
+    points, cells = _tune_all(index_for, x, queries, gt_by_k, timed=True)
+
+    # -- determinism gate: untimed replay must serialize identically -------
+    replay_identical = None
+    if os.environ.get("REPRO_AT_REPLAY") == "1":
+        points2, _ = _tune_all(index_for, x, queries, gt_by_k, timed=False)
+        replay_identical = bool(
+            tn_points.canonical_json(points) ==
+            tn_points.canonical_json(points2))
+
+    # -- per-cell acceptance rows ------------------------------------------
+    results = []
+    for cell_key, out in cells.items():
+        method, k_s = cell_key.split("/")
+        k = int(k_s)
+        primary = next(p for p in out["points"]
+                       if p.recall_target == TARGET)
+        tuned_sample = next(s for s in out["samples"]
+                            if s.knobs.key() == primary.knobs.key())
+        baseline = _hand_baseline(out["cell"], out["samples"])
+        qps_tuned = _qps_wall(tuned_sample, len(queries))
+        qps_base = _qps_wall(baseline, len(queries))
+        qps_ok = True if qps_base is None or qps_tuned is None \
+            else bool(qps_tuned >= QPS_TOL * qps_base)
+        row = {
+            "method": method, "k": k, "recall_target": TARGET,
+            "point": primary.name, "knobs": primary.to_json()["knobs"],
+            "recall": primary.recall, "feasible": primary.feasible,
+            "cost_units": primary.cost_units,
+            "qps_tuned": qps_tuned,
+            "baseline_knobs": None if baseline is None
+            else baseline.knobs.key(),
+            "baseline_recall": None if baseline is None
+            else baseline.recall,
+            "qps_hand_baseline": qps_base,
+            "qps_ratio": None if not qps_base or not qps_tuned
+            else round(qps_tuned / qps_base, 3),
+            "qps_ok": qps_ok,
+            "default_recall": None if out["default"] is None
+            else out["default"].recall,
+            "qps_default": _qps_wall(out["default"], len(queries)),
+            "n_configs": len(out["samples"]),
+            "frontier": [{"recall": s.recall, "cost_units": s.cost_units,
+                          "knobs": s.knobs.key()}
+                         for s in out["frontier"]],
+            "cost_model": out["cost_model"],
+        }
+        results.append(row)
+        common.emit(
+            f"autotune/{method}/k{k}",
+            0.0 if tuned_sample.wall_s is None
+            else tuned_sample.wall_s / len(queries) * 1e6,
+            f"recall={primary.recall};feasible={primary.feasible};"
+            f"qps_ratio={row['qps_ratio']}")
+
+    # -- persist the store --------------------------------------------------
+    store_path = None
+    if os.environ.get("REPRO_AT_NO_STORE") != "1":
+        store = tn_points.PointStore.load()
+        for p in points:
+            store.add(p)
+        store_path = store.save()
+        print(f"# wrote {store_path}", flush=True)
+
+    recall_all = all(r["feasible"] for r in results)
+    qps_all = all(r["qps_ok"] for r in results)
+    payload = {
+        "bench": "autotune",
+        "corpus": {"n": common.N, "d": common.D, "kind": common.CORPUS,
+                   "fingerprint": tn_points.corpus_fingerprint(x)},
+        "config": {"ks": [min(k, common.N) for k in KS],
+                   "n_heldout": len(queries), "seed": SEED,
+                   "targets": list(autotune.DEFAULT_TARGETS),
+                   "qps_tol": QPS_TOL,
+                   "cost_weights": {"w_rerank": measure.W_RERANK,
+                                    "w_second": measure.W_SECOND},
+                   "lam_max": solver.LAM_MAX},
+        "store_path": store_path,
+        "results": results,
+        "replay_identical": replay_identical,
+        "acceptance": {
+            "claim": "for every method/k cell the tuned operating point "
+                     "meets recall@k >= 0.95 on held-out queries with QPS "
+                     ">= the (feasible) hand-tuned baseline it replaces; "
+                     "re-runs serialize byte-identically",
+            "recall_all_feasible": recall_all,
+            "qps_all_ok": qps_all,
+            "replay_identical": replay_identical,
+            "pass": bool(recall_all and qps_all
+                         and replay_identical is not False),
+        },
+    }
+    out_path = os.environ.get("REPRO_BENCH_OUT", "BENCH_autotune.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
+
+    if os.environ.get("REPRO_AT_STRICT") == "1" \
+            and not payload["acceptance"]["pass"]:
+        raise SystemExit("bench_autotune acceptance gate failed: "
+                         + json.dumps(payload["acceptance"], indent=2))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -123,7 +123,9 @@ def run():
     srv = sv_server.Server(dyn_state, ceilings, BATCH,
                            max_wait=deadline / 4)
     dyn_out = srv.run_trace(trace)
-    dyn_sum = sv_server.summarize(dyn_out)
+    # state= adds per-bucket operating-point attribution ("hand-tuned
+    # fallback" here: the acceptance bench pins its own knobs)
+    dyn_sum = sv_server.summarize(dyn_out, state=dyn_state)
 
     parity, n_checked = sv_server.parity_vs_direct(dyn_state, dyn_out)
     shed = [o for o in dyn_out if o.status == sv_server.SHED]

@@ -52,6 +52,8 @@ from repro.core import distributed as dist
 from repro.data import synthetic
 from repro.index import engine
 from repro.kernels import ops
+from repro.tuning import knobs as tn_knobs
+from repro.tuning import points as tn_points
 
 B = int(os.environ.get("REPRO_BENCH_B", 32))
 KS = tuple(int(s) for s in
@@ -187,11 +189,24 @@ def _stage_breakdown(mesh, b: int, k: int, shard_flat: int, bud: int,
     }
 
 
+def _resolve_cell(store, fp, method: str, k: int):
+    """(point, provenance) for this bench's (method, k) cell — tuned only
+    on an EXACT corpus-fingerprint match (a pool/budget tuned on another
+    corpus is a prior, not a contract the overlap gate should ride on);
+    anything else is the documented hand-tuned fallback."""
+    point, provenance = store.resolve(method, k, corpus_fp=fp)
+    if point is None or provenance != "tuned":
+        return None, tn_points.HAND_TUNED
+    return point, f"{point.name} (tuned)"
+
+
 def run(b: int = B, ks=KS, n_probe: int = N_PROBE):
     mesh = jax.make_mesh((N_SHARDS,), ("model",))
     x, _ = common.corpus()
     rng = np.random.default_rng(7)
     qs = jnp.asarray(synthetic.queries_from(rng, np.asarray(x), b))
+    store = tn_points.PointStore.load()
+    corpus_fp = tn_points.corpus_fingerprint(np.asarray(x))
 
     pq_index = common.pq_index()
     rq_index = common.rq_index()
@@ -208,30 +223,35 @@ def run(b: int = B, ks=KS, n_probe: int = N_PROBE):
         # anyway, and top_k needs k <= pool width.  k == N is the honest
         # large-k extreme this corpus supports.
         k = min(k_req, common.N)
-        # The re-rank pool (and hence the survivor budget, ~pool/S * slack)
-        # is sized at 4k: a pool of only 2k starved the BBC collector
-        # against the naive baseline's implicit S*k pool at k=5000/8
-        # shards (topk_overlap_bbc_vs_naive = 0.8459), while 8k overshoots
-        # the probed mass (~N * n_probe/C lanes/query) at the default
-        # config — the estimate-stage cut goes vacuous (tau = m) and every
-        # downstream stage pays a candidate width that selects nothing.
-        # 4k keeps the cut real and the overlap gate below keeps it
-        # honest (measured 0.99 at k=5000).
-        n_cand = min(4 * k, common.N)
-        # ivfpq runs a tighter slack than the 2.0 default: round-robin
-        # dealing concentrates per-shard survivor counts within a few
-        # sigma of n_cand/S (hypergeometric), and every downstream stage
-        # (exact re-rank, 3-array gather, re-cut, final select) pays the
-        # full budget WIDTH, not the survivor count — the overlap gate
-        # below catches any budget that actually starves the collector
-        method_budgets = {
-            "ivf": dist.survivor_budget(k, N_SHARDS),
-            "ivfpq": dist.survivor_budget(n_cand, N_SHARDS, slack=1.25),
-            "ivfrabitq": dist.survivor_budget(k, N_SHARDS, slack=4.0),
-        }
+        # Pools and survivor budgets resolve through the constrained tuner's
+        # operating points (tuning/: slack constants documented per method,
+        # budget <= stream clamp applied in knobs.shard_budget).  The
+        # hand-tuned fallback keeps the pre-tuner sizing: an n_cand pool of
+        # 4k (2k starved the collector at k=5000/8 shards — overlap 0.8459
+        # — and 8k overshoots the probed mass, going cut-vacuous), slacks
+        # {ivf: 2.0, ivfpq: 1.25, ivfrabitq: 4.0} over the balanced share.
+        # The overlap gate below catches any sizing that actually starves
+        # the collector, tuned or hand-picked.
+        method_pools, method_budgets, method_points = {}, {}, {}
+        for method in indexes:
+            point, provenance = _resolve_cell(store, corpus_fp, method, k)
+            n_cand = None
+            slack = None
+            if method == "ivfpq":
+                n_cand = min(4 * k, common.N)
+                if point is not None and point.knobs.n_cand is not None:
+                    n_cand = max(k, min(point.knobs.n_cand, common.N))
+            if point is not None:
+                slack = point.knobs.budget_slack
+            method_pools[method] = n_cand
+            method_budgets[method] = tn_knobs.shard_budget(
+                method, k, n_cand, N_SHARDS, slack=slack)
+            method_points[method] = provenance
         for method, (index, extra) in indexes.items():
+            n_cand = method_pools[method]
             row = {"method": method, "B": b, "k": k, "k_requested": k_req,
-                   "n_probe": n_probe, "n_shards": N_SHARDS}
+                   "n_probe": n_probe, "n_shards": N_SHARDS,
+                   "operating_point": method_points[method]}
             ids = {}
             for collector, use_bbc in (("bbc", True), ("naive", False)):
                 # the recorded budget is the executed one: passed

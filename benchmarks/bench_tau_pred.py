@@ -39,6 +39,7 @@ import numpy as np
 from benchmarks import common
 from repro.data import synthetic
 from repro.index import engine, search
+from repro.tuning import points as tn_points
 
 N = int(os.environ.get("REPRO_TP_N", 120_000))
 D = int(os.environ.get("REPRO_TP_D", 64))
@@ -100,12 +101,26 @@ def _run_regime(regime, corpus_kind, n_sub_fn, n_bits, gated, ks):
     measure = batches[-1]
     pq_desc = f"M=d/{D // n_sub_fn(D)}, {n_bits}-bit"
     results = []
+    store = tn_points.PointStore.load()
+    corpus_fp = tn_points.corpus_fingerprint(np.asarray(x))
 
     for k in ks:
         if k > N:
             continue
+        # pool knobs resolve from the tuned operating points when one was
+        # solved on THIS corpus (exact fingerprint — a pool tuned on a
+        # different distance geometry is no contract for the id-parity
+        # gate); else the documented hand-tuned fallback n_cand = min(8k, n)
+        point, provenance = store.resolve("ivfpq", k, corpus_fp=corpus_fp)
         n_cand = min(8 * k, N)
+        operating_point = tn_points.HAND_TUNED
+        if point is not None and provenance == "tuned":
+            operating_point = f"{point.name} (tuned)"
+            if point.knobs.n_cand is not None:
+                n_cand = max(k, min(point.knobs.n_cand, N))
         pred_count = int(PRED_COUNT) if PRED_COUNT else None
+        if pred_count is None and operating_point != tn_points.HAND_TUNED:
+            pred_count = point.knobs.pred_count
         eng = engine.SearchEngine.build(index, k=k, n_probe=n_probe,
                                         n_cand=n_cand, pred_count=pred_count)
         pred_count = eng.pred_count      # the engine default unless overridden
@@ -133,7 +148,7 @@ def _run_regime(regime, corpus_kind, n_sub_fn, n_bits, gated, ks):
         row = dict(
             regime=regime, corpus=corpus_kind, pq=pq_desc, gated=gated,
             k=k, n_cand=n_cand, pred_count=pred_count, B=B,
-            n_probe=n_probe,
+            n_probe=n_probe, operating_point=operating_point,
             n_reranked_static=round(nrr_static, 1),
             n_reranked_pred=round(nrr_pred, 1),
             rerank_ratio=round(ratio, 2),

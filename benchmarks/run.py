@@ -8,14 +8,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_batch_qps, bench_rabitq_fused,
-                            bench_serve, bench_tau_pred,
+    from benchmarks import (bench_autotune, bench_batch_qps,
+                            bench_rabitq_fused, bench_serve, bench_tau_pred,
                             exp2_relative_error, exp3_collector_latency,
                             exp4_threshold_gap, exp5_rerank,
                             exp6_m_sensitivity, fig1_qps_recall,
                             fig2_breakdown, perf_cell_c, table4_ncand,
                             table6_memory)
     suites = [
+        # first: later suites resolve knobs from the store this one writes
+        ("bench_autotune", bench_autotune.run),
         ("fig1_qps_recall", fig1_qps_recall.run),
         ("bench_batch_qps", bench_batch_qps.run),
         ("bench_tau_pred", bench_tau_pred.run),

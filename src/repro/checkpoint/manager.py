@@ -67,6 +67,8 @@ def _path_str(p) -> str:
 
 
 class CheckpointManager:
+    """Checksummed checkpoint save/restore with bounded retention and optional
+    async writes."""
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
         self.keep_last = keep_last

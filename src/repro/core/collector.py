@@ -33,6 +33,7 @@ INF = jnp.inf
 
 
 class StreamInput(NamedTuple):
+    """Tiled candidate stream: estimated distances, global ids, validity."""
     dists: jax.Array  # (n_tiles, tile) estimated distances
     ids: jax.Array    # (n_tiles, tile) int32 global ids
     valid: jax.Array  # (n_tiles, tile) bool

@@ -115,6 +115,8 @@ def shard_rows(axis_name, sizes: tuple, fn, *arrays: jax.Array):
 
 
 class ShardedSearchResult(NamedTuple):
+    """Sharded BBC collective output: global top-k, tau, per-shard survivor
+    counts."""
     topk_dists: jax.Array
     topk_ids: jax.Array
     tau: jax.Array

@@ -144,6 +144,7 @@ def minimal_rerank(
 # --------------------------------------------------------------------------
 
 class GreedyRerankResult(NamedTuple):
+    """Greedy bounded re-rank (Alg. 3) output with work accounting."""
     topk_dists: jax.Array
     topk_ids: jax.Array
     n_reranked: jax.Array        # how many exact evaluations were spent
@@ -152,6 +153,8 @@ class GreedyRerankResult(NamedTuple):
 
 
 class GreedyRerankPlan(NamedTuple):
+    """Bound-derived re-rank plan: the uncertain band plus certain-in/out
+    masks."""
     rerank_mask: jax.Array       # uncertain band: exact distances needed
     certain_in: jax.Array        # provably inside the top-k (skip)
     certain_out: jax.Array       # provably outside (skip)
@@ -360,6 +363,8 @@ def threshold_only_rerank_mask(
 # --------------------------------------------------------------------------
 
 class EarlyRerankPlan(NamedTuple):
+    """Early re-rank (Alg. 4) plan: predicted threshold bucket + bucket
+    codebook."""
     tau_pred: jax.Array      # predicted threshold bucket (int32)
     cb: rb.BucketCodebook
 

@@ -42,6 +42,7 @@ def _bigram_cdf(seed: int, vocab: int) -> np.ndarray:
 
 
 class TokenPipeline:
+    """Seeded synthetic token stream with per-host sharding and prefetch."""
     def __init__(self, vocab: int, global_batch: int, seq_len: int,
                  seed: int = 0, host_index: int = 0, n_hosts: int = 1,
                  buffer_size: int = 2):

@@ -221,6 +221,8 @@ def resolve_kind(index, vectors=None) -> str:
 
 @dataclass(frozen=True)
 class SearchEngine:
+    """Serving facade: index + layout + static knobs; dispatches single,
+    batched, and mesh-sharded searches."""
     index: Any                       # IVFIndex | PQIndex | RabitqIndex
     layout: ivf_mod.FlatLayout | None   # single-device stream (None if sharded)
     kind: str                        # "ivf" | "ivfpq" | "ivfrabitq"
@@ -239,6 +241,10 @@ class SearchEngine:
     # layout-ordered candidate stream materialized at build time (RaBitQ
     # single-device; saves the per-call 30+ MB stream gathers)
     stream_cache: Any = None
+    # provenance of the knob values: the tuned OperatingPoint name that
+    # filled caller-unset knobs at build time, or None for hand defaults
+    # ("hand-tuned fallback" in serving summaries)
+    tuned_from: str | None = None
     # -- sharded deployment state (all None/unused on a single device) ------
     mesh: Any = None
     slayout: ivf_mod.ShardedLayout | None = None
@@ -255,12 +261,14 @@ class SearchEngine:
         return self.mesh is not None
 
     @staticmethod
-    def build(index, k: int, n_probe: int, n_cand: int | None = None,
+    def build(index, k: int, n_probe: int | None = None,
+              n_cand: int | None = None,
               use_bbc: bool = True, m: int = 128,
               backend: str | None = None, vectors=None,
               mesh=None, shard_budget: int | None = None,
               pred_count: int | None = None,
-              fused: bool | None = None) -> "SearchEngine":
+              fused: bool | None = None, tuned=None,
+              recall_target: float = 0.95) -> "SearchEngine":
         """Construct a serving engine; ``mesh`` switches on the sharded
         deployment — same code path, the corpus stream is partitioned and
         placed at build time.  A 1-D ("model",) mesh shards flat; a 2-D
@@ -270,8 +278,42 @@ class SearchEngine:
         ``pred_count`` overrides the predictive re-rank pool target used
         when searches are called with a ``PredictorState``; ``fused``
         pins the quantized methods' fused-scan switch (None = per-searcher
-        default)."""
+        default).
+
+        ``tuned`` resolves knobs the caller left unset from the
+        constrained-tuner's persisted operating points instead of the hand
+        defaults: a ``tuning.points.PointStore`` (nearest (method, k,
+        recall_target) cell is resolved) or a single
+        ``tuning.points.OperatingPoint``.  Explicit arguments always win
+        over the tuned point; ``tuned_from`` on the built engine records
+        which point (and resolution provenance) filled the gaps.  Without
+        ``tuned``, ``n_probe`` is required."""
         strategy, ivf = _resolve_strategy(index, vectors)
+        tuned_from = None
+        if tuned is not None:
+            from repro.tuning import points as tuning_points
+            if isinstance(tuned, tuning_points.OperatingPoint):
+                point, provenance = tuned, "tuned"
+            else:
+                point, provenance = tuned.resolve(
+                    strategy.kind, k, target=recall_target)
+            if point is not None:
+                cfg = point.knobs
+                n_probe = cfg.n_probe if n_probe is None else n_probe
+                if n_cand is None and cfg.n_cand is not None:
+                    # re-clamp pools tuned at a different k-bucket onto
+                    # THIS k (pool-subset contract: k <= pred <= n_cand)
+                    n_cand = max(cfg.n_cand, k)
+                if pred_count is None and cfg.pred_count is not None:
+                    pred_count = max(cfg.pred_count, k)
+                    if n_cand is not None:
+                        pred_count = min(pred_count, n_cand)
+                fused = cfg.fused if fused is None else fused
+                tuned_from = f"{point.name} ({provenance})"
+        if n_probe is None:
+            raise ValueError(
+                "n_probe is required when no tuned operating point "
+                "covers this (method, k) cell")
         if n_cand is None:
             n_cand = strategy.default_n_cand(index, k)
         if pred_count is None:
@@ -298,6 +340,7 @@ class SearchEngine:
                             use_bbc=use_bbc, m=m, backend=backend,
                             vectors=vectors, pred_count=pred_count,
                             fused=fused, stream_cache=stream_cache,
+                            tuned_from=tuned_from,
                             mesh=mesh, slayout=slayout, cap_shard=cap_shard,
                             shard_budget=shard_budget, shard_streams=streams)
 

@@ -17,6 +17,7 @@ from repro.index import kmeans as km
 
 
 class IVFIndex(NamedTuple):
+    """Coarse IVF index: centroids plus the padded per-cluster member table."""
     centroids: jax.Array      # (n_clusters, d)
     member_ids: jax.Array     # (n_clusters, cap) int32, -1 padded
     member_valid: jax.Array   # (n_clusters, cap) bool

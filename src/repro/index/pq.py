@@ -17,6 +17,7 @@ from repro.index import kmeans as km
 
 
 class PQCodebook(NamedTuple):
+    """Product-quantization codebook: per-subspace centroid tables."""
     centroids: jax.Array  # (M, 2^B, dsub)
 
     @property

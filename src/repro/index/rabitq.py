@@ -30,6 +30,8 @@ import jax.numpy as jnp
 
 
 class RabitqCodes(NamedTuple):
+    """RaBitQ sign codes with the rotation and per-vector correction factors.
+    """
     rot: jax.Array      # (d, d) orthonormal
     codes: jax.Array    # (n, d) int8 in {-1, +1}
     norm_o: jax.Array   # (n,)
@@ -58,6 +60,7 @@ def encode(key: jax.Array, x: jax.Array, centroids: jax.Array,
 
 
 class QueryFactors(NamedTuple):
+    """Per-query RaBitQ factors: rotated unit residual and its norm."""
     v: jax.Array        # (d,) rotated unit residual
     norm_q: jax.Array   # scalar
 

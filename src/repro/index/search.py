@@ -57,6 +57,7 @@ INF = jnp.inf
 
 
 class PQIndex(NamedTuple):
+    """IVF + PQ index bundle (codes plus fp32 vectors for exact re-rank)."""
     ivf: ivf_mod.IVFIndex
     pq: pq_mod.PQCodebook
     codes: jax.Array    # (N, M) uint8
@@ -64,6 +65,8 @@ class PQIndex(NamedTuple):
 
 
 class RabitqIndex(NamedTuple):
+    """IVF + RaBitQ index bundle (codes plus fp32 vectors for exact re-rank).
+    """
     ivf: ivf_mod.IVFIndex
     rq: rq_mod.RabitqCodes
     vectors: jax.Array
@@ -95,6 +98,7 @@ def rabitq_stream(index: RabitqIndex,
 
 
 class SearchResult(NamedTuple):
+    """Top-k result with per-query re-rank work counters."""
     dists: jax.Array
     ids: jax.Array
     n_reranked: jax.Array       # exact distance computations spent

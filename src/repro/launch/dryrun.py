@@ -1,10 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-# ^ MUST precede any jax import: jax locks the device count on first init.
-# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this builds the full-size config, abstract params/optimizer
@@ -17,6 +10,13 @@ consumed by EXPERIMENTS.md §Dry-run / §Roofline.
       --shape train_4k [--multi-pod] [--out out.json]
   PYTHONPATH=src python -m repro.launch.dryrun --all  # full 40-cell matrix
 """
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
 import argparse
 import json
 import sys

@@ -122,10 +122,10 @@ def sample_indices(n: int, n_sample: int) -> np.ndarray:
                                  min(n_sample, n)).round().astype(int))
 
 
-def run_static(args, x, qs, index, mesh, n_probe):
+def run_static(args, x, qs, index, mesh, n_probe, tuned=None):
     """The fixed-batch synchronous loop (PR 1-3 behavior)."""
-    n_cand = min(8 * args.k, args.n)
     tau_pred_on = args.tau_pred == "on"
+    operating_point = "flat"
     if args.method == "flat":
         if tau_pred_on:
             raise SystemExit("--tau-pred does not apply to the flat baseline")
@@ -134,10 +134,16 @@ def run_static(args, x, qs, index, mesh, n_probe):
     else:
         if tau_pred_on and not args.method.endswith("bbc"):
             raise SystemExit("--tau-pred on requires a *_bbc method")
+        # n_cand / pred_count resolve from the tuned operating point when
+        # one covers this (method, k) cell, else the engine's hand
+        # defaults (the pre-tuner formula n_cand = min(8k, n))
         eng = engine.SearchEngine.build(
-            index, k=args.k, n_probe=n_probe, n_cand=n_cand,
+            index, k=args.k, n_probe=n_probe,
             use_bbc=args.method.endswith("bbc"), mesh=mesh,
-            pred_count=args.pred_count)
+            pred_count=args.pred_count, tuned=tuned,
+            recall_target=args.recall_target)
+        from repro.tuning.points import HAND_TUNED
+        operating_point = eng.tuned_from or HAND_TUNED
         if tau_pred_on:
             # the serving loop owns the predictor: every request folds its
             # batch histogram into the EMA that thresholds the next request
@@ -183,6 +189,7 @@ def run_static(args, x, qs, index, mesh, n_probe):
         "mode": "static",
         "method": args.method, "k": args.k, "batch": batch,
         "shards": args.shards, "tau_pred": args.tau_pred,
+        "operating_point": operating_point,
         "qps": round(qps, 2),
         "ms_per_query": round(1e3 * dt / args.queries, 2),
         "ms_per_batch": round(1e3 * dt / len(batches), 2),
@@ -191,7 +198,7 @@ def run_static(args, x, qs, index, mesh, n_probe):
     return 0
 
 
-def run_async(args, x, qs, index, mesh, n_probe):
+def run_async(args, x, qs, index, mesh, n_probe, tuned=None):
     """The micro-batching event loop over ``repro.serving``."""
     from repro.serving import batcher as sv_batcher
     from repro.serving import queue as sv_queue
@@ -214,11 +221,12 @@ def run_async(args, x, qs, index, mesh, n_probe):
     trace = sv_queue.make_trace(
         np.random.default_rng(args.seed), np.asarray(qs), ks,
         rate=args.rate, deadline=deadline, n_probe=n_probe,
-        pattern=args.trace, burst=args.burst)
+        pattern=args.trace, burst=args.burst,
+        recall_target=args.recall_target)
 
     state = ServingState(
         index, use_bbc=args.method.endswith("bbc"), tau_pred=tau_pred_on,
-        mesh=mesh, pred_count=args.pred_count)
+        mesh=mesh, pred_count=args.pred_count, tuned=tuned)
     max_wait = args.max_wait_ms / 1e3 if args.max_wait_ms else None
     if args.replicas > 1:
         # fault-tolerant multi-replica tier: affinity routing, health
@@ -228,9 +236,18 @@ def run_async(args, x, qs, index, mesh, n_probe):
                                           RetryPolicy, outcome_digest)
         schedule = sv_faults.FaultSchedule.parse(args.faults) \
             if args.faults else None
+        # degrade along the tuned recall/cost frontier when the store
+        # covers this method (lower recall target + narrower n_probe per
+        # rung), instead of the blunt hand-picked k-caps
+        ladder = None
+        if tuned is not None:
+            from repro.serving.admission import DegradeLadder
+            frontier = tuned.frontier(state.kind, max(ks))
+            if len(frontier) > 1:
+                ladder = DegradeLadder.from_frontier(frontier)
         srv = ReplicaServer(
             state, args.replicas, ceilings=sv_batcher.k_ceilings(ks),
-            batch=args.max_batch,
+            batch=args.max_batch, ladder=ladder,
             retry=RetryPolicy(max_retries=args.retries),
             hedge=HedgePolicy(enabled=args.hedge == "on"),
             faults=schedule, max_wait=max_wait,
@@ -251,7 +268,9 @@ def run_async(args, x, qs, index, mesh, n_probe):
           f"{time.monotonic()-t0:.1f}s", flush=True)
     outcomes = srv.run_trace(trace, warmup=False)
 
-    summary = sv_server.summarize(outcomes)
+    # per-bucket knob provenance rides in the summary line: which tuned
+    # operating point (or "hand-tuned fallback") served each bucket
+    summary = sv_server.summarize(outcomes, state=state)
     if args.replicas > 1:
         summary.update({
             "replicas": args.replicas, "faults": args.faults or "",
@@ -319,6 +338,19 @@ def main():
                          "4-bit PQ) a shallow pool trades recall for fewer "
                          "re-ranks; raise toward n_cand to recover the "
                          "static selection")
+    ap.add_argument("--tuned", type=str, default="auto",
+                    help="tuned operating points: 'auto' loads "
+                         "tuned_points.json from the repo root (or "
+                         "$REPRO_TUNED_POINTS) when present, 'off' forces "
+                         "the hand-tuned defaults, anything else is a path "
+                         "to a point-store JSON.  The summary line reports "
+                         "which operating point (or 'hand-tuned fallback') "
+                         "served each bucket")
+    ap.add_argument("--recall-target", type=float, default=0.95,
+                    help="recall@k requirement: selects the tuned operating "
+                         "point knobs resolve from, and stamps async-mode "
+                         "requests (the DegradeLadder may lower it under "
+                         "overload, serving a cheaper tuned point)")
     # -- async-mode knobs ---------------------------------------------------
     ap.add_argument("--trace", choices=("poisson", "bursty"),
                     default="poisson", help="[async] arrival pattern")
@@ -388,8 +420,16 @@ def main():
     index = build_index(args.method, x, args.n_clusters)
     print(f"[serve] index built in {time.monotonic()-t0:.1f}s", flush=True)
 
+    tuned = None
+    if args.tuned != "off":
+        from repro.tuning.points import PointStore
+        store = PointStore.load(None if args.tuned == "auto" else args.tuned)
+        if args.tuned != "auto" and not len(store):
+            raise SystemExit(f"--tuned {args.tuned}: no usable point store")
+        tuned = store if len(store) else None
+
     run = run_async if args.mode == "async" else run_static
-    sys.exit(run(args, x, qs, index, mesh, n_probe))
+    sys.exit(run(args, x, qs, index, mesh, n_probe, tuned=tuned))
 
 
 if __name__ == "__main__":

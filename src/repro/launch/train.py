@@ -34,6 +34,7 @@ from repro.optim import adamw
 
 
 class WatchdogTimeout(RuntimeError):
+    """Raised when a training step exceeds the watchdog budget."""
     pass
 
 

@@ -154,6 +154,7 @@ FLASH_THRESHOLD = 2048  # use chunked attention at/above this sequence length
 
 @dataclasses.dataclass(frozen=True)
 class AttnDims:
+    """Attention dimensions (heads, kv heads, head width, rope base)."""
     d_model: int
     n_heads: int
     n_kv: int

@@ -19,6 +19,7 @@ from repro.optim import adamw
 
 
 class Model(NamedTuple):
+    """Bundled model callables: init, loss, forward, prefill, decode."""
     cfg: LMConfig
     init: Any
     loss_fn: Any

@@ -28,6 +28,7 @@ Params = dict
 
 @dataclasses.dataclass(frozen=True)
 class SSMDims:
+    """State-space (Mamba-style) block dimensions."""
     d_model: int
     d_state: int = 128
     expand: int = 2

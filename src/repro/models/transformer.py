@@ -30,6 +30,7 @@ Params = dict
 
 @dataclasses.dataclass(frozen=True)
 class LMConfig:
+    """Language-model architecture configuration."""
     arch_id: str
     family: str                 # dense | moe | ssm | hybrid | vlm | encdec
     n_layers: int

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 
 class AdamWState(NamedTuple):
+    """AdamW optimizer state (step plus first/second moments)."""
     step: jax.Array
     m: Any
     v: Any
@@ -21,6 +22,7 @@ class AdamWState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW + cosine-schedule hyper-parameters."""
     lr_peak: float = 3e-4
     warmup_steps: int = 100
     total_steps: int = 10_000

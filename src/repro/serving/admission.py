@@ -80,39 +80,83 @@ class DegradeLadder:
 
     When healthy capacity drops below offered load (replicas crashed or
     stalled), the serving tier should slide DOWN the recall/latency frontier
-    — smaller k, narrower n_probe — before it starts shedding: fewer/coarser
-    results beat no results.  Each rung is ``(load_factor, k_cap,
-    n_probe_cap)``: at ``offered/capacity >= load_factor`` requests are
-    capped to ``k_cap`` / ``n_probe_cap`` (None leaves that knob alone).
-    Rungs are evaluated in ascending ``load_factor`` order and the LAST
-    matching rung wins, so deeper overload degrades harder.  ``caps`` is a
-    pure function of its argument — seeded fault runs replay identically.
+    — lower recall target, narrower n_probe, smaller k — before it starts
+    shedding: fewer/coarser results beat no results.  Each rung is
+    ``(load_factor, k_cap, n_probe_cap, recall_target)``: at
+    ``offered/capacity >= load_factor`` requests are capped to ``k_cap`` /
+    ``n_probe_cap`` and their recall target lowered to ``recall_target``
+    (None leaves that knob alone; legacy 3-tuple rungs without the recall
+    entry are accepted and padded).  Rungs are evaluated in ascending
+    ``load_factor`` order and the LAST matching rung wins, so deeper
+    overload degrades harder.  ``caps`` is a pure function of its argument
+    — seeded fault runs replay identically.
+
+    ``from_frontier`` builds the rungs from a TUNED recall/cost frontier
+    (``tuning.solver.pareto_frontier`` / ``PointStore.frontier``) instead of
+    hand-picked caps: each successively deeper overload rung serves the next
+    cheaper tuned operating point, so degradation walks the measured
+    recall/latency frontier rather than blunt k-capping.
     """
 
-    rungs: tuple = ()       # ((load_factor, k_cap | None, np_cap | None), …)
+    rungs: tuple = ()   # ((load_factor, k_cap, np_cap[, recall_target]), …)
 
     def __post_init__(self):
-        thresholds = [r[0] for r in self.rungs]
+        norm = tuple((r[0],) + tuple(r[1:]) + (None,) * (4 - len(r))
+                     for r in self.rungs)
+        if any(len(r) != 4 for r in norm):
+            raise ValueError(f"rungs must be 3- or 4-tuples: {self.rungs}")
+        object.__setattr__(self, "rungs", norm)
+        thresholds = [r[0] for r in norm]
         if thresholds != sorted(thresholds):
             raise ValueError(
                 f"ladder rungs must be sorted by load factor: {self.rungs}")
+        targets = [r[3] for r in norm if r[3] is not None]
+        if targets != sorted(targets, reverse=True):
+            raise ValueError(
+                "rung recall targets must be non-increasing (deeper "
+                f"overload must not promise MORE recall): {self.rungs}")
 
-    def caps(self, load_factor: float) -> tuple[int | None, int | None]:
-        k_cap = n_probe_cap = None
-        for threshold, kc, nc in self.rungs:
+    @classmethod
+    def from_frontier(cls, frontier,
+                      load_factors=(1.0, 1.5, 2.5)) -> "DegradeLadder":
+        """Ladder whose rungs are tuned operating points.
+
+        ``frontier`` is a recall-descending sequence of
+        ``tuning.points.OperatingPoint`` (``PointStore.frontier``); the
+        FIRST entry is the healthy serving point (no rung — it is what
+        un-degraded traffic already gets) and each subsequent, cheaper
+        point becomes one rung at the next ``load_factors`` threshold:
+        the rung caps ``n_probe`` to the point's tuned routing width and
+        lowers the request's recall target to the point's target.  ``k``
+        is left alone — the tuned frontier trades recall for work at
+        constant k, which is exactly the "degrade along the frontier, not
+        blunt k-capping" contract.
+        """
+        rungs = []
+        for lf, point in zip(load_factors, list(frontier)[1:]):
+            rungs.append((float(lf), None, int(point.knobs.n_probe),
+                          float(point.recall_target)))
+        return cls(tuple(rungs))
+
+    def caps(self, load_factor: float
+             ) -> tuple[int | None, int | None, float | None]:
+        k_cap = n_probe_cap = recall_target = None
+        for threshold, kc, nc, rt in self.rungs:
             if load_factor >= threshold:
-                k_cap, n_probe_cap = kc, nc
-        return k_cap, n_probe_cap
+                k_cap, n_probe_cap, recall_target = kc, nc, rt
+        return k_cap, n_probe_cap, recall_target
 
     def apply(self, req: Request, load_factor: float) -> Request:
         """Cap a request per the rung the current overload selects; the
-        capped request is flagged (``k_requested`` / ``n_probe_requested``)
-        so its outcome reports ``degraded``."""
-        k_cap, n_probe_cap = self.caps(load_factor)
+        capped request is flagged (``k_requested`` / ``n_probe_requested``
+        / ``recall_requested``) so its outcome reports ``degraded``."""
+        k_cap, n_probe_cap, recall_target = self.caps(load_factor)
         if k_cap is not None:
             req = req.k_capped(k_cap)
         if n_probe_cap is not None:
             req = req.n_probe_capped(n_probe_cap)
+        if recall_target is not None:
+            req = req.recall_capped(recall_target)
         return req
 
 

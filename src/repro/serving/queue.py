@@ -31,6 +31,12 @@ class Request:
     ``deadline`` is absolute, on the same clock as ``arrival``.  When
     admission k-caps a request, ``k`` holds the effective value the engine
     will run and ``k_requested`` records what the caller asked for.
+
+    ``recall_target`` is the caller's recall@k requirement (None = no
+    stated requirement) — the DegradeLadder may lower it under overload
+    (``recall_capped``), serving the request at a cheaper tuned operating
+    point; ``recall_requested`` records the original so the outcome is
+    flagged ``degraded``, never silently coarser.
     """
 
     rid: int
@@ -41,6 +47,8 @@ class Request:
     deadline: float
     k_requested: int | None = None
     n_probe_requested: int | None = None
+    recall_target: float | None = None
+    recall_requested: float | None = None
 
     def __post_init__(self):
         # Validate at construction, not only at queue intake: the fault /
@@ -63,6 +71,12 @@ class Request:
             raise ValueError(
                 f"request {self.rid}: arrival must be finite, "
                 f"got {self.arrival}")
+        for label, rt in (("recall_target", self.recall_target),
+                          ("recall_requested", self.recall_requested)):
+            if rt is not None and not (np.isfinite(rt) and 0.0 < rt <= 1.0):
+                raise ValueError(
+                    f"request {self.rid}: {label} must be in (0, 1], "
+                    f"got {rt}")
 
     def slack(self, now: float) -> float:
         return self.deadline - now
@@ -83,10 +97,24 @@ class Request:
                        n_probe_requested=self.n_probe_requested
                        or self.n_probe)
 
+    def recall_capped(self, target: float) -> "Request":
+        """Lower the recall target (the tuned-frontier brownout rung);
+        ``recall_requested`` records the original.  A request with no
+        stated target adopts the rung's target un-flagged — it never
+        promised more."""
+        if self.recall_target is None:
+            return replace(self, recall_target=target)
+        if target >= self.recall_target:
+            return self
+        return replace(self, recall_target=target,
+                       recall_requested=self.recall_requested
+                       or self.recall_target)
+
     @property
     def degraded(self) -> bool:
         return self.k_requested is not None or \
-            self.n_probe_requested is not None
+            self.n_probe_requested is not None or \
+            self.recall_requested is not None
 
 
 class RequestQueue:
@@ -171,10 +199,13 @@ def make_trace(
     pattern: str = "poisson",
     burst: int = 8,
     t0: float = 0.0,
+    recall_target: float | None = None,
 ) -> list[Request]:
     """Seeded synthetic request trace: one request per query row, arrival
     times from ``pattern``, per-request ``k`` sampled uniformly from ``ks``
-    (heterogeneous-k traffic when a sequence is given)."""
+    (heterogeneous-k traffic when a sequence is given); ``recall_target``
+    stamps every request with the caller's recall requirement (the knob
+    the DegradeLadder trades away under overload)."""
     n = len(queries)
     if pattern == "poisson":
         times = poisson_arrivals(rng, n, rate, t0)
@@ -187,6 +218,7 @@ def make_trace(
     return [
         Request(rid=i, q=np.asarray(queries[i]), k=int(ks_arr[i]),
                 n_probe=n_probe, arrival=float(times[i]),
-                deadline=float(times[i]) + deadline)
+                deadline=float(times[i]) + deadline,
+                recall_target=recall_target)
         for i in range(n)
     ]

@@ -277,7 +277,8 @@ class ReplicaServer:
         grid plus the degrade ladder's capped variants (a rung engaging
         mid-run must not trigger a cold engine build on the timeline)."""
         ceilings = self.pool[0].batcher.ceilings
-        caps = [(None, None)] + [(kc, nc) for _, kc, nc in self.ladder.rungs]
+        caps = [(None, None)] + [(kc, nc)
+                                 for _, kc, nc, _rt in self.ladder.rungs]
         buckets = set()
         for r in trace:
             for k_cap, np_cap in caps:

@@ -301,14 +301,17 @@ def _pctiles(sub: Sequence[Outcome]) -> dict:
     }
 
 
-def summarize(outcomes: Sequence[Outcome]) -> dict:
+def summarize(outcomes: Sequence[Outcome],
+              state: ServingState | None = None) -> dict:
     """Aggregate serving metrics for reporting: QPS over the busy span,
     latency percentiles over completed requests, per-outcome counts AND
     per-outcome p50/p99 (``by_status``), shed / degrade / failure /
     deadline-met rates, retry / hedge counts, and the request-conservation
     check (completed + shed + failed == offered — zero unaccounted
     requests).  Degraded and retried traffic is surfaced explicitly instead
-    of hiding inside the headline QPS number."""
+    of hiding inside the headline QPS number.  Passing the ``state`` that
+    served the trace adds ``operating_points``: which tuned operating point
+    (or "hand-tuned fallback") each engine bucket's knobs came from."""
     n = len(outcomes)
     done = [o for o in outcomes if o.completed]
     shed = [o for o in outcomes if o.status == SHED]
@@ -316,7 +319,10 @@ def summarize(outcomes: Sequence[Outcome]) -> dict:
     t0 = min(o.request.arrival for o in outcomes) if outcomes else 0.0
     t1 = max(o.t_done for o in done) if done else t0
     span = max(t1 - t0, 1e-9)
+    extra = {"operating_points": state.operating_points()} \
+        if state is not None else {}
     return {
+        **extra,
         "requests": n,
         "completed": len(done),
         "shed": len(shed),

@@ -47,7 +47,7 @@ class ServingState:
                  tau_pred: bool = False, vectors=None, mesh=None,
                  backend: str | None = None, m: int = 128,
                  shard_budget: int | None = None,
-                 pred_count: int | None = None):
+                 pred_count: int | None = None, tuned=None):
         self.index = index
         self.use_bbc = use_bbc
         self.tau_pred = bool(tau_pred)
@@ -57,6 +57,10 @@ class ServingState:
         self.m = m
         self.shard_budget = shard_budget
         self.pred_count = pred_count
+        # tuned operating points (a tuning.points.PointStore) every
+        # per-bucket engine build resolves its unset knobs from;
+        # operating_points() reports the resulting per-bucket attribution
+        self.tuned = tuned
         self.kind = engine_mod.resolve_kind(index, vectors)
         if self.tau_pred and not use_bbc:
             raise ValueError("tau_pred serving requires use_bbc=True")
@@ -77,9 +81,18 @@ class ServingState:
                 self.index, k=bucket.k, n_probe=bucket.n_probe,
                 use_bbc=self.use_bbc, m=self.m, backend=self.backend,
                 vectors=self.vectors, mesh=self.mesh,
-                shard_budget=self.shard_budget, pred_count=self.pred_count)
+                shard_budget=self.shard_budget, pred_count=self.pred_count,
+                tuned=self.tuned)
             self._engines[key] = eng
         return eng
+
+    def operating_points(self) -> dict[str, str]:
+        """Per-bucket knob provenance for serving summaries: which tuned
+        operating point (or the hand-tuned fallback) each built engine's
+        knobs came from, keyed ``"k<k>/np<n_probe>"``."""
+        from repro.tuning.points import HAND_TUNED
+        return {f"k{k}/np{np_}": eng.tuned_from or HAND_TUNED
+                for (k, np_), eng in sorted(self._engines.items())}
 
     def warmup(self, buckets) -> "ServingState":
         """AOT-precompile every bucket's serving shapes: engine builds plus

@@ -1,0 +1,33 @@
+"""Constrained auto-tuning of the engine's knob surface.
+
+The engine carries ~8 coupled knobs (``n_probe``, ``n_cand``,
+``pred_count``, survivor-budget slack, the shape-bucket ladder, the
+straggler gather budget, the fused-scan switch) that PRs 1-7 sized by hand
+per benchmark.  This package replaces the hand sizing with the frame of
+"Automating Nearest Neighbor Search Configuration with Constrained
+Optimization" (PAPERS.md): **maximize QPS subject to recall@k >= target**,
+solved per (method, k-bucket, corpus) over measured recall/latency samples
+on a held-out query set with exact ground truth, via Lagrangian relaxation
+with a deterministic seeded coordinate-descent search.
+
+Layout:
+
+* ``knobs``   — the knob surface: types, valid ranges, coupling invariants
+  (max(tau_pred, tau_true), budget <= stream, pool-subset), default grids.
+* ``measure`` — one knob configuration -> a :class:`measure.Sample`
+  (deterministic recall + work features, plus wall-clock diagnostics).
+* ``solver``  — pure functions from samples to a chosen configuration
+  (Lagrangian bisection + seeded coordinate descent); same samples + seed
+  -> byte-identical choice, so tuner runs replay.
+* ``points``  — versioned :class:`points.OperatingPoint` records persisted
+  as JSON with corpus/commit fingerprints, and the :class:`points.PointStore`
+  consumers resolve against (``SearchEngine.build(..., tuned=...)``, the
+  serving tier's ``DegradeLadder.from_frontier``, the benches).
+* ``autotune``— the orchestration: sweep a cell, solve for each recall
+  target, emit points.
+
+See ``docs/tuning.md`` for the documented operating-point contract.
+"""
+from repro.tuning import autotune, knobs, measure, points, solver  # noqa: F401
+from repro.tuning.knobs import KnobConfig  # noqa: F401
+from repro.tuning.points import OperatingPoint, PointStore  # noqa: F401

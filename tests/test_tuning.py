@@ -1,0 +1,288 @@
+"""Constrained auto-tuner: solver, knob invariants, store, serving wiring.
+
+The solver is tested on SYNTHETIC knob surfaces with known optima (no
+engine builds — purity and constraint satisfaction are properties of the
+solver alone); the store round-trips and nearest-cell resolution are
+tested on hand-built points; the serving wiring (engine ``tuned=``,
+``DegradeLadder.from_frontier``, ``Request.recall_target``) is tested
+against a real tiny index so the cross-bucket clamps are exercised on the
+production path.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.index import engine, search
+from repro.serving import admission as adm
+from repro.serving import queue as rq
+from repro.tuning import knobs as kn
+from repro.tuning import measure, solver
+from repro.tuning import points as tp
+
+CELL = kn.Cell(method="ivfpq", k=100, n=10_000, d=32, n_clusters=64)
+
+
+def sample(n_probe, recall, cost, n_cand=None, pred_count=None):
+    cfg = kn.clamp(kn.KnobConfig(n_probe=n_probe, n_cand=n_cand,
+                                 pred_count=pred_count), CELL)
+    return measure.Sample(knobs=cfg, recall=recall, scanned=cost,
+                          reranked=0.0, second_pass=0.0, cost_units=cost)
+
+
+def synthetic_surface():
+    """A knob surface with a KNOWN optimum: recall and cost both rise with
+    n_probe; the cheapest configuration meeting recall >= 0.95 is
+    n_probe=32 (recall 0.96) — n_probe=16 is cheaper but infeasible."""
+    return [sample(4, 0.40, 100.0), sample(8, 0.70, 200.0),
+            sample(16, 0.90, 400.0), sample(32, 0.96, 800.0),
+            sample(64, 0.99, 1600.0)]
+
+
+# ------------------------------- solver -------------------------------------
+
+def test_solve_known_optimum():
+    best, lam, feasible = solver.solve(synthetic_surface(), target=0.95)
+    assert feasible and best.knobs.n_probe == 32
+    # the multiplier is large enough that the hinge dominates raw QPS
+    assert solver.score(best, lam, 0.95) >= solver.score(
+        sample(16, 0.90, 400.0), lam, 0.95)
+
+
+def test_solve_constraint_binds_not_overshoots():
+    # with a lower target the cheaper configuration wins: the solver
+    # tracks the constraint, it does not just maximize recall
+    best, _, feasible = solver.solve(synthetic_surface(), target=0.85)
+    assert feasible and best.knobs.n_probe == 16
+
+
+def test_solve_infeasible_surfaces_flagged():
+    surface = [sample(4, 0.40, 100.0), sample(8, 0.70, 200.0)]
+    best, _, feasible = solver.solve(surface, target=0.95)
+    assert not feasible
+    assert best.knobs.n_probe == 8      # highest-recall fallback
+
+
+def test_coordinate_descent_deterministic_and_finds_optimum():
+    grid = {"n_probe": (4, 8, 16, 32, 64)}
+    # recall/cost depend on n_probe only (the solver may carry the default
+    # config's other knobs through the sweep)
+    by_np = {s.knobs.n_probe: s for s in synthetic_surface()}
+    calls = []
+
+    def evaluate(cfg):
+        calls.append(cfg.key())
+        ref = by_np[cfg.n_probe]
+        return measure.Sample(knobs=cfg, recall=ref.recall,
+                              scanned=ref.scanned, reranked=0.0,
+                              second_pass=0.0, cost_units=ref.cost_units)
+
+    memos = []
+    samples = None
+    for _ in range(2):
+        memo = solver.coordinate_descent(evaluate, CELL, grid,
+                                         target=0.95, seed=7)
+        memos.append(sorted(memo))
+        samples = list(memo.values())
+    assert memos[0] == memos[1]          # same seed -> same sweep
+    assert len(set(calls)) == len(calls) // 2   # memoized within each run
+    best, _, feasible = solver.solve(samples, target=0.95)
+    assert feasible and best.knobs.n_probe == 32
+
+
+def test_pareto_frontier_monotone():
+    front = solver.pareto_frontier(synthetic_surface())
+    recalls = [s.recall for s in front]
+    costs = [s.cost_units for s in front]
+    assert recalls == sorted(recalls, reverse=True)
+    assert costs == sorted(costs, reverse=True)   # cheaper as recall drops
+
+
+# ----------------------------- knob invariants ------------------------------
+
+def test_clamp_enforces_pool_subset_and_ranges():
+    cfg = kn.clamp(kn.KnobConfig(n_probe=10_000, n_cand=50,
+                                 pred_count=7), CELL)
+    assert cfg.n_probe == CELL.n_clusters
+    assert cfg.n_cand == CELL.k                    # raised to k
+    assert CELL.k <= cfg.pred_count <= cfg.n_cand  # pool-subset contract
+    assert kn.clamp(cfg, CELL) == cfg              # idempotent
+
+
+def test_clamp_drops_ncand_off_pq():
+    cell = kn.Cell(method="ivf", k=100, n=10_000, d=32, n_clusters=64)
+    assert kn.clamp(kn.KnobConfig(n_probe=8, n_cand=500), cell).n_cand is None
+
+
+def test_shard_budget_stream_clamp():
+    b = kn.shard_budget("ivfrabitq", 5000, None, 8)
+    assert b >= 1 and b % 128 == 0
+    assert kn.shard_budget("ivfrabitq", 5000, None, 8, stream_len=37) == 37
+    with pytest.raises(KeyError):
+        kn.shard_budget("nope", 100, None, 8)
+
+
+# ------------------------------- point store --------------------------------
+
+def point(method="ivfpq", k=100, target=0.95, n_probe=16, recall=0.97,
+          cost=100.0, feasible=True, fp="aaa"):
+    return tp.OperatingPoint(
+        method=method, k=k, recall_target=target,
+        knobs=kn.KnobConfig(n_probe=n_probe), recall=recall,
+        cost_units=cost, feasible=feasible,
+        corpus={"kind": "clustered", "fingerprint": fp}, commit="test",
+        seed=0)
+
+
+def test_point_json_roundtrip_and_canonical(tmp_path):
+    pts = [point(k=100), point(k=100, target=0.8, n_probe=8, cost=50.0),
+           point(method="ivf", k=200)]
+    assert tp.OperatingPoint.from_json(
+        json.loads(json.dumps(pts[0].to_json()))) == pts[0]
+    # canonical form is order-independent -> byte-identical replay
+    assert tp.canonical_json(pts) == tp.canonical_json(pts[::-1])
+    store = tp.PointStore(pts)
+    path = store.save(str(tmp_path / "points.json"))
+    # save writes canonical (sorted) order; the point set round-trips
+    assert tp.canonical_json(tp.PointStore.load(path).points) == \
+        tp.canonical_json(store.points)
+    assert tp.PointStore.load(str(tmp_path / "missing.json")).points == []
+
+
+def test_store_add_replaces_cell():
+    store = tp.PointStore([point(n_probe=16)])
+    store.add(point(n_probe=32))
+    assert len(store) == 1 and store.points[0].knobs.n_probe == 32
+
+
+def test_resolve_nearest_cell_rules():
+    store = tp.PointStore([
+        point(k=100), point(k=100, target=0.8, n_probe=8, cost=50.0),
+        point(k=1000, n_probe=32), point(method="ivf", k=100, n_probe=24)])
+    p, prov = store.resolve("ivfpq", 100, corpus_fp="aaa")
+    assert (p.k, p.recall_target, prov) == (100, 0.95, "tuned")
+    # smallest covering k wins; larger-k points are recall-safe below
+    p, _ = store.resolve("ivfpq", 500)
+    assert p.k == 1000
+    # above every tuned k: the largest available
+    p, _ = store.resolve("ivfpq", 5000)
+    assert p.k == 1000
+    # highest target <= requested
+    p, _ = store.resolve("ivfpq", 100, target=0.9)
+    assert p.recall_target == 0.8
+    # method never crosses
+    p, _ = store.resolve("ivf", 100)
+    assert p.method == "ivf" and p.knobs.n_probe == 24
+    assert store.resolve("ivfrabitq", 100) == (None, tp.HAND_TUNED)
+    # corpus mismatch is flagged, not hidden
+    _, prov = store.resolve("ivfpq", 100, corpus_fp="zzz")
+    assert prov == "tuned-nearest"
+
+
+def test_resolve_prefers_feasible():
+    store = tp.PointStore([point(n_probe=4, cost=10.0, recall=0.5,
+                                 feasible=False),
+                           point(n_probe=32, cost=800.0)])
+    p, _ = store.resolve("ivfpq", 100)
+    assert p.feasible and p.knobs.n_probe == 32
+
+
+# ------------------------- degrade ladder / frontier ------------------------
+
+def frontier_points():
+    return [point(target=0.95, n_probe=32, recall=0.96, cost=800.0),
+            point(target=0.9, n_probe=16, recall=0.90, cost=400.0),
+            point(target=0.8, n_probe=8, recall=0.82, cost=200.0)]
+
+
+def test_ladder_from_frontier_walks_monotonically():
+    ladder = adm.DegradeLadder.from_frontier(frontier_points())
+    assert len(ladder.rungs) == 2          # first point = healthy serving
+    caps = [ladder.caps(lf) for lf in (0.5, 1.0, 1.5, 2.0, 5.0)]
+    np_caps = [c[1] for c in caps if c[1] is not None]
+    targets = [c[2] for c in caps if c[2] is not None]
+    # deeper overload -> never wider routing, never higher recall promise
+    assert np_caps == sorted(np_caps, reverse=True)
+    assert targets == sorted(targets, reverse=True)
+    assert ladder.caps(0.5) == (None, None, None)      # healthy: untouched
+    assert ladder.caps(9.9) == (None, 8, 0.8)          # deepest rung
+
+
+def test_ladder_rejects_increasing_recall_targets():
+    with pytest.raises(ValueError):
+        adm.DegradeLadder(((1.0, None, 16, 0.8), (2.0, None, 8, 0.9)))
+    # legacy 3-tuple rungs still work, padded with no recall entry
+    ladder = adm.DegradeLadder(((1.0, 500, 16),))
+    assert ladder.caps(1.0) == (500, 16, None)
+
+
+def test_ladder_apply_flags_degradation():
+    ladder = adm.DegradeLadder.from_frontier(frontier_points())
+    r = rq.Request(rid=0, q=np.zeros(4, np.float32), k=50, n_probe=64,
+                   arrival=0.0, deadline=1.0, recall_target=0.95)
+    out = ladder.apply(r, load_factor=5.0)
+    assert out.n_probe == 8 and out.recall_target == 0.8
+    assert out.recall_requested == 0.95 and out.degraded
+    # idempotent at the same rung: already at the floor
+    again = ladder.apply(out, load_factor=5.0)
+    assert again.recall_requested == 0.95
+
+
+def test_request_recall_target_validation():
+    def mk(**kw):
+        return rq.Request(rid=0, q=np.zeros(4, np.float32), k=10,
+                          n_probe=4, arrival=0.0, deadline=1.0, **kw)
+    for bad in (0.0, -0.1, 1.5, float("nan"), float("inf")):
+        with pytest.raises(ValueError):
+            mk(recall_target=bad)
+        with pytest.raises(ValueError):
+            mk(recall_requested=bad)
+    r = mk()                               # no stated target
+    r2 = r.recall_capped(0.9)
+    assert r2.recall_target == 0.9 and not r2.degraded   # adopts un-flagged
+    r3 = mk(recall_target=0.9).recall_capped(0.95)
+    assert r3.recall_target == 0.9 and not r3.degraded   # never raises
+
+
+# --------------------------- engine tuned= wiring ---------------------------
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(synthetic.clustered(rng, 2000, 16, n_centers=16))
+    return search.build_pq_index(jax.random.key(0), x, 16, n_iter=3)
+
+
+def test_engine_build_resolves_tuned_point(tiny_index):
+    p = tp.OperatingPoint(
+        method="ivfpq", k=100, recall_target=0.95,
+        knobs=kn.KnobConfig(n_probe=12, n_cand=400, pred_count=150),
+        recall=0.97, cost_units=10.0, feasible=True)
+    eng = engine.SearchEngine.build(tiny_index, k=100, tuned=p)
+    assert (eng.n_probe, eng.n_cand, eng.pred_count) == (12, 400, 150)
+    assert eng.tuned_from and "(tuned)" in eng.tuned_from
+    # explicit knobs always beat the point
+    eng = engine.SearchEngine.build(tiny_index, k=100, n_probe=5, tuned=p)
+    assert eng.n_probe == 5
+
+
+def test_engine_build_reclamps_cross_bucket(tiny_index):
+    # a point tuned at k=100 serving a k=600 bucket must re-clamp its
+    # pools to [k, n] or the top-k could not be filled (pool-subset)
+    p = tp.OperatingPoint(
+        method="ivfpq", k=100, recall_target=0.95,
+        knobs=kn.KnobConfig(n_probe=12, n_cand=400, pred_count=150),
+        recall=0.97, cost_units=10.0, feasible=True)
+    eng = engine.SearchEngine.build(tiny_index, k=600,
+                                    tuned=tp.PointStore([p]))
+    assert eng.n_cand >= 600 and eng.pred_count >= 600
+    assert eng.pred_count <= eng.n_cand
+
+
+def test_engine_build_requires_n_probe_without_point(tiny_index):
+    with pytest.raises(ValueError, match="n_probe is required"):
+        engine.SearchEngine.build(tiny_index, k=100,
+                                  tuned=tp.PointStore())
