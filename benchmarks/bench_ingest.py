@@ -1,0 +1,256 @@
+"""Streaming ingest under live queries: churn, merge, and rolling swaps.
+
+Acceptance benchmark for ``src/repro/ingest``: one corpus is churned (10%
+inserted, 5% deleted — deletes biased toward the queries' true neighbors
+so staleness would be visible) while queries run continuously, then merged
+back into a frozen index through the checkpointed background job — with an
+injected crash + resume on the first attempt — and finally rolled through
+a replica pool with ``ReplicaPool.rolling_swap``.
+
+Acceptance (ISSUE 9), written to ``BENCH_ingest.json``:
+
+* recall@k vs exact ground truth on the LIVE corpus >= 0.95 at every
+  churn checkpoint (mid-churn, post-crash, post-merge);
+* deleted ids NEVER appear in any result, at any point;
+* the mid-merge crash recovers via the checksummed checkpoint
+  (``resume_merge``) with no index corruption;
+* the rolling engine swap completes with zero shed/failed requests
+  (every batch offered mid-roll completes with full shape);
+* post-merge QPS >= 0.9x a frozen index built directly on the same
+  live corpus.
+
+Scale via REPRO_IN_N / REPRO_IN_D / REPRO_IN_K / REPRO_IN_NQ /
+REPRO_IN_NPROBE / REPRO_IN_REPLICAS; CI runs a tiny configuration with
+REPRO_IN_STRICT=1.  Output path override: REPRO_BENCH_OUT.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+from repro.index import search
+from repro.ingest import IngestConfig, MergeCrash, MergeJob, MutableIndex, \
+    resume_merge
+from repro.kernels import ops
+
+N = int(os.environ.get("REPRO_IN_N", 40_000))
+D = int(os.environ.get("REPRO_IN_D", 48))
+K = int(os.environ.get("REPRO_IN_K", 5000))
+NQ = int(os.environ.get("REPRO_IN_NQ", 16))
+N_PROBE = int(os.environ.get("REPRO_IN_NPROBE", 0)) or None
+N_REPLICAS = int(os.environ.get("REPRO_IN_REPLICAS", 3))
+INSERT_FRAC = 0.10
+DELETE_FRAC = 0.05
+RECALL_FLOOR = 0.95
+QPS_RATIO_FLOOR = 0.90
+
+
+def _exact_live_gt(mi: MutableIndex, qs: np.ndarray, k: int) -> np.ndarray:
+    x, ids = mi.live_corpus()
+    d = np.asarray(ops.l2_exact_batch(jnp.asarray(x), jnp.asarray(qs)))
+    pos = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return ids[pos]
+
+
+def _recall_and_leaks(mi: MutableIndex, qs: np.ndarray, k: int,
+                      dead: set) -> tuple[float, int]:
+    want = _exact_live_gt(mi, qs, k)
+    got = np.asarray(mi.search(qs).ids)
+    hits = sum(len(set(got[bi].tolist()) & set(want[bi].tolist()))
+               for bi in range(len(qs)))
+    leaks = len(set(got.reshape(-1).tolist()) & dead)
+    return hits / want.size, leaks
+
+
+def _qps(search_fn, qs, repeats: int = 3) -> float:
+    search_fn(qs)                                  # warm/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = search_fn(qs)
+        if hasattr(res, "dists") and hasattr(res.dists, "block_until_ready"):
+            jax.block_until_ready((res.dists, res.ids))
+        ts.append(time.perf_counter() - t0)
+    return len(qs) / float(np.median(ts))
+
+
+def run():  # noqa: D103
+    rng = np.random.default_rng(42)
+    x = common.make_corpus(rng, N, D).astype(np.float32)
+    qs = np.asarray(synthetic.queries_from(
+        np.random.default_rng(7), x, NQ)).astype(np.float32)
+    n_clusters = max(int(np.sqrt(N)), 16)
+    # large-k default: covering the top-5000 of a 40k corpus takes a wide
+    # probe (0.4 * n_clusters holds recall ~0.99 at the committed size)
+    n_probe = N_PROBE or max(8, (2 * n_clusters) // 5)
+    k = min(K, N // 2)
+    kw = dict(k=k, n_probe=n_probe, n_clusters=n_clusters,
+              n_cand=min(8 * k, N), seed=0,
+              config=IngestConfig(segment_capacity=1024))
+    mi = MutableIndex(x, "ivfpq", **kw)
+
+    dead: set[int] = set()
+    checkpoints = {}
+
+    # ---- churn under live queries: 10% inserted, 5% deleted ---------------
+    n_ins = int(N * INSERT_FRAC)
+    n_del = int(N * DELETE_FRAC)
+    ins_vecs = np.concatenate([
+        qs + rng.normal(scale=1e-3, size=(NQ, D)).astype(np.float32),
+        common.make_corpus(np.random.default_rng(13), n_ins - NQ, D,
+                           ).astype(np.float32)])
+    new_ids = np.concatenate([
+        mi.insert(chunk) for chunk in np.array_split(ins_vecs, 4)])
+    # deletes biased toward the queries' current neighbors (staleness
+    # would surface immediately) + uniform base rows + a few delta rows
+    first = np.asarray(mi.search(qs).ids)
+    doomed = np.unique(first[:, :25].reshape(-1))
+    doomed = doomed[doomed >= 0]
+    uniform = rng.choice(N, size=n_del, replace=False)
+    victims = np.unique(np.concatenate(
+        [doomed, uniform, new_ids[:NQ // 2]]))[:n_del]
+    mi.delete(victims)
+    dead |= set(int(i) for i in victims)
+    rec, leaks = _recall_and_leaks(mi, qs, k, dead)
+    checkpoints["mid_churn"] = {"recall": round(rec, 4), "leaks": leaks,
+                                "churn": round(mi.churn_fraction(), 4)}
+    common.emit("ingest/mid_churn", 0.0,
+                f"recall={rec:.4f};leaks={leaks}")
+
+    # ---- crash-injected merge + checksummed recovery ----------------------
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        crashed = False
+        try:
+            MergeJob(mi, ckpt_dir).run(crash_after_checkpoint=True)
+        except MergeCrash:
+            crashed = True
+        rec_c, leaks_c = _recall_and_leaks(mi, qs, k, dead)   # mid-crash
+        # deletes landing DURING the merge window must not resurrect
+        mid_merge_victim = int(np.asarray(mi.search(qs).ids)[0, 0])
+        mi.delete(np.array([mid_merge_victim]))
+        dead.add(mid_merge_victim)
+        resume_merge(mi, ckpt_dir)
+    rec_m, leaks_m = _recall_and_leaks(mi, qs, k, dead)
+    recovered = bool(crashed and mi.generation == 1 and not mi.segments)
+    checkpoints["post_crash_serving"] = {"recall": round(rec_c, 4),
+                                         "leaks": leaks_c}
+    checkpoints["post_merge"] = {"recall": round(rec_m, 4),
+                                 "leaks": leaks_m,
+                                 "generation": mi.generation}
+    common.emit("ingest/post_merge", 0.0,
+                f"recall={rec_m:.4f};leaks={leaks_m};recovered={recovered}")
+
+    # ---- post-merge QPS vs a frozen index on the same live corpus ---------
+    live_x, _ = mi.live_corpus()
+    frozen_idx = search.build_pq_index(
+        jax.random.key(0), jnp.asarray(live_x), n_clusters, n_iter=6)
+    from repro.index import engine as engine_mod
+    frozen = engine_mod.SearchEngine.build(
+        frozen_idx, k=k, n_probe=n_probe, n_cand=min(8 * k, len(live_x)),
+        use_bbc=True)
+    jq = jnp.asarray(qs)
+    qps_frozen = _qps(lambda q: frozen.search_batch(q), jq)
+    qps_merged = _qps(lambda q: mi.search(np.asarray(q)), jq)
+    qps_ratio = qps_merged / max(qps_frozen, 1e-9)
+    common.emit("ingest/qps", 1e6 * NQ / max(qps_merged, 1e-9),
+                f"qps_merged={qps_merged:.1f};qps_frozen={qps_frozen:.1f}")
+
+    # ---- zero-shed rolling swap through the replica pool ------------------
+    from repro.serving.batcher import Batch, Request, ShapeBucket
+    from repro.serving.replica import ReplicaPool
+    from repro.serving.state import ServingState
+    base = ServingState(frozen_idx, use_bbc=True, tau_pred=True, m=128,
+                        pred_count=min(8 * k, len(live_x)),
+                        vectors=None)
+    bucket = ShapeBucket(k=k, batch=NQ, n_probe=n_probe)
+    pool = ReplicaPool(base, N_REPLICAS, [k], NQ,
+                       service_est=lambda b: 1e-3)
+    pool.base.warmup([bucket])
+
+    def mk_batch():
+        reqs = tuple(Request(rid=i, q=qs[i], k=k, n_probe=n_probe,
+                             arrival=0.0, deadline=1.0)
+                     for i in range(NQ))
+        return Batch(bucket=bucket, requests=reqs, queries=jq)
+
+    for r in pool:                                 # warm the predictors
+        r.state.run(mk_batch())
+    next_idx = search.build_pq_index(
+        jax.random.key(1), jnp.asarray(live_x), n_clusters, n_iter=6)
+    offered = completed = failed = 0
+
+    def on_step(_rid):
+        nonlocal offered, completed, failed
+        for r in pool:
+            offered += NQ
+            try:
+                res = r.state.run(mk_batch())
+                ok = np.asarray(res.ids).shape == (NQ, k)
+                completed += NQ if ok else 0
+                failed += 0 if ok else NQ
+            except Exception:  # noqa: BLE001
+                failed += NQ
+    report = pool.rolling_swap(next_idx, probe_qs=jq, warm_buckets=[bucket],
+                               on_step=on_step)
+    zero_shed = bool(offered > 0 and completed == offered and failed == 0)
+    all_new_gen = all(r.generation == 1 for r in pool)
+    drift = {f"k{kk}_np{np_}": {"tv": round(v["tv"], 4),
+                                "carried": v["carried"]}
+             for (kk, np_), v in report.items()}
+    common.emit("ingest/rolling_swap", 0.0,
+                f"offered={offered};completed={completed};failed={failed}")
+
+    recall_ok = min(rec, rec_c, rec_m) >= RECALL_FLOOR
+    payload = {
+        "bench": "ingest",
+        "corpus": {"n": N, "d": D, "corpus": common.CORPUS},
+        "config": {
+            "k": k, "n_probe": n_probe, "n_clusters": n_clusters,
+            "n_queries": NQ, "n_replicas": N_REPLICAS,
+            "inserted": int(len(new_ids)), "deleted": int(len(dead)),
+            "insert_frac": INSERT_FRAC, "delete_frac": DELETE_FRAC,
+        },
+        "platform": jax.devices()[0].platform,
+        "results": {
+            "checkpoints": checkpoints,
+            "qps_merged": round(qps_merged, 2),
+            "qps_frozen": round(qps_frozen, 2),
+            "qps_ratio": round(qps_ratio, 4),
+            "swap": {"offered": offered, "completed": completed,
+                     "failed": failed, "drift_report": drift},
+        },
+        "acceptance": {
+            "recall_floor": RECALL_FLOOR,
+            "recall_min": round(min(rec, rec_c, rec_m), 4),
+            "deleted_surfaced": leaks + leaks_c + leaks_m,
+            "crash_recovered": recovered,
+            "swap_zero_shed": zero_shed,
+            "swap_all_new_generation": all_new_gen,
+            "qps_ratio_floor": QPS_RATIO_FLOOR,
+            "qps_ratio": round(qps_ratio, 4),
+            "pass": bool(recall_ok and leaks + leaks_c + leaks_m == 0
+                         and recovered and zero_shed and all_new_gen
+                         and qps_ratio >= QPS_RATIO_FLOOR),
+        },
+    }
+    out_path = os.environ.get("REPRO_BENCH_OUT", "BENCH_ingest.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
+    if os.environ.get("REPRO_IN_STRICT") == "1" and \
+            not payload["acceptance"]["pass"]:
+        raise SystemExit(
+            f"bench_ingest acceptance failed: {payload['acceptance']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

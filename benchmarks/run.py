@@ -8,7 +8,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_autotune, bench_batch_qps,
+    from benchmarks import (bench_autotune, bench_batch_qps, bench_ingest,
                             bench_rabitq_fused, bench_serve, bench_tau_pred,
                             exp2_relative_error, exp3_collector_latency,
                             exp4_threshold_gap, exp5_rerank,
@@ -23,6 +23,7 @@ def main() -> None:
         ("bench_tau_pred", bench_tau_pred.run),
         ("bench_rabitq_fused", bench_rabitq_fused.run),
         ("bench_serve", bench_serve.run),
+        ("bench_ingest", bench_ingest.run),
         ("fig2_breakdown", fig2_breakdown.run),
         ("exp2_relative_error", exp2_relative_error.run),
         ("exp3_collector_latency", exp3_collector_latency.run),

@@ -85,7 +85,7 @@ class _IvfStrategy:
             eng.index, eng.vectors, qs, eng.layout, k=eng.k,
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
             backend=eng.backend, pred_state=pred_state,
-            pred_count=eng.pred_count)
+            pred_count=eng.pred_count, live=eng.live)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         return (np.asarray(vectors)[order],)
@@ -101,7 +101,7 @@ class _IvfStrategy:
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
             cap_shard=eng.cap_shard, budget=eng.shard_budget,
             backend=eng.backend, pred_state=pred_state,
-            pred_count=eng.pred_count)
+            pred_count=eng.pred_count, slive=eng.live)
 
 
 class _IvfPqStrategy:
@@ -126,7 +126,7 @@ class _IvfPqStrategy:
             eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
             n_cand=eng.n_cand, use_bbc=eng.use_bbc, m=eng.m,
             backend=eng.backend, fused=eng.fused, pred_state=pred_state,
-            pred_count=eng.pred_count)
+            pred_count=eng.pred_count, live=eng.live)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         return (np.asarray(index.codes)[order],
@@ -143,7 +143,8 @@ class _IvfPqStrategy:
             scodes, svecs, k=eng.k, n_probe=eng.n_probe, n_cand=eng.n_cand,
             use_bbc=eng.use_bbc, m=eng.m, cap_shard=eng.cap_shard,
             budget=eng.shard_budget, backend=eng.backend,
-            pred_state=pred_state, pred_count=eng.pred_count)
+            pred_state=pred_state, pred_count=eng.pred_count,
+            slive=eng.live)
 
 
 class _IvfRabitqStrategy:
@@ -169,7 +170,8 @@ class _IvfRabitqStrategy:
             eng.index, qs, eng.layout, k=eng.k, n_probe=eng.n_probe,
             use_bbc=eng.use_bbc, m=eng.m, backend=eng.backend,
             fused=eng.fused, stream=eng.stream_cache,
-            pred_state=pred_state, pred_count=eng.pred_count)
+            pred_state=pred_state, pred_count=eng.pred_count,
+            live=eng.live)
 
     def shard_streams(self, index, vectors, order: np.ndarray) -> tuple:
         rq = index.rq
@@ -189,7 +191,7 @@ class _IvfRabitqStrategy:
             n_probe=eng.n_probe, use_bbc=eng.use_bbc, m=eng.m,
             cap_shard=eng.cap_shard, budget=eng.shard_budget,
             backend=eng.backend, fused=eng.fused, pred_state=pred_state,
-            pred_count=eng.pred_count)
+            pred_count=eng.pred_count, slive=eng.live)
 
 
 _STRATEGIES = {s.kind: s for s in
@@ -245,6 +247,15 @@ class SearchEngine:
     # filled caller-unset knobs at build time, or None for hand defaults
     # ("hand-tuned fallback" in serving summaries)
     tuned_from: str | None = None
+    # -- streaming-ingest state --------------------------------------------
+    # stream-ordered tombstone mask: (n_flat,) bool single-device, (S, F)
+    # placed on the mesh when sharded; None = every lane live (the frozen
+    # default, which keeps all pre-existing jit traces unchanged).  Build
+    # from a corpus-row mask with ``with_live``.
+    live: Any = None
+    # monotone index-rebuild counter: bumped by each background merge; the
+    # serving tier keys copy-on-swap engine caches by it
+    generation: int = 0
     # -- sharded deployment state (all None/unused on a single device) ------
     mesh: Any = None
     slayout: ivf_mod.ShardedLayout | None = None
@@ -268,7 +279,8 @@ class SearchEngine:
               mesh=None, shard_budget: int | None = None,
               pred_count: int | None = None,
               fused: bool | None = None, tuned=None,
-              recall_target: float = 0.95) -> "SearchEngine":
+              recall_target: float = 0.95,
+              generation: int = 0) -> "SearchEngine":
         """Construct a serving engine; ``mesh`` switches on the sharded
         deployment — same code path, the corpus stream is partitioned and
         placed at build time.  A 1-D ("model",) mesh shards flat; a 2-D
@@ -318,6 +330,14 @@ class SearchEngine:
             n_cand = strategy.default_n_cand(index, k)
         if pred_count is None:
             pred_count = strategy.default_pred_count(k, n_cand)
+        # resolved knobs are priors, not feasibility guarantees on THIS
+        # index: a point tuned on a larger corpus can name a probe width or
+        # candidate pool wider than the stream (top_k rejects the width)
+        n_probe = min(n_probe, ivf.n_clusters)
+        n_rows = int(np.asarray(ivf.cluster_sizes).sum())
+        if n_cand is not None:
+            n_cand = min(n_cand, n_rows)
+            pred_count = min(pred_count, n_cand)
         layout, slayout, cap_shard, streams = None, None, 1, ()
         stream_cache = None
         if mesh is None:
@@ -340,7 +360,7 @@ class SearchEngine:
                             use_bbc=use_bbc, m=m, backend=backend,
                             vectors=vectors, pred_count=pred_count,
                             fused=fused, stream_cache=stream_cache,
-                            tuned_from=tuned_from,
+                            tuned_from=tuned_from, generation=generation,
                             mesh=mesh, slayout=slayout, cap_shard=cap_shard,
                             shard_budget=shard_budget, shard_streams=streams)
 
@@ -356,6 +376,31 @@ class SearchEngine:
     def predictor_init(self) -> rerank.PredictorState:
         """Cold cross-batch threshold-predictor state for this engine."""
         return rerank.predictor_init(self.m)
+
+    def with_live(self, corpus_live) -> "SearchEngine":
+        """Engine with a tombstone mask: ``corpus_live[i]`` False deletes
+        corpus row ``i`` from every search without touching the layout or
+        the quantized streams — the mask is permuted into stream order
+        (and placed on the mesh when sharded) and ANDed into the per-query
+        probe masks at scan time.  All-True (or ``None``) restores the
+        frozen behavior.  O(n) host work; the engine stays immutable
+        (returns a new instance sharing every build-time artifact)."""
+        if corpus_live is None:
+            return dataclasses.replace(self, live=None)
+        corpus_live = np.asarray(corpus_live, dtype=bool)
+        if self.sharded:
+            axes = search_mod._shard_axes(self.mesh)
+            order = np.asarray(jax.device_get(self.slayout.order))
+            # padding lanes carry order id 0: whatever they pick up here is
+            # re-masked by layout.valid inside probe_mask
+            slive = corpus_live[np.clip(order, 0, corpus_live.shape[0] - 1)]
+            live = jax.device_put(
+                slive, NamedSharding(self.mesh, P(axes, None)))
+        else:
+            order = np.asarray(self.layout.order)
+            live = jnp.asarray(
+                corpus_live[np.clip(order, 0, corpus_live.shape[0] - 1)])
+        return dataclasses.replace(self, live=live)
 
     def replica_clone(self) -> "SearchEngine":
         """Replica-build hook for the multi-replica serving tier: a fresh
@@ -416,8 +461,9 @@ class SearchEngine:
             # predictive search is natively batched; serve a singleton batch
             res, state = self.search_batch(q[None], pred_state=pred_state)
             return search_mod.SearchResult(*(x[0] for x in res)), state
-        if self.sharded:
-            # the sharded path is natively batched; serve a singleton batch
-            res = self.strategy.search_sharded(self, q[None])
+        if self.sharded or self.live is not None:
+            # the sharded path is natively batched, and tombstone masks
+            # live on the batched searchers only; serve a singleton batch
+            res = self.search_batch(q[None])
             return search_mod.SearchResult(*(x[0] for x in res))
         return self.strategy.search_one(self, q)

@@ -532,6 +532,7 @@ def ivf_search_batch(
     backend: str | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
+    live: jax.Array | None = None,
 ) -> SearchResult:
     """Batched IVF (exact distances in-scan): one shared vector-stream gather,
     one (B, n_flat) distance matmul, per-query bucket collection.
@@ -540,8 +541,16 @@ def ivf_search_batch(
     max(tau_pred, tau_true) instead of a histogram-driven collect) and the
     call returns ``(SearchResult, new_state)``; distances are exact in-scan,
     so the result is identical to the static path for ANY prediction.
+
+    ``live`` is an optional (n_flat,) stream-ordered tombstone mask
+    (streaming-ingest deletes): dead lanes are ANDed out of the per-query
+    probe masks, so every downstream consumer — distances, histograms, the
+    collection — sees them exactly like unprobed lanes.  The value is
+    traced (not static): flipping tombstones never recompiles.
     """
     probed, lane_valid, _ = _routing(index, layout, qs, n_probe)
+    if live is not None:
+        lane_valid = lane_valid & live[None, :]
     stream_vecs = vectors[layout.order]                       # shared gather
     dists = ops.l2_exact_batch(stream_vecs, qs, backend=backend)
     dists = jnp.where(lane_valid, dists, INF)
@@ -599,6 +608,7 @@ def ivf_pq_search_batch(
     fused: bool | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
+    live: jax.Array | None = None,
 ) -> SearchResult:
     """Batched IVF+PQ (±BBC).
 
@@ -623,6 +633,11 @@ def ivf_pq_search_batch(
     ivf = index.ivf
     b = qs.shape[0]
     probed, lane_valid, _ = _routing(ivf, layout, qs, n_probe)
+    if live is not None:
+        # tombstoned lanes (streaming-ingest deletes) behave exactly like
+        # unprobed lanes from here on: masked out of estimates, histograms,
+        # and the collection alike
+        lane_valid = lane_valid & live[None, :]
     stream_codes = index.codes[layout.order]                  # shared gather
     luts = jax.vmap(lambda q: pq_mod.adc_table(index.pq, q))(qs)
 
@@ -938,6 +953,7 @@ def ivf_rabitq_search_batch(
     stream: RabitqStream | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
+    live: jax.Array | None = None,
 ) -> SearchResult:
     """Batched IVF+RaBitQ (±BBC) on the shared candidate stream.
 
@@ -986,6 +1002,10 @@ def ivf_rabitq_search_batch(
     b = qs.shape[0]
     cap = ivf.cap
     probed, lane_valid, d2 = _routing(ivf, layout, qs, n_probe)
+    if live is not None:
+        # tombstones ride the lane-mask mechanism: every downstream
+        # consumer (bounds, band, histogram, collection) already honors it
+        lane_valid = lane_valid & live[None, :]
     n_flat = layout.n_flat
     stream_ids = layout.order
 
@@ -1521,6 +1541,7 @@ def ivf_search_sharded(
     backend: str | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
+    slive: jax.Array | None = None,
 ) -> SearchResult:
     """Sharded batched IVF (exact distances in-scan).
 
@@ -1528,21 +1549,31 @@ def ivf_search_sharded(
     threshold as a floor (see ``dist.bbc_survivors_batch``) and the psum'd
     histogram feeds the EMA; returns ``(SearchResult, new_state)``.
     Distances are exact in-scan, so results match the static path exactly.
+
+    ``slive`` is an optional (S, F) stream-ordered tombstone mask, sharded
+    like the other stream scalars; each shard ANDs its block into the local
+    probe masks (tombstoned lanes == unprobed lanes everywhere downstream).
     """
     predictive = pred_state is not None
     if predictive and not use_bbc:
         raise ValueError("predictive search requires use_bbc=True")
+    has_live = slive is not None
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
     axes = _shard_axes(mesh)
     sizes = _mesh_sizes(mesh, axes)
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=2.0)
 
-    def body(qs, cent, sl, vecs, tau_floor=None):
+    def body(qs, cent, sl, vecs, *extra):
+        rest = list(extra)
+        live = rest.pop(0)[0] if has_live else None     # (1, F) block -> (F,)
+        tau_floor = rest.pop(0) if predictive else None
         layout = _local_block(sl)
         vecs = vecs[0]
         probed, _ = _local_routing(cent, qs, n_probe)
         lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
+        if live is not None:
+            lane_valid = lane_valid & live[None, :]
         dists = ops.l2_exact_batch(vecs, qs, backend=backend)
         dv = jnp.where(lane_valid, dists, INF)
         n = dist.hier_psum(jnp.sum(lane_valid, axis=1), axes)
@@ -1573,18 +1604,24 @@ def ivf_search_sharded(
             return d, i, n.astype(jnp.int32), ghist
         return d, i, n.astype(jnp.int32)
 
-    in_specs = (P(), P(), _layout_spec(axes), _stream3_spec(axes))
+    args = [qs, centroids, slayout, svecs]
+    in_specs = [P(), P(), _layout_spec(axes), _stream3_spec(axes)]
+    if has_live:
+        args.append(slive)
+        in_specs.append(_stream2_spec(axes))
     out_specs = (P(), P(), P())
     if predictive:
         count = max(pred_count, k) if pred_count is not None else k
-        tau_p = rerank.predict_tau(pred_state, count)
-        fn = dist.shard_map(body, mesh, in_specs=in_specs + (P(),),
+        args.append(rerank.predict_tau(pred_state, count))
+        in_specs.append(P())
+        fn = dist.shard_map(body, mesh, in_specs=tuple(in_specs),
                             out_specs=out_specs + (P(),))
-        d, i, n, ghist = fn(qs, centroids, slayout, svecs, tau_p)
+        d, i, n, ghist = fn(*args)
         res = SearchResult(d, i, n, jnp.zeros_like(n))
         return res, rerank.predictor_update(pred_state, ghist)
-    fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
-    d, i, n = fn(qs, centroids, slayout, svecs)
+    fn = dist.shard_map(body, mesh, in_specs=tuple(in_specs),
+                        out_specs=out_specs)
+    d, i, n = fn(*args)
     return SearchResult(d, i, n, jnp.zeros_like(n))
 
 
@@ -1610,6 +1647,7 @@ def ivf_pq_search_sharded(
     backend: str | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
+    slive: jax.Array | None = None,
 ) -> SearchResult:
     """Sharded batched IVF+PQ.
 
@@ -1627,10 +1665,14 @@ def ivf_pq_search_sharded(
     ~n_cand/S), and the blunt post-gather n_cand-by-estimate re-cut is gone —
     the survivor pool IS the selection, matching the predictive batched
     path's semantics.  Returns ``(SearchResult, new_state)``.
+
+    ``slive``: optional (S, F) sharded tombstone mask (see
+    ``ivf_search_sharded``).
     """
     predictive = pred_state is not None
     if predictive and not use_bbc:
         raise ValueError("predictive search requires use_bbc=True")
+    has_live = slive is not None
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
     axes = _shard_axes(mesh)
@@ -1639,11 +1681,16 @@ def ivf_pq_search_sharded(
         else n_cand
     bud = _shard_budget(budget, count, mesh, shard_flat, slack=2.0)
 
-    def body(qs, cb, cent, sl, codes, vecs, tau_floor=None):
+    def body(qs, cb, cent, sl, codes, vecs, *extra):
+        rest = list(extra)
+        live = rest.pop(0)[0] if has_live else None
+        tau_floor = rest.pop(0) if predictive else None
         layout = _local_block(sl)
         codes, vecs = codes[0], vecs[0]
         probed, _ = _local_routing(cent, qs, n_probe)
         lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
+        if live is not None:
+            lane_valid = lane_valid & live[None, :]
         luts = jax.vmap(lambda q: pq_mod.adc_table(cb, q))(qs)
         est2 = ops.pq_adc_batch(codes, luts, backend=backend)
         est = jnp.where(lane_valid, jnp.sqrt(jnp.maximum(est2, 0.0)), INF)
@@ -1716,19 +1763,24 @@ def ivf_pq_search_sharded(
             return d, i, n_rr.astype(jnp.int32), ghist
         return d, i, n_rr.astype(jnp.int32)
 
-    in_specs = (P(), P(), P(), _layout_spec(axes), _stream3_spec(axes),
-                _stream3_spec(axes))
+    args = [qs, pq_cb, centroids, slayout, scodes, svecs]
+    in_specs = [P(), P(), P(), _layout_spec(axes), _stream3_spec(axes),
+                _stream3_spec(axes)]
+    if has_live:
+        args.append(slive)
+        in_specs.append(_stream2_spec(axes))
     out_specs = (P(), P(), P())
     if predictive:
-        tau_p = rerank.predict_tau(pred_state, count)
-        fn = dist.shard_map(body, mesh, in_specs=in_specs + (P(),),
+        args.append(rerank.predict_tau(pred_state, count))
+        in_specs.append(P())
+        fn = dist.shard_map(body, mesh, in_specs=tuple(in_specs),
                             out_specs=out_specs + (P(),))
-        d, i, n_rr, ghist = fn(qs, pq_cb, centroids, slayout, scodes, svecs,
-                               tau_p)
+        d, i, n_rr, ghist = fn(*args)
         res = SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
         return res, rerank.predictor_update(pred_state, ghist)
-    fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
-    d, i, n_rr = fn(qs, pq_cb, centroids, slayout, scodes, svecs)
+    fn = dist.shard_map(body, mesh, in_specs=tuple(in_specs),
+                        out_specs=out_specs)
+    d, i, n_rr = fn(*args)
     return SearchResult(d, i, n_rr, jnp.zeros_like(n_rr))
 
 
@@ -1758,6 +1810,7 @@ def ivf_rabitq_search_sharded(
     fused: bool | None = None,
     pred_state: rerank.PredictorState | None = None,
     pred_count: int | None = None,
+    slive: jax.Array | None = None,
 ) -> SearchResult:
     """Sharded batched IVF+RaBitQ.
 
@@ -1791,6 +1844,7 @@ def ivf_rabitq_search_sharded(
         raise ValueError("predictive search requires use_bbc=True")
     if fused is None:
         fused = True
+    has_live = slive is not None
     n_clusters = centroids.shape[0]
     shard_flat = svecs.shape[1]
     axes = _shard_axes(mesh)
@@ -1798,13 +1852,21 @@ def ivf_rabitq_search_sharded(
     bud = _shard_budget(budget, k, mesh, shard_flat, slack=4.0)
     count = k if pred_count is None else max(pred_count, k)
     kernelized = fused and ops.resolve_backend(backend) == "pallas"
+    tau_p_val = rerank.predict_tau(pred_state, count) \
+        if predictive and fused else None
+    has_tau = tau_p_val is not None
 
-    def body(qs, rot, cent, sl, codes, norm_o, f_o, vecs, tau_p=None):
+    def body(qs, rot, cent, sl, codes, norm_o, f_o, vecs, *extra):
+        rest = list(extra)
+        live = rest.pop(0)[0] if has_live else None
+        tau_p = rest.pop(0) if has_tau else None
         layout = _local_block(sl)
         codes, norm_o, f_o, vecs = codes[0], norm_o[0], f_o[0], vecs[0]
         b = qs.shape[0]
         probed, d2 = _local_routing(cent, qs, n_probe)
         lane_valid = ivf_mod.probe_mask(layout, probed, n_clusters)
+        if live is not None:
+            lane_valid = lane_valid & live[None, :]
         cl = jnp.minimum(layout.cluster_of, n_clusters - 1)
         ghist = None
         n_second = jnp.zeros((b,), jnp.int32)
@@ -1896,26 +1958,24 @@ def ivf_rabitq_search_sharded(
             return d, i, n_rr.astype(jnp.int32), n_second, ghist
         return d, i, n_rr.astype(jnp.int32), n_second
 
-    in_specs = (P(), P(), P(), _layout_spec(axes), _stream3_spec(axes),
+    args = [qs, rot, centroids, slayout, scodes, snorm_o, sf_o, svecs]
+    in_specs = [P(), P(), P(), _layout_spec(axes), _stream3_spec(axes),
                 _stream2_spec(axes), _stream2_spec(axes),
-                _stream3_spec(axes))
+                _stream3_spec(axes)]
+    if has_live:
+        args.append(slive)
+        in_specs.append(_stream2_spec(axes))
+    if has_tau:
+        args.append(tau_p_val)
+        in_specs.append(P())
     out_specs = (P(), P(), P(), P())
     if predictive:
-        tau_p = rerank.predict_tau(pred_state, count) if fused else None
-        if tau_p is not None:
-            fn = dist.shard_map(body, mesh, in_specs=in_specs + (P(),),
-                                out_specs=out_specs + (P(),))
-            d, i, n_rr, n_second, ghist = fn(qs, rot, centroids, slayout,
-                                             scodes, snorm_o, sf_o, svecs,
-                                             tau_p)
-        else:
-            fn = dist.shard_map(body, mesh, in_specs=in_specs,
-                                out_specs=out_specs + (P(),))
-            d, i, n_rr, n_second, ghist = fn(qs, rot, centroids, slayout,
-                                             scodes, snorm_o, sf_o, svecs)
+        fn = dist.shard_map(body, mesh, in_specs=tuple(in_specs),
+                            out_specs=out_specs + (P(),))
+        d, i, n_rr, n_second, ghist = fn(*args)
         res = SearchResult(d, i, n_rr, n_second)
         return res, rerank.predictor_update(pred_state, ghist)
-    fn = dist.shard_map(body, mesh, in_specs=in_specs, out_specs=out_specs)
-    d, i, n_rr, n_second = fn(qs, rot, centroids, slayout, scodes, snorm_o,
-                              sf_o, svecs)
+    fn = dist.shard_map(body, mesh, in_specs=tuple(in_specs),
+                        out_specs=out_specs)
+    d, i, n_rr, n_second = fn(*args)
     return SearchResult(d, i, n_rr, n_second)

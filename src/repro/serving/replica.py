@@ -32,6 +32,7 @@ from collections import deque
 from typing import Callable, NamedTuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, CorruptCheckpointError
@@ -147,6 +148,23 @@ class Replica:
         return float(sum(self._ws.get(int(c), 0.0)
                          for c in np.asarray(cluster_ids).reshape(-1)))
 
+    @property
+    def generation(self) -> int:
+        """Index generation this replica currently serves."""
+        return self.state.generation
+
+    def swap_state(self, state: ServingState) -> None:
+        """Zero-downtime engine swap: re-point ONLY the state fork.
+
+        Unlike ``reset`` (crash respawn), the batcher lanes, fired batches,
+        the in-flight batch, and the affinity working set all survive —
+        requests queued before the swap execute against the new
+        generation's engines on their normal schedule, so the roll sheds
+        and fails nothing.  (The OLD state fork keeps the old generation's
+        engine cache alive by reference until the last holder drops it —
+        the copy-on-swap contract in ``ServingState.swap``.)"""
+        self.state = state
+
     def reset(self, state: ServingState, now: float) -> None:
         """Crash respawn: fresh process — queue, executor, and working set
         are gone; the (new) state fork carries whatever predictor states
@@ -245,6 +263,75 @@ class ReplicaPool:
             # verified-or-cold: never resume from garbage
             return {}
         return {self._buckets[key]: state for key, state in tree.items()}
+
+    # -- streaming-ingest rolling swap ---------------------------------------
+
+    def rolling_swap(self, index, *, vectors=None, live=None, probe_qs=None,
+                     drift_threshold: float = 0.25, warm_buckets=None,
+                     on_step=None) -> dict[tuple[int, int], dict]:
+        """Roll a rebuilt index through the pool one replica at a time with
+        zero shed requests.
+
+        ``base.swap`` replaces the shared engine-build cache with a NEW dict
+        (copy-on-swap), so every replica's existing fork keeps serving the
+        old generation untouched; each roll step then takes a fresh fork
+        (sharing the new cache) and re-points exactly one replica via
+        ``Replica.swap_state`` — queues, fired batches, and working sets
+        survive, so nothing in flight is shed or failed.  ``warm_buckets``
+        precompiles the new generation's serving shapes BEFORE the first
+        replica moves, keeping the roll's first post-swap batch off the
+        compile path.
+
+        Predictor warmth is tested per replica: warm states live in the
+        REPLICA forks (each self-tuned on its affinity slice), so the pool
+        probes each warm bucket once through the NEW engine (shared across
+        replicas — the probe histogram depends on the engine, not the
+        replica) and runs the drift test against every replica's own EMA.
+        Carried states move into the replica's new fork; drifted ones
+        cold-reset.  ``on_step(rid)`` (when given) runs after each replica
+        flips — benches use it to drive traffic mid-roll and assert both
+        generations answer correctly side by side.  Returns the aggregate
+        drift report ``{(k, n_probe): {"tv": max over replicas, "carried":
+        all replicas, "replicas": [...per-replica detail...]}}``."""
+        self.base.swap(index, vectors=vectors, live=live, probe_qs=probe_qs,
+                       drift_threshold=drift_threshold)
+        if warm_buckets:
+            self.base.warmup(warm_buckets)
+        fresh: dict[tuple[int, int], object] = {}
+        if self.base.tau_pred and probe_qs is not None:
+            from repro.ingest import drift as drift_mod
+            qs = jnp.asarray(probe_qs)
+            buckets = {b for r in self.replicas for b in r.state.pred_states()}
+            for bucket in sorted(buckets):
+                fresh[(bucket.k, bucket.n_probe)] = \
+                    drift_mod.probe_histogram(self.base.engine(bucket), qs)
+        report: dict[tuple[int, int], dict] = {}
+        for rid, replica in enumerate(self.replicas):
+            old_states = replica.state.pred_states()
+            ns = self.base.fork()
+            carried = {}
+            for bucket, st in old_states.items():
+                key = (bucket.k, bucket.n_probe)
+                probe = fresh.get(key)
+                if probe is None:
+                    carried[bucket] = st     # no probe signal: keep warm
+                    continue
+                from repro.ingest import drift as drift_mod
+                kept, tv, ok = drift_mod.carry_state(st, probe,
+                                                     drift_threshold)
+                carried[bucket] = kept
+                entry = report.setdefault(
+                    key, {"tv": 0.0, "carried": True, "replicas": []})
+                entry["tv"] = max(entry["tv"], tv)
+                entry["carried"] = entry["carried"] and ok
+                entry["replicas"].append(
+                    {"rid": rid, "tv": tv, "carried": ok})
+            ns._pred = carried
+            replica.swap_state(ns)
+            if on_step is not None:
+                on_step(rid)
+        self.base.drift_report = report
+        return report
 
     # -- respawn -------------------------------------------------------------
 

@@ -64,6 +64,14 @@ class ServingState:
         self.kind = engine_mod.resolve_kind(index, vectors)
         if self.tau_pred and not use_bbc:
             raise ValueError("tau_pred serving requires use_bbc=True")
+        # streaming-ingest state: the generation counter keys engine swaps
+        # (every bucket engine carries it), ``live`` is an optional
+        # corpus-row tombstone mask applied to every built engine, and
+        # ``drift_report`` records the last swap's per-bucket predictor
+        # carry/reset decisions
+        self.generation = 0
+        self.live = None
+        self.drift_report: dict[tuple[int, int], dict] = {}
         # engines depend only on (k, n_probe) — batch width is a call-shape
         # jit specializes on, not a build parameter — so two ShapeBuckets
         # differing only in batch share one engine (one layout packing, one
@@ -82,7 +90,9 @@ class ServingState:
                 use_bbc=self.use_bbc, m=self.m, backend=self.backend,
                 vectors=self.vectors, mesh=self.mesh,
                 shard_budget=self.shard_budget, pred_count=self.pred_count,
-                tuned=self.tuned)
+                tuned=self.tuned, generation=self.generation)
+            if self.live is not None:
+                eng = eng.with_live(self.live)
             self._engines[key] = eng
         return eng
 
@@ -104,6 +114,56 @@ class ServingState:
             self.engine(bucket).warmup(batch_sizes=(bucket.batch,),
                                        predictive=self.tau_pred)
         return self
+
+    # -- streaming-ingest swap ----------------------------------------------
+
+    def swap(self, index: Any, *, vectors=None, live=None, probe_qs=None,
+             drift_threshold: float = 0.25) -> dict[tuple[int, int], dict]:
+        """Generation-aware engine swap (copy-on-swap): re-point this state
+        at a rebuilt ``index`` without touching any fork serving the old
+        generation.
+
+        The engine cache is REPLACED with a fresh dict, never cleared in
+        place — forks share the cache object by reference
+        (``fork(clone_engines=False)``), so old forks keep resolving (and
+        lazily completing) the OLD generation's engines while forks taken
+        after the swap see only the new one.  That object-identity contract
+        is what lets ``ReplicaPool.rolling_swap`` roll replicas one at a
+        time with both generations live.
+
+        ``live`` is an optional corpus-row tombstone mask for the new
+        generation (deletes that landed during the merge); ``vectors``
+        replaces the corpus for the plain-IVF method.
+
+        Predictor warmth: with ``tau_pred`` on and ``probe_qs`` given, each
+        warm bucket's EMA is tested against one probe batch through the NEW
+        engine (``ingest.drift``) — carried when the bucket-histogram
+        distribution shifted by at most ``drift_threshold`` (total
+        variation), cold-reset otherwise.  Returns (and stores as
+        ``drift_report``) ``{(k, n_probe): {"tv": .., "carried": ..}}``.
+        """
+        self.index = index
+        if vectors is not None:
+            self.vectors = vectors
+        self.live = live
+        self.kind = engine_mod.resolve_kind(self.index, self.vectors)
+        self.generation += 1
+        old_pred = self._pred
+        self._engines = {}                      # copy-on-swap: NEW dict
+        self._pred = {}
+        report: dict[tuple[int, int], dict] = {}
+        if self.tau_pred and probe_qs is not None and old_pred:
+            from repro.ingest import drift as drift_mod
+            qs = jnp.asarray(probe_qs)
+            for bucket, state in old_pred.items():
+                fresh = drift_mod.probe_histogram(self.engine(bucket), qs)
+                kept, tv, carried = drift_mod.carry_state(
+                    state, fresh, drift_threshold)
+                self._pred[bucket] = kept
+                report[(bucket.k, bucket.n_probe)] = {
+                    "tv": tv, "carried": carried}
+        self.drift_report = report
+        return report
 
     # -- replica hooks ------------------------------------------------------
 

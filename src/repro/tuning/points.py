@@ -174,7 +174,9 @@ class PointStore:
     # -- resolution ---------------------------------------------------------
 
     def resolve(self, method: str, k: int, target: float = 0.95,
-                corpus_fp: str | None = None
+                corpus_fp: str | None = None, *,
+                drift: float | None = None,
+                drift_threshold: float = 0.10
                 ) -> tuple[OperatingPoint | None, str]:
         """(point, provenance) for a serving cell; (None, HAND_TUNED) when
         the store has nothing usable for the method.
@@ -186,11 +188,31 @@ class PointStore:
         available).  Feasible points are always preferred over infeasible
         ones.  Provenance is ``'tuned'`` for an exact corpus match,
         ``'tuned-nearest'`` when the fingerprint differs.
+
+        ``drift`` is the live corpus's churn fraction (inserted + deleted
+        over base size — streaming ingest).  Past ``drift_threshold`` an
+        exact fingerprint match is NO LONGER trusted as exact: the stored
+        point was measured on the pre-churn corpus bytes, so the resolution
+        falls back to nearest-cell semantics with provenance
+        ``'tuned-drifted(<pct>)'`` and a ``UserWarning`` — never a silent
+        stale hit.  The knobs are still returned (a measured point on the
+        pre-churn corpus beats hand defaults), but ``tuned_from``
+        attribution makes the staleness auditable.
         """
         cands = [p for p in self.points if p.method == method]
         if not cands:
             return None, HAND_TUNED
-        if corpus_fp is not None and any(
+        drifted = drift is not None and drift > drift_threshold
+        if drifted:
+            import warnings
+            warnings.warn(
+                f"operating-point store resolved under corpus drift "
+                f"{drift:.0%} > {drift_threshold:.0%} for {method}/k{k}: "
+                f"treating tuned points as nearest-cell priors, not exact "
+                f"matches (re-run the tuner after the next merge)",
+                UserWarning, stacklevel=2)
+            provenance = f"tuned-drifted({drift:.0%})"
+        elif corpus_fp is not None and any(
                 p.corpus.get("fingerprint") == corpus_fp for p in cands):
             cands = [p for p in cands
                      if p.corpus.get("fingerprint") == corpus_fp]

@@ -1,0 +1,407 @@
+"""Streaming ingest: segment lifecycle, merge + crash recovery, drift-tested
+predictor carry, and generation-aware zero-shed rolling swaps.
+
+The churned-corpus parity acceptance (delta segment dealt across an
+8-device mesh, sharded results == single-device results) runs in a
+subprocess with forced host devices, marked ``multidevice`` like
+``test_sharded.py``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CorruptCheckpointError
+from repro.data import synthetic
+from repro.index import search
+from repro.ingest import (DeltaSegment, IngestConfig, MergeCrash, MergeJob,
+                          MutableIndex, carry_state, resume_merge,
+                          tv_distance)
+from repro.kernels import ops
+from repro.core import rerank
+
+N, D, NQ, K = 3000, 24, 4, 100
+
+
+@pytest.fixture()
+def corpus():
+    rng = np.random.default_rng(5)
+    x = synthetic.clustered(rng, N, D, n_centers=32)
+    qs = synthetic.queries_from(rng, x, NQ)
+    return x.astype(np.float32), qs.astype(np.float32)
+
+
+def mi_n_probe(x):
+    return max(4, int(round(np.sqrt(len(x)))) // 2)
+
+
+def mutable(x, **kw):
+    kw.setdefault("k", K)
+    kw.setdefault("n_probe", mi_n_probe(x))
+    kw.setdefault("n_cand", 2048)
+    kw.setdefault("config", IngestConfig(segment_capacity=256,
+                                         merge_trigger=0.10))
+    return MutableIndex(x, **kw)
+
+
+def live_oracle(mi, qs, k):
+    """Exact top-k over the live corpus, by external id."""
+    x, ids = mi.live_corpus()
+    d = np.asarray(ops.l2_exact_batch(jnp.asarray(x), jnp.asarray(qs)))
+    pos = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return ids[pos]
+
+
+def recall_vs_oracle(mi, qs, k):
+    want = live_oracle(mi, qs, k)
+    got = np.asarray(mi.search(qs).ids)
+    hits = sum(len(set(got[bi].tolist()) & set(want[bi].tolist()))
+               for bi in range(len(qs)))
+    return hits / want.size
+
+
+# ---------------------------- delta segments --------------------------------
+
+def test_segment_append_delete_roundtrip():
+    seg = DeltaSegment(8, D)
+    rng = np.random.default_rng(0)
+    ids = np.arange(100, 105, dtype=np.int64)
+    seg.append(rng.normal(size=(5, D)).astype(np.float32), ids)
+    assert seg.size == 5 and seg.room == 3 and seg.n_live == 5
+    assert seg.delete(102) and not seg.delete(999)
+    assert seg.n_live == 4
+    with pytest.raises(ValueError):
+        seg.append(rng.normal(size=(9, D)).astype(np.float32),
+                   np.arange(200, 209, dtype=np.int64))
+
+
+def test_ids_monotone_and_never_reused(corpus):
+    x, _ = corpus
+    mi = mutable(x)
+    a = mi.insert(np.ones((3, D), np.float32))
+    mi.delete(a)
+    b = mi.insert(np.ones((3, D), np.float32))
+    assert a.tolist() == [N, N + 1, N + 2]
+    assert b.tolist() == [N + 3, N + 4, N + 5]       # deleted ids stay dead
+    assert np.all(np.diff(mi.row_ids) > 0)
+
+
+# ---------------------------- search semantics ------------------------------
+
+def test_search_merges_base_and_delta_streams(corpus):
+    """Inserted vectors are immediately searchable; results equal the
+    exact oracle over the live corpus."""
+    x, qs = corpus
+    mi = mutable(x, n_probe=mi_n_probe(x))
+    new_ids = mi.insert(qs + 0.001)      # near-duplicates of the queries
+    res = mi.search(qs)
+    ids = np.asarray(res.ids)
+    for bi in range(NQ):
+        assert new_ids[bi] in ids[bi]    # delta hit ranks into the top-k
+    assert recall_vs_oracle(mi, qs, K) >= 0.95
+
+
+def test_deleted_ids_never_surface(corpus):
+    x, qs = corpus
+    mi = mutable(x, n_probe=mi_n_probe(x))
+    # delete each query's current top-5 (base rows) and a few delta rows
+    first = np.asarray(mi.search(qs).ids)
+    doomed = np.unique(first[:, :5].reshape(-1))
+    delta_ids = mi.insert(qs + 0.001)
+    assert mi.delete(doomed) == len(doomed)
+    assert mi.delete(delta_ids) == len(delta_ids)
+    res = np.asarray(mi.search(qs).ids)
+    dead = set(doomed.tolist()) | set(delta_ids.tolist())
+    assert not (set(res.reshape(-1).tolist()) & dead)
+    assert recall_vs_oracle(mi, qs, K) >= 0.95
+
+
+def test_churn_accounting_and_merge_trigger(corpus):
+    x, _ = corpus
+    mi = mutable(x)
+    assert not mi.needs_merge()
+    ins = mi.insert(np.ones((N // 8, D), np.float32))
+    mi.delete(ins[: N // 100])
+    frac = mi.churn_fraction()
+    assert frac == pytest.approx((N // 8 + N // 100) / N)
+    assert mi.needs_merge()              # > 10% trigger
+
+
+# ---------------------------- merge lifecycle -------------------------------
+
+def test_merge_folds_delta_and_reapplies_mid_merge_deletes(corpus, tmp_path):
+    x, qs = corpus
+    mi = mutable(x, n_probe=mi_n_probe(x))
+    new_ids = mi.insert(qs + 0.001)
+    mi.delete(np.arange(0, 50))
+    snap_gen = mi.generation
+    job = MergeJob(mi, str(tmp_path))
+    with pytest.raises(MergeCrash):
+        job.run(crash_after_checkpoint=True)
+    # serving continues on the sealed state mid-crash
+    assert recall_vs_oracle(mi, qs, K) >= 0.95
+    # deletes landing DURING the merge window must not resurrect
+    mi.delete(np.array([new_ids[0], 60]))
+    resume_merge(mi, str(tmp_path))
+    assert mi.generation == snap_gen + 1
+    # only the two mid-merge deletes (applied as tombstones on the new
+    # generation) remain as churn; the folded segments are gone
+    assert mi.churn_fraction() < 0.01 and not mi.segments
+    res = np.asarray(mi.search(qs).ids)
+    dead = {int(new_ids[0]), 60} | set(range(50))
+    assert not (set(res.reshape(-1).tolist()) & dead)
+    assert new_ids[1] in res[1]          # surviving delta row folded in
+    assert recall_vs_oracle(mi, qs, K) >= 0.95
+
+
+def test_merge_abort_on_failure_restores_serving_state(corpus, tmp_path,
+                                                       monkeypatch):
+    x, qs = corpus
+    mi = mutable(x, n_probe=mi_n_probe(x))
+    mi.insert(qs + 0.001)
+    before = np.asarray(mi.search(qs).ids)
+    monkeypatch.setattr(mi, "build_engine",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("boom")))
+    with pytest.raises(RuntimeError, match="boom"):
+        MergeJob(mi, str(tmp_path)).run()
+    assert mi._sealed is None            # seal unwound
+    after = np.asarray(mi.search(qs).ids)
+    np.testing.assert_array_equal(before, after)
+
+
+def test_corrupt_checkpoint_refuses_resume(corpus, tmp_path):
+    x, _ = corpus
+    mi = mutable(x)
+    mi.insert(np.ones((4, D), np.float32))
+    with pytest.raises(MergeCrash):
+        MergeJob(mi, str(tmp_path)).run(crash_after_checkpoint=True)
+    # flip bytes in the payload; the checksummed restore must refuse
+    step_dir = next(p for p in tmp_path.iterdir() if p.name.startswith("step"))
+    victim = next(p for p in step_dir.iterdir() if p.suffix != ".json")
+    data = bytearray(victim.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    victim.write_bytes(bytes(data))
+    with pytest.raises(CorruptCheckpointError):
+        resume_merge(mi, str(tmp_path))
+    # recovery path: abort and re-run fresh from live state
+    mi.abort_merge()
+    eng = MergeJob(mi, str(tmp_path / "fresh")).run()
+    assert eng is mi.engine and mi.generation == 1
+
+
+# ---------------------------- drift detector --------------------------------
+
+def test_tv_distance_bounds():
+    p = np.array([0.5, 0.5, 0.0])
+    q = np.array([0.0, 0.5, 0.5])
+    assert tv_distance(p, p) == 0.0
+    assert tv_distance(p, q) == pytest.approx(0.5)
+
+
+def _warm_state(m, hist):
+    st = rerank.predictor_init(m)
+    return rerank.predictor_update(st, jnp.asarray(hist, jnp.float32))
+
+
+def test_carry_state_decisions():
+    m = 7
+    base = np.zeros((1, m + 1)); base[0, 2] = 100.0
+    near = np.zeros((1, m + 1)); near[0, 2] = 90.0; near[0, 3] = 10.0
+    far = np.zeros((1, m + 1)); far[0, 6] = 100.0
+    old = _warm_state(m, base)
+    # slow drift: carried, EMA object preserved
+    kept, tv, carried = carry_state(old, _warm_state(m, near), 0.25)
+    assert carried and kept is old and tv == pytest.approx(0.1)
+    # distribution shift: cold reset
+    kept, tv, carried = carry_state(old, _warm_state(m, far), 0.25)
+    assert not carried and float(np.asarray(kept.weight)) == 0.0
+    # cold old state carries trivially
+    cold = rerank.predictor_init(m)
+    kept, tv, carried = carry_state(cold, _warm_state(m, far), 0.25)
+    assert carried and kept is cold
+
+
+# ---------------------------- swap + rolling swap ---------------------------
+
+def _serving_fixture(x, qs):
+    from repro.serving.state import ServingState
+    from repro.serving.batcher import ShapeBucket
+    idx = search.build_pq_index(jax.random.key(0), jnp.asarray(x), 16,
+                                n_iter=3)
+    st = ServingState(idx, use_bbc=True, tau_pred=True, m=64, pred_count=64)
+    bucket = ShapeBucket(k=K, batch=NQ, n_probe=8)
+    return st, bucket, idx
+
+
+def _mk_batch(bucket, qs):
+    from repro.serving.batcher import Batch, Request
+    reqs = tuple(Request(rid=i, q=qs[i], k=bucket.k, n_probe=bucket.n_probe,
+                         arrival=0.0, deadline=1.0)
+                 for i in range(len(qs)))
+    return Batch(bucket=bucket, requests=reqs, queries=qs)
+
+
+def test_swap_is_copy_on_swap(corpus):
+    """Forks taken before the swap keep resolving the OLD generation's
+    engine cache; the swapping state gets a NEW dict."""
+    x, qs = corpus
+    st, bucket, _ = _serving_fixture(x, qs)
+    st.engine(bucket)
+    fork = st.fork()
+    old_engines = fork._engines
+    idx2 = search.build_pq_index(jax.random.key(1), jnp.asarray(x), 16,
+                                 n_iter=3)
+    st.swap(idx2)
+    assert st.generation == 1 and fork.generation == 0
+    assert fork._engines is old_engines          # old fork: untouched cache
+    assert st._engines is not old_engines
+    assert fork.engine(bucket).generation == 0
+    assert st.engine(bucket).generation == 1
+
+
+def test_rolling_swap_zero_shed_mixed_generations(corpus):
+    """Mid-roll, old- and new-generation replicas serve side by side; every
+    batch completes; post-roll every replica is on the new generation with
+    carried (or reset, per the drift report) predictor states."""
+    from repro.serving.replica import ReplicaPool
+    x, qs = corpus
+    st, bucket, _ = _serving_fixture(x, qs)
+    pool = ReplicaPool(st, 3, [K], NQ, service_est=lambda b: 1e-3)
+    for r in pool:
+        for _ in range(2):
+            r.state.run(_mk_batch(bucket, qs))
+    idx2 = search.build_pq_index(jax.random.key(1), jnp.asarray(x), 16,
+                                 n_iter=3)
+    gens, done = [], []
+    def on_step(rid):
+        for r in pool:
+            res = r.state.run(_mk_batch(bucket, qs))
+            gens.append(r.generation)
+            done.append(np.asarray(res.ids).shape == (NQ, K))
+    report = pool.rolling_swap(idx2, probe_qs=qs, warm_buckets=[bucket],
+                               on_step=on_step)
+    assert set(gens) == {0, 1} and all(done) and len(done) == 9
+    assert all(r.generation == 1 for r in pool)
+    entry = report[(bucket.k, bucket.n_probe)]
+    assert len(entry["replicas"]) == 3
+    for r in pool:
+        states = r.state.pred_states()
+        if entry["carried"]:
+            assert float(np.asarray(states[bucket].weight)) > 0.0
+
+
+def test_rolling_swap_resets_predictors_on_heavy_drift(corpus):
+    from repro.serving.replica import ReplicaPool
+    x, qs = corpus
+    st, bucket, _ = _serving_fixture(x, qs)
+    pool = ReplicaPool(st, 2, [K], NQ, service_est=lambda b: 1e-3)
+    for r in pool:
+        r.state.run(_mk_batch(bucket, qs))
+    rng = np.random.default_rng(9)
+    x2 = (rng.normal(size=(N, D)) * 25 + 10).astype(np.float32)
+    idx2 = search.build_pq_index(jax.random.key(1), jnp.asarray(x2), 16,
+                                 n_iter=3)
+    report = pool.rolling_swap(idx2, vectors=None, probe_qs=qs,
+                               drift_threshold=0.02)
+    entry = report[(bucket.k, bucket.n_probe)]
+    assert not entry["carried"] and entry["tv"] > 0.02
+    for r in pool:
+        assert float(np.asarray(
+            r.state.pred_states()[bucket].weight)) == 0.0
+
+
+# ---------------------------- tuned resolution under drift ------------------
+
+def test_mutable_resolves_tuned_points_with_drift_flag(corpus):
+    """build_engine passes the live churn fraction into PointStore.resolve;
+    past the threshold the resolution is flagged, warned, and attributed —
+    never a silent stale hit."""
+    from repro.tuning.knobs import KnobConfig
+    from repro.tuning.points import OperatingPoint, PointStore, \
+        corpus_fingerprint
+    x, _ = corpus
+    fp = corpus_fingerprint(jnp.asarray(x))
+    point = OperatingPoint(
+        method="ivfpq", k=K, recall_target=0.95,
+        knobs=KnobConfig(n_probe=12, n_cand=1500),
+        recall=0.97, cost_units=1.0, feasible=True,
+        corpus={"fingerprint": fp})
+    store = PointStore([point])
+    mi = mutable(x, tuned=store)
+    assert "tuned" in (mi.engine.tuned_from or "")
+    mi.insert(np.ones((N // 5, D), np.float32))   # 20% churn
+    with pytest.warns(UserWarning, match="drift"):
+        eng = mi.build_engine(mi.live_corpus()[0], mi.generation + 1)
+    assert "tuned-drifted" in eng.tuned_from
+
+
+# ---------------------------- sharded parity (multidevice) ------------------
+
+SHARDED_CHURN_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data import synthetic
+    from repro.ingest import IngestConfig, MutableIndex
+
+    rng = np.random.default_rng(0)
+    n, d, B, k = 20000, 32, 8, 2000
+    x = synthetic.clustered(rng, n, d, n_centers=64).astype(np.float32)
+    qs = synthetic.queries_from(rng, x, B).astype(np.float32)
+    mesh = jax.make_mesh((8,), ("model",))
+
+    def churn(mi):
+        ins = mi.insert(qs + 0.001)
+        first = np.asarray(mi.search(qs).ids)
+        doomed = np.unique(first[:, :5].reshape(-1))
+        doomed = doomed[doomed >= 0]
+        mi.delete(doomed)
+        mi.delete(ins[:2])
+        return set(doomed.tolist()) | set(ins[:2].tolist())
+
+    cfg = IngestConfig(segment_capacity=512)
+    kw = dict(k=k, n_clusters=64, n_probe=24, n_cand=6144, config=cfg,
+              seed=0)
+    single = MutableIndex(x, "ivfpq", **kw)
+    sharded = MutableIndex(x, "ivfpq", mesh=mesh, **kw)
+    dead_s = churn(single)
+    dead_m = churn(sharded)
+    assert dead_s == dead_m
+    r1 = np.asarray(single.search(qs).ids)
+    r2 = np.asarray(sharded.search(qs).ids)
+    for bi in range(B):
+        a = set(r1[bi].tolist()) - {-1}
+        b = set(r2[bi].tolist()) - {-1}
+        assert not (a & dead_s) and not (b & dead_m)
+        overlap = len(a & b) / k
+        assert overlap >= 0.99, (bi, overlap)
+    print("CHURNED_PARITY_OK")
+    """
+)
+
+
+@pytest.mark.multidevice
+def test_churned_corpus_parity_sharded_vs_batched():
+    """Acceptance: a churned corpus (delta segment dealt across an 8-device
+    mesh, tombstones in both tiers) returns the same top-k through the
+    sharded path as through the single-device batched path."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", SHARDED_CHURN_SCRIPT], capture_output=True,
+        text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "CHURNED_PARITY_OK" in out.stdout, (
+        out.stdout[-2000:] + "\n" + out.stderr[-3000:])

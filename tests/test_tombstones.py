@@ -1,0 +1,238 @@
+"""Tombstone lane-mask semantics (streaming-ingest deletes).
+
+The contract under test: a ``live`` mask threaded into any searcher makes
+dead lanes behave exactly like unprobed lanes — so every method's top-k on
+a tombstoned corpus equals a post-filter oracle (exact distances with dead
+rows forced to +inf, then top-k), deleted ids never surface, the ref and
+Pallas-interpret backends agree lane for lane, and the bucket-histogram
+machinery counts only live lanes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.index import engine, ivf as ivf_mod, search
+from repro.kernels import ops
+
+N, D, NQ = 6000, 32, 5
+K, C = 150, 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    x = synthetic.clustered(rng, N, D, n_centers=48)
+    qs = synthetic.queries_from(rng, x, NQ)
+    return jnp.asarray(x), jnp.asarray(qs)
+
+
+@pytest.fixture(scope="module")
+def tombstones(corpus):
+    """Corpus-row live mask deleting ~15% of rows INCLUDING each query's
+    exact top-10 (so the oracle answer provably moves)."""
+    x, qs = corpus
+    rng = np.random.default_rng(3)
+    live = np.ones(N, dtype=bool)
+    live[rng.choice(N, size=N // 7, replace=False)] = False
+    d = np.asarray(ops.l2_exact_batch(x, qs))
+    for bi in range(NQ):
+        live[np.argsort(d[bi])[:10]] = False
+    return live
+
+
+@pytest.fixture(scope="module")
+def indexes(corpus):
+    x, _ = corpus
+    key = jax.random.key(0)
+    return {
+        "ivf": ivf_mod.build(key, x, C, n_iter=4),
+        "ivfpq": search.build_pq_index(key, x, C, n_iter=4),
+        "ivfrabitq": search.build_rabitq_index(key, x, C, n_iter=4),
+    }
+
+
+def oracle_topk(corpus, live, k):
+    """Post-filter oracle: exact distances, dead rows -> +inf, top-k."""
+    x, qs = corpus
+    d = np.asarray(ops.l2_exact_batch(x, qs))
+    d = np.where(live[None, :], d, np.inf)
+    pos = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(d, pos, axis=1), pos
+
+
+def _assert_matches_oracle(res, corpus, live, k, exact_dists=True):
+    od, oids = oracle_topk(corpus, live, k)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    for bi in range(NQ):
+        got, want = set(ids[bi].tolist()) - {-1}, set(oids[bi].tolist())
+        assert got == want, (bi, sorted(got ^ want)[:10])
+        assert not (got & set(np.flatnonzero(~live).tolist()))
+        if exact_dists:
+            np.testing.assert_allclose(np.sort(dists[bi]), np.sort(od[bi]),
+                                       rtol=2e-4, atol=2e-4)
+
+
+# -------------------- exact equivalence to the oracle -----------------------
+
+@pytest.mark.parametrize("kind", ["ivf", "ivfpq", "ivfrabitq"])
+@pytest.mark.parametrize("use_bbc", [False, True])
+def test_engine_with_live_matches_post_filter_oracle(
+        corpus, tombstones, indexes, kind, use_bbc):
+    """Full-probe search with tombstones == post-filter oracle, for every
+    method x collector.  (ivf is exact in-scan; pq re-ranks every live
+    candidate at n_cand >= n_live; rabitq's second pass is
+    bound-certified.)"""
+    x, qs = corpus
+    n_live = int(tombstones.sum())
+    kw = dict(k=K, n_probe=C, use_bbc=use_bbc, m=64)
+    if kind == "ivf":
+        kw["vectors"] = x
+    if kind == "ivfpq":
+        kw["n_cand"] = n_live
+    eng = engine.SearchEngine.build(indexes[kind], **kw)
+    eng = eng.with_live(tombstones)
+    # rabitq's BBC path keeps estimator distances for bound-certified
+    # lanes (id-set exact, dists approximate); the other methods emit
+    # exact distances
+    _assert_matches_oracle(eng.search(qs), corpus, tombstones, K,
+                           exact_dists=(kind != "ivfrabitq"))
+
+
+def test_with_live_none_is_identity(corpus, indexes):
+    """with_live(None) clears the mask; results equal the frozen engine."""
+    x, qs = corpus
+    eng = engine.SearchEngine.build(indexes["ivfpq"], k=K, n_probe=C,
+                                    use_bbc=True, m=64)
+    masked = eng.with_live(np.ones(N, dtype=bool))
+    cleared = masked.with_live(None)
+    assert cleared.live is None
+    r0, r1 = eng.search(qs), cleared.search(qs)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+
+
+def test_search_one_routes_through_live_mask(corpus, tombstones, indexes):
+    """Single-query search honors tombstones (it must route through the
+    batched path — the single-query searchers don't take a mask)."""
+    x, qs = corpus
+    eng = engine.SearchEngine.build(indexes["ivfrabitq"], k=K, n_probe=C,
+                                    use_bbc=True, m=64)
+    eng = eng.with_live(tombstones)
+    res = eng.search(qs[0])
+    dead = set(np.flatnonzero(~tombstones).tolist())
+    assert not (set(np.asarray(res.ids).tolist()) & dead)
+
+
+def test_flipping_tombstones_does_not_recompile(corpus, indexes):
+    """live is traced, not static: two different masks share one trace."""
+    x, qs = corpus
+    index = indexes["ivfpq"]
+    layout = ivf_mod.flat_layout(index.ivf)
+    traces = []
+
+    @jax.jit
+    def run(qs, live):
+        traces.append(1)
+        return search.ivf_pq_search_batch(index, qs, layout, K, 8, 1024,
+                                          use_bbc=True, m=64, live=live)
+
+    rng = np.random.default_rng(0)
+    for n_dead in (50, 500):
+        live = np.ones(layout.n_flat, dtype=bool)
+        live[rng.choice(layout.n_flat, n_dead, replace=False)] = False
+        res = run(qs, jnp.asarray(live))
+        jax.block_until_ready((res.dists, res.ids))
+    assert len(traces) == 1
+
+
+# -------------------- backend parity (ref vs pallas-interpret) --------------
+
+@pytest.mark.parametrize("kind", ["ivf", "ivfpq", "ivfrabitq"])
+def test_backend_parity_under_tombstones(corpus, tombstones, indexes, kind):
+    """ref and Pallas-interpret backends return identical id sets under a
+    live mask (property: masking commutes with the backend choice)."""
+    x, qs = corpus
+    kw = dict(k=K, n_probe=C, use_bbc=True, m=64)
+    if kind == "ivf":
+        kw["vectors"] = x
+    if kind == "ivfpq":
+        kw["n_cand"] = 2048
+    results = {}
+    for backend in ("ref", "pallas"):
+        eng = engine.SearchEngine.build(indexes[kind], backend=backend, **kw)
+        results[backend] = eng.with_live(tombstones).search(qs)
+    a, b = results["ref"], results["pallas"]
+    for bi in range(NQ):
+        got = set(np.asarray(a.ids)[bi].tolist())
+        want = set(np.asarray(b.ids)[bi].tolist())
+        assert got == want, (bi, sorted(got ^ want)[:10])
+
+
+# -------------------- masked-lane histogram counts --------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_bucket_hist_counts_only_live_lanes(corpus, tombstones, indexes,
+                                            backend):
+    """The (m+1)-bucket histogram over a tombstoned lane mask (a) sums to
+    the live-lane count per query, (b) is invariant to the dead lanes'
+    distance values, and (c) agrees across backends."""
+    x, qs = corpus
+    m, n_probe = 64, C
+    index = indexes["ivf"]
+    layout = ivf_mod.flat_layout(index)
+    probed, lane_valid, _ = search._routing(index, layout, qs, n_probe)
+    stream_live = tombstones[np.clip(np.asarray(layout.order), 0, N - 1)]
+    stream_live &= np.asarray(layout.valid)
+    lv = lane_valid & jnp.asarray(stream_live)[None, :]
+    stream_vecs = x[layout.order]
+    dists = ops.l2_exact_batch(stream_vecs, qs)
+    dists = jnp.where(lv, dists, search.INF)
+    cbs = search._sample_codebooks(layout, probed, dists, 4, index.cap, K, m)
+    _, hist = ops.bucket_hist_batch(dists, lv, cbs.d_min, cbs.delta,
+                                    cbs.ew_map, m, backend=backend)
+    hist = np.asarray(hist)
+    # (a) total mass == live lanes
+    np.testing.assert_array_equal(hist.sum(axis=1),
+                                  np.asarray(lv.sum(axis=1)))
+    # (b) dead lanes' values don't matter: poison them and recompute
+    poisoned = jnp.where(lv, dists, 0.0)
+    _, hist2 = ops.bucket_hist_batch(poisoned, lv, cbs.d_min, cbs.delta,
+                                     cbs.ew_map, m, backend=backend)
+    np.testing.assert_array_equal(hist, np.asarray(hist2))
+    # (c) cross-backend agreement
+    other = "pallas" if backend == "ref" else "ref"
+    _, hist3 = ops.bucket_hist_batch(dists, lv, cbs.d_min, cbs.delta,
+                                     cbs.ew_map, m, backend=other)
+    np.testing.assert_array_equal(hist, np.asarray(hist3))
+
+
+# -------------------- searcher-level live masks (direct calls) --------------
+
+def test_ivf_search_batch_live_equals_prefiltered_corpus(corpus, tombstones,
+                                                         indexes):
+    """Direct searcher call with live= returns the same ids as physically
+    deleting the rows and searching the survivor corpus (full probe)."""
+    x, qs = corpus
+    index = indexes["ivf"]
+    layout = ivf_mod.flat_layout(index)
+    stream_live = tombstones[np.clip(np.asarray(layout.order), 0, N - 1)]
+    stream_live &= np.asarray(layout.valid)
+    res = search.ivf_search_batch(index, x, qs, layout, K, C,
+                                  live=jnp.asarray(stream_live))
+    od, oids = oracle_topk(corpus, tombstones, K)
+    for bi in range(NQ):
+        assert set(np.asarray(res.ids)[bi].tolist()) == \
+            set(oids[bi].tolist())
+
+
+def test_engine_generation_field(indexes, corpus):
+    """Engine carries the build generation for swap bookkeeping."""
+    x, _ = corpus
+    eng = engine.SearchEngine.build(indexes["ivfpq"], k=K, n_probe=8,
+                                    generation=3)
+    assert eng.generation == 3
+    assert dataclasses.replace(eng, generation=4).generation == 4

@@ -9,6 +9,7 @@ against a real tiny index so the cross-bucket clamps are exercised on the
 production path.
 """
 import json
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -182,6 +183,27 @@ def test_resolve_nearest_cell_rules():
     assert prov == "tuned-nearest"
 
 
+def test_resolve_under_corpus_drift_flags_and_warns():
+    """Past the drift threshold an exact fingerprint match is demoted to a
+    nearest-cell prior with 'tuned-drifted' attribution and a warning —
+    never a silent stale hit."""
+    store = tp.PointStore([point(fp="aaa")])
+    # below threshold: exact match behaves as before, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        p, prov = store.resolve("ivfpq", 100, corpus_fp="aaa", drift=0.05)
+    assert p is not None and prov == "tuned"
+    # past threshold: same knobs, flagged provenance, UserWarning
+    with pytest.warns(UserWarning, match="drift"):
+        p, prov = store.resolve("ivfpq", 100, corpus_fp="aaa", drift=0.2)
+    assert p is not None and prov == "tuned-drifted(20%)"
+    # drift=None (frozen corpus) never warns
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _, prov = store.resolve("ivfpq", 100, corpus_fp="aaa")
+    assert prov == "tuned"
+
+
 def test_resolve_prefers_feasible():
     store = tp.PointStore([point(n_probe=4, cost=10.0, recall=0.5,
                                  feasible=False),
@@ -280,6 +302,24 @@ def test_engine_build_reclamps_cross_bucket(tiny_index):
                                     tuned=tp.PointStore([p]))
     assert eng.n_cand >= 600 and eng.pred_count >= 600
     assert eng.pred_count <= eng.n_cand
+
+
+def test_engine_build_clamps_oversized_tuned_knobs(tiny_index):
+    # a point tuned on a LARGER corpus can name a probe width or candidate
+    # pool wider than this index's stream: nearest-cell resolution hands
+    # such a point to any smaller deployment, so build must clamp it to
+    # feasible ranges instead of letting top_k reject the width
+    p = tp.OperatingPoint(
+        method="ivfpq", k=5000, recall_target=0.95,
+        knobs=kn.KnobConfig(n_probe=244, n_cand=40_000, pred_count=20_000),
+        recall=0.97, cost_units=10.0, feasible=True,
+        corpus={"n": 60_000, "d": 128, "fingerprint": "deadbeef0000"})
+    eng = engine.SearchEngine.build(tiny_index, k=100,
+                                    tuned=tp.PointStore([p]))
+    assert eng.n_probe <= tiny_index.ivf.n_clusters
+    assert eng.n_cand <= 2000 and eng.pred_count <= eng.n_cand
+    res = eng.search_batch(jnp.zeros((2, 16), jnp.float32))
+    assert np.asarray(res.ids).shape == (2, 100)
 
 
 def test_engine_build_requires_n_probe_without_point(tiny_index):
