@@ -33,6 +33,20 @@ admission control and deadline-aware batch assembly onto AOT-warmed
   PYTHONPATH=src python -m repro.launch.serve --mode async --rate 200 \
       --deadline-ms 500 --k-choices 1000,5000 --max-batch 16
 
+``--mode net`` serves over REAL sockets: a master process (bounded
+queues, 429-style backpressure, retries, health, the exact-key result
+cache) in front of N worker subprocesses it spawns and supervises, each
+hosting a spec-built engine behind a framed Unix/TCP socket loop
+(``repro.transport``).  By default it drives a seeded Zipf trace through
+a framed client and prints a summary; ``--serve-forever`` keeps serving
+until SIGTERM/SIGINT, which triggers a graceful drain — in-flight
+requests finish, new ones are rejected with retriable ``retry_after``
+frames, workers get ``bye``, and the process exits 0.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode net --workers 4 \
+      --n 20000 --d 32 --k-choices 10,100,1000 --rate 300 \
+      --wire-faults 'drop=0.02,slow=0.1,seed=7' --record /tmp/run.jsonl
+
 The last stdout line of either mode is one machine-readable JSON summary
 (QPS, latency percentiles, shed/deadline rates, recall sample); with
 ``--check-parity`` the async mode also verifies every completed request's
@@ -306,6 +320,137 @@ def run_async(args, x, qs, index, mesh, n_probe, tuned=None):
         else 0
 
 
+def _parse_net_addr(spec: str):
+    """'' -> driver default; 'unix:/path' -> Unix socket; 'host:port' ->
+    TCP."""
+    from repro.transport.master import tcp_addr, unix_addr
+    if not spec:
+        return None
+    if spec.startswith("unix:"):
+        return unix_addr(spec[len("unix:"):])
+    host, _, port = spec.rpartition(":")
+    try:
+        return tcp_addr(host or "127.0.0.1", int(port))
+    except ValueError:
+        raise SystemExit(f"--addr {spec!r}: want 'unix:/path' or "
+                         f"'host:port'")
+
+
+def run_net(args):
+    """The multi-process socket front-end (``repro.transport``)."""
+    import signal
+    import threading
+
+    from repro.serving import faults as sv_faults
+    from repro.serving import server as sv_server
+    from repro.serving.batcher import k_ceilings
+    from repro.serving.queue import make_zipf_trace
+    from repro.serving.router import outcome_digest
+    from repro.transport.client import NetClient
+    from repro.transport.core import MasterConfig
+    from repro.transport.enginehost import build_spec, make_dataset
+    from repro.transport.master import MasterServer
+
+    ks = tuple(int(s) for s in args.k_choices.split(",")) \
+        if args.k_choices else (args.k,)
+    n_clusters = min(args.n_clusters, max(args.n // 64, 16))
+    n_probe = min(args.n_probe, n_clusters)
+    spec = build_spec(n=args.n, d=args.d, seed=args.seed, ks=ks,
+                      n_probe=n_probe, n_clusters=n_clusters)
+    wire = sv_faults.WireSchedule.parse(args.wire_faults) \
+        if args.wire_faults else None
+    cfg = MasterConfig(n_workers=args.workers, ceilings=k_ceilings(ks),
+                       cache_size=args.net_cache,
+                       hb_interval=args.hb_ms / 1e3)
+    ms = MasterServer(cfg, spec, addr=_parse_net_addr(args.addr), wire=wire,
+                      record=bool(args.record) or args.check_replay)
+    t0 = time.monotonic()
+    ms.start()
+    if not ms.wait_workers(timeout=300.0):
+        print(json.dumps({"error": "workers failed to come up"}))
+        ms.shutdown()
+        return 1
+    print(f"[serve] {args.workers} workers ready in "
+          f"{time.monotonic()-t0:.1f}s on {ms.addr}", flush=True)
+
+    want_drain = threading.Event()
+    signal.signal(signal.SIGTERM, lambda s, f: want_drain.set())
+    signal.signal(signal.SIGINT, lambda s, f: want_drain.set())
+
+    records: dict[int, dict] = {}
+    client_thread = None
+    if not args.serve_forever:
+        rng = np.random.default_rng(args.seed + 1)
+        x = make_dataset(spec)
+        pool = synthetic.queries_from(rng, x,
+                                      max(args.requests // 8, 4))
+        trace = make_zipf_trace(rng, pool, args.requests, ks,
+                                rate=args.rate,
+                                deadline=args.deadline_ms / 1e3,
+                                n_probe=n_probe)
+
+        def _drive():
+            try:
+                with NetClient(ms.addr) as c:
+                    records.update(c.run_trace(trace))
+            finally:
+                want_drain.set()
+        client_thread = threading.Thread(target=_drive, daemon=True)
+        client_thread.start()
+    else:
+        print(json.dumps({"event": "listening", "addr": ms.addr}),
+              flush=True)
+
+    while not ms.stopped:
+        if want_drain.is_set():
+            ms.drain()
+        if ms._drain_started is not None and (
+                ms.core.idle() or ms.clock.now() - ms._drain_started
+                > ms.drain_timeout):
+            ms.shutdown()
+            break
+        ms.step()
+    if client_thread is not None:
+        client_thread.join(timeout=10.0)
+
+    outcomes = ms.core.outcome_list()
+    summary = sv_server.summarize(outcomes)
+    summary.update({
+        "mode": "net", "workers": args.workers,
+        "k_choices": list(ks), "rate": args.rate,
+        "wire_faults": args.wire_faults or "",
+        "outcome_digest": outcome_digest(outcomes),
+        "net_stats": {k: v for k, v in sorted(ms.core.stats.items()) if v},
+        "cache": ms.core.cache_stats(),
+    })
+    if records:
+        done = [r for r in records.values()
+                if r["status"] in ("ok", "degraded")]
+        summary["client_completed"] = len(done)
+        lat = sorted(r["latency_s"] for r in done)
+        if lat:
+            summary["client_p99_ms"] = round(
+                1e3 * lat[min(int(0.99 * len(lat)), len(lat) - 1)], 2)
+    rc = 0
+    if args.check_replay:
+        from repro.transport.enginehost import (build_state_from_spec,
+                                                make_exec_fn)
+        from repro.transport.replay import replay_transcript
+        state, ceil = build_state_from_spec(spec)
+        res = replay_transcript(ms.transcript, cfg, state.centroids,
+                                make_exec_fn(state, ceil))
+        summary["replay_digest"] = res.digest
+        summary["replay_identical"] = \
+            res.digest == summary["outcome_digest"]
+        if not summary["replay_identical"]:
+            rc = 1
+    if args.record:
+        ms.transcript.save(args.record)
+        summary["transcript"] = args.record
+    print(json.dumps(summary))
+    return rc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=100_000)
@@ -315,10 +460,13 @@ def main():
     ap.add_argument("--n-probe", type=int, default=64)
     ap.add_argument("--n-clusters", type=int, default=316)
     ap.add_argument("--queries", type=int, default=64)
-    ap.add_argument("--mode", choices=("static", "async"), default="static",
+    ap.add_argument("--mode", choices=("static", "async", "net"),
+                    default="static",
                     help="static = fixed-batch synchronous loop; async = "
                          "deadline-aware micro-batching over an open-loop "
-                         "arrival trace (repro.serving)")
+                         "arrival trace (repro.serving); net = real "
+                         "multi-process socket front-end "
+                         "(repro.transport)")
     ap.add_argument("--batch", type=int, default=32,
                     help="[static] queries per engine call (1 = "
                          "single-query path)")
@@ -397,9 +545,38 @@ def main():
     ap.add_argument("--respawn-ms", type=float, default=50.0,
                     help="[async] supervisor respawn delay after a replica "
                          "is marked DOWN, ms (--replicas > 1)")
+    # -- net-mode knobs (--mode net) ------------------------------------------
+    ap.add_argument("--workers", type=int, default=4,
+                    help="[net] worker subprocesses to spawn and supervise")
+    ap.add_argument("--net-cache", type=int, default=256,
+                    help="[net] exact-key result cache capacity in the "
+                         "master (0 = off)")
+    ap.add_argument("--wire-faults", type=str, default="",
+                    help="[net] seeded wire-fault schedule, e.g. "
+                         "'drop=0.02,dup=0.01,slow=0.1,slow_ms=2:8,"
+                         "disconnect=0.005,seed=7'")
+    ap.add_argument("--record", type=str, default="",
+                    help="[net] write the run's record/replay transcript "
+                         "to this path")
+    ap.add_argument("--check-replay", action="store_true",
+                    help="[net] after the run, replay the transcript "
+                         "in-process and exit non-zero unless the "
+                         "outcome digest is byte-identical")
+    ap.add_argument("--serve-forever", action="store_true",
+                    help="[net] keep serving until SIGTERM/SIGINT, then "
+                         "drain gracefully and exit 0")
+    ap.add_argument("--addr", type=str, default="",
+                    help="[net] listen address: 'unix:/path' or "
+                         "'host:port' (default: a Unix socket in a "
+                         "fresh run dir)")
+    ap.add_argument("--requests", type=int, default=200,
+                    help="[net] trace length for the built-in driver")
     ap.add_argument("--seed", type=int, default=0,
                     help="trace/corpus RNG seed")
     args = ap.parse_args()
+
+    if args.mode == "net":
+        sys.exit(run_net(args))
 
     mesh = None
     if args.shards > 1:

@@ -6,14 +6,18 @@ from repro.serving.admission import (ACCEPT, DEGRADE, SHED, # noqa: F401
 from repro.serving.batcher import (Batch, MicroBatcher,      # noqa: F401
                                    ShapeBucket, assemble, bucket_of,
                                    k_ceilings)
+from repro.serving.clock import (Clock, ManualClock,        # noqa: F401
+                                 SystemClock)
 from repro.serving.faults import (Fault, FaultSchedule,      # noqa: F401
+                                  WireDecision, WireSchedule,
                                   corrupt_payload, payload_checksum)
 from repro.serving.health import HealthView                  # noqa: F401
 from repro.serving.queue import (Request, RequestQueue,      # noqa: F401
                                  bursty_arrivals, make_trace,
-                                 poisson_arrivals)
+                                 make_zipf_trace, poisson_arrivals,
+                                 zipf_query_ids)
 from repro.serving.replica import (Replica, ReplicaPool,     # noqa: F401
-                                   ReplicaResponse)
+                                   ReplicaResponse, WorkingSet)
 from repro.serving.router import (HedgePolicy, ReplicaServer,  # noqa: F401
                                   RetryPolicy, RouteDecision, Router,
                                   outcome_digest)

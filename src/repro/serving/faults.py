@@ -40,6 +40,7 @@ and ``benchmarks/bench_failover.py`` gate on.
 """
 from __future__ import annotations
 
+import hashlib
 import zlib
 from dataclasses import dataclass
 from typing import Iterable, Sequence
@@ -51,6 +52,33 @@ STALL = "stall"
 SLOW = "slow"
 CORRUPT = "corrupt"
 KINDS = (CRASH, STALL, SLOW, CORRUPT)
+
+# -- wire-fault taxonomy (the transport tier's failure surface) --------------
+#
+# Process faults above model what a REPLICA does wrong; these model what the
+# NETWORK does wrong, applied per frame at the proxy shim between the master
+# and each worker connection (repro.transport):
+#
+# ==========  ==============================================================
+# kind        effect at the shim
+# ==========  ==============================================================
+# drop        the frame silently never arrives (attempt timeouts recover it)
+# dup         the frame is delivered twice (receivers must be idempotent;
+#             the duplicate response is counted, never double-completed)
+# slow        delivery is delayed by base + jitter seconds (slow network;
+#             the per-attempt timeout and p99 gates are the defense)
+# truncate    outbound only: a partial prefix of the frame's bytes is
+#             written and the connection closed — the peer's frame reader
+#             sees EOF mid-frame (the partial-write case)
+# disconnect  the connection closes before the frame is delivered
+#             (disconnect-mid-response when it hits a response frame)
+# ==========  ==============================================================
+WIRE_DROP = "drop"
+WIRE_DUP = "dup"
+WIRE_SLOW = "slow"
+WIRE_TRUNCATE = "truncate"
+WIRE_DISCONNECT = "disconnect"
+WIRE_KINDS = (WIRE_DROP, WIRE_DUP, WIRE_SLOW, WIRE_TRUNCATE, WIRE_DISCONNECT)
 
 
 @dataclass(frozen=True, order=True)
@@ -211,3 +239,122 @@ def corrupt_payload(ids: np.ndarray) -> np.ndarray:
     plausible-looking, definitely-wrong results (the worst case for a
     router that trusts payloads)."""
     return np.asarray(ids) ^ 1
+
+
+# --------------------------------------------------------------------------
+# Wire faults (the transport shim's schedule)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WireDecision:
+    """The shim's verdict for one frame: a fault kind (or None = deliver
+    cleanly) plus the injected delay for ``slow``."""
+
+    kind: str | None = None
+    delay: float = 0.0
+
+
+class WireSchedule:
+    """Seeded per-frame wire-fault decisions, independent of wall time.
+
+    A decision is a pure hash of ``(seed, worker, direction, seq)`` where
+    ``seq`` is the per-(worker, direction) frame counter — NOT the clock —
+    so the schedule commits to "the 7th frame up to worker 2 is dropped"
+    before the run starts.  Two live runs under real-time jitter make the
+    same per-frame calls, and the transcript a live run records needs to
+    store only the decisions actually taken; nothing about the schedule
+    depends on when a frame happened to be ready.
+
+    Rates are independent probabilities per kind (their sum must stay
+    <= 1; the remainder is clean delivery).  ``slow`` delays by
+    ``slow_base + u * slow_jitter`` with ``u`` from the same hash, giving
+    seeded latency jitter.
+    """
+
+    def __init__(self, *, seed: int = 0, drop: float = 0.0, dup: float = 0.0,
+                 slow: float = 0.0, truncate: float = 0.0,
+                 disconnect: float = 0.0, slow_base: float = 0.002,
+                 slow_jitter: float = 0.004):
+        rates = {WIRE_DROP: float(drop), WIRE_DUP: float(dup),
+                 WIRE_SLOW: float(slow), WIRE_TRUNCATE: float(truncate),
+                 WIRE_DISCONNECT: float(disconnect)}
+        for kind, p in rates.items():
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{kind} rate must be in [0, 1], got {p}")
+        if sum(rates.values()) > 1.0:
+            raise ValueError(
+                f"wire-fault rates must sum to <= 1, got {rates}")
+        if slow_base < 0 or slow_jitter < 0:
+            raise ValueError("slow_base / slow_jitter must be >= 0")
+        self.seed = int(seed)
+        self.rates = rates
+        self.slow_base = float(slow_base)
+        self.slow_jitter = float(slow_jitter)
+
+    def __bool__(self) -> bool:
+        return any(p > 0 for p in self.rates.values())
+
+    def _uniforms(self, worker: int, direction: str,
+                  seq: int) -> tuple[float, float]:
+        h = hashlib.sha256(
+            f"{self.seed}|{worker}|{direction}|{seq}".encode()).digest()
+        u1 = int.from_bytes(h[:8], "big") / 2.0 ** 64
+        u2 = int.from_bytes(h[8:16], "big") / 2.0 ** 64
+        return u1, u2
+
+    def decide(self, worker: int, direction: str, seq: int) -> WireDecision:
+        """Fault verdict for frame ``seq`` in ``direction`` ("up" =
+        master->worker, "down" = worker->master) on ``worker``'s link."""
+        if direction not in ("up", "down"):
+            raise ValueError(f"direction must be 'up' or 'down', "
+                             f"got {direction!r}")
+        u1, u2 = self._uniforms(worker, direction, seq)
+        acc = 0.0
+        for kind in WIRE_KINDS:
+            acc += self.rates[kind]
+            if u1 < acc:
+                delay = (self.slow_base + u2 * self.slow_jitter
+                         if kind == WIRE_SLOW else 0.0)
+                return WireDecision(kind=kind, delay=delay)
+        return WireDecision()
+
+    # -- construction / reporting -------------------------------------------
+
+    @staticmethod
+    def parse(spec: str) -> "WireSchedule":
+        """Parse a ``--wire-faults`` spec string.
+
+        Grammar: comma-separated ``key=value`` — rate keys are the kinds
+        (``drop=0.02,slow=0.1,disconnect=0.01``), ``slow_ms=BASE:JITTER``
+        sets the slow-delay model in milliseconds, ``seed=N`` the decision
+        seed.  Empty spec = no wire faults."""
+        kw: dict = {}
+        for item in filter(None, (p.strip() for p in spec.split(","))):
+            try:
+                key, val = item.split("=", 1)
+            except ValueError as e:
+                raise ValueError(
+                    f"bad wire-fault item {item!r}: expected key=value") \
+                    from e
+            key = key.strip()
+            if key == "seed":
+                kw["seed"] = int(val)
+            elif key == "slow_ms":
+                base, _, jitter = val.partition(":")
+                kw["slow_base"] = float(base) * 1e-3
+                kw["slow_jitter"] = float(jitter or 0.0) * 1e-3
+            elif key in WIRE_KINDS:
+                kw[key] = float(val)
+            else:
+                raise ValueError(
+                    f"unknown wire-fault key {key!r}; expected one of "
+                    f"{WIRE_KINDS + ('slow_ms', 'seed')}")
+        return WireSchedule(**kw)
+
+    def to_dict(self) -> dict:
+        """Transcript-header form: everything needed to reconstruct the
+        schedule (replay never re-decides, but the header documents what
+        the live run was subjected to)."""
+        return {"seed": self.seed, **self.rates,
+                "slow_base": self.slow_base, "slow_jitter": self.slow_jitter}

@@ -18,8 +18,17 @@ only know what is OBSERVABLE from outside the service boundary:
 
 ``status`` is a pure function of the recorded observations and ``now``, so
 seeded fault runs replay the exact same health transitions.
+
+Time handling: every method takes an explicit ``now`` — the discrete-event
+loops own their timeline.  Wall-clock callers (the socket front-end in
+``repro.transport``) instead inject a monotonic :class:`~.clock.Clock` at
+construction and omit ``now``; the two never mix inside one view, so the
+identical code path serves both regimes without a single direct
+``time.time()`` call.
 """
 from __future__ import annotations
+
+from repro.serving.clock import Clock
 
 HEALTHY = "healthy"
 SUSPECT = "suspect"
@@ -31,7 +40,7 @@ class HealthView:
 
     def __init__(self, n_replicas: int, *, hb_interval: float = 0.05,
                  miss_factor: float = 3.0, anomaly_factor: float = 3.0,
-                 anomaly_decay: float = 0.5):
+                 anomaly_decay: float = 0.5, clock: Clock | None = None):
         if n_replicas < 1:
             raise ValueError(f"need >= 1 replica, got {n_replicas}")
         if miss_factor <= 1.0:
@@ -41,17 +50,27 @@ class HealthView:
         self.miss_factor = float(miss_factor)
         self.anomaly_factor = float(anomaly_factor)
         self.anomaly_decay = float(anomaly_decay)
+        self.clock = clock
         self._last_beat = [0.0] * n_replicas
         self._ratio: list[float | None] = [None] * n_replicas
 
+    def _now(self, now: float | None) -> float:
+        if now is not None:
+            return now
+        if self.clock is None:
+            raise ValueError(
+                "HealthView needs an explicit `now` unless a clock was "
+                "injected at construction")
+        return self.clock.now()
+
     # -- observations --------------------------------------------------------
 
-    def start(self, now: float) -> None:
+    def start(self, now: float | None = None) -> None:
         """Mark every replica as freshly alive (server start)."""
-        self._last_beat = [now] * self.n_replicas
+        self._last_beat = [self._now(now)] * self.n_replicas
 
-    def beat(self, rid: int, now: float) -> None:
-        self._last_beat[rid] = max(self._last_beat[rid], now)
+    def beat(self, rid: int, now: float | None = None) -> None:
+        self._last_beat[rid] = max(self._last_beat[rid], self._now(now))
 
     def observe(self, rid: int, seconds: float, baseline: float) -> None:
         """Fold one completed batch's measured service time into the
@@ -62,33 +81,36 @@ class HealthView:
         self._ratio[rid] = ratio if prev is None else \
             self.anomaly_decay * prev + (1 - self.anomaly_decay) * ratio
 
-    def reset(self, rid: int, now: float) -> None:
+    def reset(self, rid: int, now: float | None = None) -> None:
         """Respawn: the replica is a fresh process — history is gone."""
-        self._last_beat[rid] = now
+        self._last_beat[rid] = self._now(now)
         self._ratio[rid] = None
 
     # -- the view ------------------------------------------------------------
 
-    def beat_age(self, rid: int, now: float) -> float:
-        return now - self._last_beat[rid]
+    def beat_age(self, rid: int, now: float | None = None) -> float:
+        return self._now(now) - self._last_beat[rid]
 
     def anomaly(self, rid: int) -> float:
         """Current service-time ratio EMA (1.0 until first observation)."""
         r = self._ratio[rid]
         return 1.0 if r is None else r
 
-    def status(self, rid: int, now: float) -> str:
+    def status(self, rid: int, now: float | None = None) -> str:
+        now = self._now(now)
         if self.beat_age(rid, now) > self.miss_factor * self.hb_interval:
             return DOWN
         if self.anomaly(rid) > self.anomaly_factor:
             return SUSPECT
         return HEALTHY
 
-    def healthy(self, now: float) -> list[int]:
+    def healthy(self, now: float | None = None) -> list[int]:
+        now = self._now(now)
         return [r for r in range(self.n_replicas)
                 if self.status(r, now) == HEALTHY]
 
-    def alive(self, now: float) -> list[int]:
+    def alive(self, now: float | None = None) -> list[int]:
         """Replicas not conclusively dead — the brownout candidate set."""
+        now = self._now(now)
         return [r for r in range(self.n_replicas)
                 if self.status(r, now) != DOWN]

@@ -59,6 +59,22 @@ class Request:
         if self.k <= 0:
             raise ValueError(
                 f"request {self.rid}: k must be >= 1, got {self.k}")
+        # the embedding itself is untrusted input at the transport boundary:
+        # a NaN/Inf query poisons every distance it touches (NaN propagates
+        # through the whole top-k selection), so it must die here with a
+        # typed error instead of surfacing as garbage results downstream
+        q = np.asarray(self.q)
+        if q.ndim != 1 or q.size == 0:
+            raise ValueError(
+                f"request {self.rid}: q must be a non-empty 1-D vector, "
+                f"got shape {q.shape}")
+        if not np.issubdtype(q.dtype, np.floating) and \
+                not np.issubdtype(q.dtype, np.integer):
+            raise ValueError(
+                f"request {self.rid}: q must be numeric, got dtype {q.dtype}")
+        if not np.all(np.isfinite(q)):
+            raise ValueError(
+                f"request {self.rid}: q must be finite (no NaN/Inf)")
         if self.n_probe <= 0:
             raise ValueError(
                 f"request {self.rid}: n_probe must be >= 1, "
@@ -220,5 +236,56 @@ def make_trace(
                 n_probe=n_probe, arrival=float(times[i]),
                 deadline=float(times[i]) + deadline,
                 recall_target=recall_target)
+        for i in range(n)
+    ]
+
+
+def zipf_query_ids(rng: np.random.Generator, n: int, pool: int,
+                   alpha: float = 1.1) -> np.ndarray:
+    """``n`` draws from a Zipf(``alpha``) distribution over a pool of
+    ``pool`` distinct queries (rank-frequency, rank 0 hottest).
+
+    Real query streams are head-heavy — the ANN-workload analyses the
+    result-cache ISSUE cites report Zipf-like repeat rates — and an
+    exact-key result cache only pays off under exactly this skew.  The
+    draw is explicit inverse-CDF over the truncated support (not
+    ``rng.zipf``, whose support is unbounded and whose tail would need
+    rejection), so identical (seed, n, pool, alpha) ⇒ identical stream."""
+    if pool < 1:
+        raise ValueError(f"pool must be >= 1, got {pool}")
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    weights = 1.0 / np.power(np.arange(1, pool + 1, dtype=np.float64), alpha)
+    cdf = np.cumsum(weights / weights.sum())
+    return np.searchsorted(cdf, rng.random(n), side="right").astype(np.int64)
+
+
+def make_zipf_trace(
+    rng: np.random.Generator,
+    pool_queries: np.ndarray,       # (pool, d) distinct query vectors
+    n: int,
+    ks: int | Sequence[int],
+    *,
+    rate: float,
+    deadline: float,
+    n_probe: int,
+    alpha: float = 1.1,
+    t0: float = 0.0,
+) -> list[Request]:
+    """Seeded head-heavy trace: ``n`` Poisson arrivals whose query vectors
+    repeat from ``pool_queries`` with Zipf(``alpha``) rank-frequency.  ``k``
+    is sampled per POOL ENTRY (not per request), so a repeated query repeats
+    with the same retrieval parameters — the exact-key regime a result
+    cache can serve."""
+    pool = len(pool_queries)
+    picks = zipf_query_ids(rng, n, pool, alpha)
+    times = poisson_arrivals(rng, n, rate, t0)
+    ks_pool = (np.full(pool, ks, np.int64) if np.isscalar(ks)
+               else np.asarray(rng.choice(np.asarray(ks, np.int64), pool)))
+    return [
+        Request(rid=i, q=np.asarray(pool_queries[picks[i]]),
+                k=int(ks_pool[picks[i]]), n_probe=n_probe,
+                arrival=float(times[i]),
+                deadline=float(times[i]) + deadline)
         for i in range(n)
     ]

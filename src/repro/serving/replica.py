@@ -57,6 +57,47 @@ def _pred_key(bucket: ShapeBucket) -> str:
     return f"k{bucket.k}_b{bucket.batch}_np{bucket.n_probe}"
 
 
+class WorkingSet:
+    """Decayed probed-centroid working set: what is warm in one serving
+    unit's caches and predictor.
+
+    Shared by the in-process :class:`Replica` and the transport tier's
+    worker handles (``repro.transport.core``) — both expose the same
+    ``affinity`` surface to the one :class:`~repro.serving.router.Router`,
+    so routing behaves identically whether the serving unit is a thread-on-
+    a-timeline or a process-on-a-socket.  Weights decay exponentially with
+    time constant ``decay`` seconds; entries below 1e-4 are dropped."""
+
+    def __init__(self, decay: float = 2.0, t0: float = 0.0):
+        self.decay = float(decay)
+        self._ws: dict[int, float] = {}     # centroid id -> decayed weight
+        self._t = float(t0)
+
+    def _decay_to(self, now: float) -> None:
+        dt = now - self._t
+        if dt > 0:
+            f = float(np.exp(-dt / max(self.decay, 1e-9)))
+            self._ws = {c: w * f for c, w in self._ws.items() if w * f > 1e-4}
+        self._t = now
+
+    def note(self, cluster_ids: np.ndarray, now: float) -> None:
+        """Fold a completed request/batch's probed centroids in."""
+        self._decay_to(now)
+        for c in np.asarray(cluster_ids).reshape(-1).tolist():
+            self._ws[int(c)] = self._ws.get(int(c), 0.0) + 1.0
+
+    def score(self, cluster_ids: np.ndarray, now: float) -> float:
+        """Overlap between a query's top routed centroids and this set."""
+        self._decay_to(now)
+        return float(sum(self._ws.get(int(c), 0.0)
+                         for c in np.asarray(cluster_ids).reshape(-1)))
+
+    def reset(self, now: float) -> None:
+        """Fresh process: the working set is gone."""
+        self._ws = {}
+        self._t = now
+
+
 class Replica:
     """One serving replica: state fork + batcher lanes + working set."""
 
@@ -71,8 +112,7 @@ class Replica:
         self.busy_until_est = 0.0           # EMA-estimated completion time
         self.respawned_at = -np.inf         # last supervisor restart
         self.served_batches = 0
-        self._ws: dict[int, float] = {}     # centroid id -> decayed weight
-        self._ws_t = 0.0
+        self.ws = WorkingSet(decay=ws_decay)
 
     # -- the service boundary (fault injection lives here) -------------------
 
@@ -127,26 +167,15 @@ class Replica:
         running = self.in_flight.n_real if self.in_flight else 0
         return self.batcher.pending() + waiting + running
 
-    def _decay_ws(self, now: float) -> None:
-        dt = now - self._ws_t
-        if dt > 0:
-            f = float(np.exp(-dt / max(self.ws_decay, 1e-9)))
-            self._ws = {c: w * f for c, w in self._ws.items() if w * f > 1e-4}
-        self._ws_t = now
-
     def note_probed(self, cluster_ids: np.ndarray, now: float) -> None:
         """Fold a completed batch's probed centroids into the decayed
         working set (what is warm in this replica's caches and predictor)."""
-        self._decay_ws(now)
-        for c in np.asarray(cluster_ids).reshape(-1).tolist():
-            self._ws[int(c)] = self._ws.get(int(c), 0.0) + 1.0
+        self.ws.note(cluster_ids, now)
 
     def affinity(self, cluster_ids: np.ndarray, now: float) -> float:
         """Overlap score between a query's top routed centroids and this
         replica's recent working set."""
-        self._decay_ws(now)
-        return float(sum(self._ws.get(int(c), 0.0)
-                         for c in np.asarray(cluster_ids).reshape(-1)))
+        return self.ws.score(cluster_ids, now)
 
     @property
     def generation(self) -> int:
@@ -175,8 +204,7 @@ class Replica:
         self.in_flight = None
         self.busy_until_est = now
         self.respawned_at = now
-        self._ws = {}
-        self._ws_t = now
+        self.ws.reset(now)
 
 
 class ReplicaPool:

@@ -66,15 +66,46 @@ from repro.serving.state import ServingState
 
 @dataclass(frozen=True)
 class RetryPolicy:
-    """Timeout + capped-exponential-backoff retry knobs."""
+    """Timeout + capped-exponential-backoff retry knobs.
+
+    Two timeout regimes share the policy:
+
+    * ``relative=False`` (the discrete-event tier's default) — an attempt
+      times out at ``deadline + timeout_mult * est``: the micro-batcher may
+      legitimately hold a request until just before its deadline, so only
+      overshooting the deadline itself is evidence of failure.
+    * ``relative=True`` (the socket front-end) — an attempt times out at
+      ``now + timeout_mult * est``, TCP-RTO style: transport dispatch is
+      immediate (no lane wait), so a response more than a few service times
+      late means the frame was dropped or the worker is gone, and waiting
+      for the deadline would let one lost frame eat the whole budget.
+
+    ``clock`` is the optional injected monotonic clock for wall-clock
+    callers that omit ``now`` (``compare=False``: two policies with the
+    same knobs are the same policy regardless of who tells them the time).
+    """
 
     max_retries: int = 2        # re-dispatches after the primary attempt
     timeout_mult: float = 4.0   # attempt times out at deadline + mult * est
     backoff_base: float = 0.01  # first retry delay (seconds)
     backoff_cap: float = 0.25   # exponential backoff ceiling (seconds)
+    relative: bool = False      # time out relative to dispatch, not deadline
+    clock: "object | None" = field(default=None, compare=False)
 
-    def timeout_at(self, now: float, deadline: float, est: float) -> float:
-        return max(now, deadline) + self.timeout_mult * max(est, 1e-6)
+    def _now(self, now: float | None) -> float:
+        if now is not None:
+            return now
+        if self.clock is None:
+            raise ValueError(
+                "RetryPolicy needs an explicit `now` unless a clock was "
+                "injected at construction")
+        return self.clock.now()
+
+    def timeout_at(self, now: float | None, deadline: float,
+                   est: float) -> float:
+        now = self._now(now)
+        base = now if self.relative else max(now, deadline)
+        return base + self.timeout_mult * max(est, 1e-6)
 
     def backoff(self, attempt: int) -> float:
         """Delay before retry ``attempt`` (1-based), capped exponential."""

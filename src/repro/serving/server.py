@@ -47,6 +47,14 @@ SHED = "shed"
 # but it counts separately so "completed + shed + failed == offered" is
 # checkable (the chaos-smoke conservation gate).
 FAILED = "failed"
+# refused at the front door: backpressure (bounded accept/inflight queues
+# full) or a draining server — the caller got an explicit 429-style
+# RETRY_AFTER and may resubmit.  Distinct from SHED (admitted, then dropped
+# for deadline infeasibility): a rejected request consumed no scheduling
+# budget and carries no failure signal about the backend.  Only the
+# transport tier (repro.transport) emits it; with it the conservation
+# identity reads completed + shed + failed + rejected == offered.
+REJECTED = "rejected"
 
 
 def trim_topk(dists: np.ndarray, ids: np.ndarray,
@@ -93,7 +101,7 @@ class Outcome:
     """Terminal record for one request."""
 
     request: Request
-    status: str                     # OK | DEGRADED | SHED | FAILED
+    status: str                     # OK | DEGRADED | SHED | FAILED | REJECTED
     bucket: ShapeBucket | None
     ids: np.ndarray | None          # (k_effective,) — None when shed/failed
     dists: np.ndarray | None
@@ -307,8 +315,8 @@ def summarize(outcomes: Sequence[Outcome],
     latency percentiles over completed requests, per-outcome counts AND
     per-outcome p50/p99 (``by_status``), shed / degrade / failure /
     deadline-met rates, retry / hedge counts, and the request-conservation
-    check (completed + shed + failed == offered — zero unaccounted
-    requests).  Degraded and retried traffic is surfaced explicitly instead
+    check (completed + shed + failed + rejected == offered — zero
+    unaccounted requests).  Degraded and retried traffic is surfaced explicitly instead
     of hiding inside the headline QPS number.  Passing the ``state`` that
     served the trace adds ``operating_points``: which tuned operating point
     (or "hand-tuned fallback") each engine bucket's knobs came from."""
@@ -316,6 +324,7 @@ def summarize(outcomes: Sequence[Outcome],
     done = [o for o in outcomes if o.completed]
     shed = [o for o in outcomes if o.status == SHED]
     failed = [o for o in outcomes if o.status == FAILED]
+    rejected = [o for o in outcomes if o.status == REJECTED]
     t0 = min(o.request.arrival for o in outcomes) if outcomes else 0.0
     t1 = max(o.t_done for o in done) if done else t0
     span = max(t1 - t0, 1e-9)
@@ -327,11 +336,13 @@ def summarize(outcomes: Sequence[Outcome],
         "completed": len(done),
         "shed": len(shed),
         "failed": len(failed),
+        "rejected": len(rejected),
         "degraded": sum(o.status == DEGRADED for o in outcomes),
         "retried": sum(o.retries > 0 for o in outcomes),
         "hedged": sum(o.hedged for o in outcomes),
         # zero unaccounted requests: every offered request is terminal
-        "conserved": bool(len(done) + len(shed) + len(failed) == n),
+        "conserved": bool(len(done) + len(shed) + len(failed)
+                          + len(rejected) == n),
         "qps": round(len(done) / span, 2),
         "p50_ms": _pctiles(done)["p50_ms"],
         "p99_ms": _pctiles(done)["p99_ms"],
@@ -341,6 +352,7 @@ def summarize(outcomes: Sequence[Outcome],
         },
         "shed_rate": round(len(shed) / max(n, 1), 4),
         "failed_rate": round(len(failed) / max(n, 1), 4),
+        "rejected_rate": round(len(rejected) / max(n, 1), 4),
         "degraded_rate": round(
             sum(o.status == DEGRADED for o in outcomes) / max(n, 1), 4),
         "deadline_met_rate": round(

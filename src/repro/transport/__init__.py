@@ -1,0 +1,43 @@
+"""Multi-process serving front-end: real sockets under the PR 6 brain.
+
+The discrete-event tier (``repro.serving``) owns the serving *policy* —
+admission, routing, health, retries, degradation.  This package owns the
+*mechanism*: a master process speaking length-prefixed msgpack-or-JSON
+frames over TCP / Unix sockets to N worker subprocesses, with bounded
+queues and explicit backpressure, per-connection timeouts, capped-backoff
+reconnects, heartbeats over the real wire, worker respawn, a seeded wire-
+fault shim, and a record/replay transcript that keeps ``outcome_digest``
+byte-identical between a live socket run and its in-process replay.
+
+Layering (each module usable without the ones after it):
+
+* ``frames``  — wire format: length-prefixed frames, codecs, array packing
+* ``cache``   — exact-key LRU result + routing caches (the Zipf head)
+* ``core``    — :class:`MasterCore`, the pure event-driven master state
+  machine (never reads a clock; all decisions from event timestamps)
+* ``wire``    — the transcript format + shim bookkeeping shared by the
+  live driver, the simulator, and replay
+* ``sim``     — a virtual-clock loopback driver over ``MasterCore`` for
+  deterministic fuzz / property tests (no processes, no sockets)
+* ``worker``  — the worker subprocess: spec-built engine behind a framed
+  request loop (``python -m repro.transport.worker``)
+* ``master``  — the live socket driver: selectors loop, supervisor,
+  fault shim, recording
+* ``replay``  — feed a recorded transcript back through ``MasterCore``
+  with payload re-execution + checksum verification
+* ``client``  — a small framed client used by benches, tests, and
+  ``launch/serve.py --mode net``
+"""
+from repro.transport.cache import LruCache, ResultCache     # noqa: F401
+from repro.transport.core import MasterCore, MasterConfig   # noqa: F401
+from repro.transport.frames import (FrameError, FrameReader,  # noqa: F401
+                                    encode_frame, pack_array,
+                                    unpack_array)
+from repro.transport.replay import (ReplayError,            # noqa: F401
+                                    replay_transcript)
+from repro.transport.sim import LoopbackSim                 # noqa: F401
+from repro.transport.wire import Transcript, WireShim       # noqa: F401
+
+# enginehost / worker / master / client import jax and sockets; they are
+# imported explicitly by their users so this package stays light
+

@@ -12,6 +12,12 @@ Two properties over random traces x seeded fault schedules:
 * **request conservation** — retries and hedges never duplicate or drop a
   request id: ``summarize()`` sees every offered rid exactly once, with
   completed + shed + failed == offered.
+
+PR 10 adds the transport-tier analogue: random traces x seeded *wire*
+fault schedules (frame drop / dup / slow / truncate / disconnect, plus a
+worker kill) through the loopback transport sim, asserting the extended
+conservation law completed + shed + failed + rejected == offered and
+run-to-run digest determinism.
 """
 import json
 
@@ -86,3 +92,96 @@ def test_property_retry_hedge_conserves_request_ids(
             assert o.ids is not None and len(o.ids) == o.k_effective
         else:
             assert o.ids is None and o.dists is None
+
+
+# --------------------------------------------------------------------------
+# transport tier (PR 10): conservation under wire faults
+# --------------------------------------------------------------------------
+
+from repro.serving.batcher import k_ceilings                # noqa: E402
+from repro.serving.queue import make_zipf_trace             # noqa: E402
+from repro.transport.core import MasterConfig, MasterCore   # noqa: E402
+from repro.transport.sim import LoopbackSim                 # noqa: E402
+
+_T_KS = (10, 100)
+
+
+def _t_exec(q, k, n_probe):
+    h = int(np.abs(np.asarray(q, dtype=np.float64)).sum() * 1e3) % 997
+    return (np.arange(k, dtype=np.float32) * 0.01 + h % 7,
+            np.arange(k, dtype=np.int64) + h)
+
+
+def _t_run(trace_seed, wire_seed, n_workers, n_req, drop, dup, slow,
+           truncate, disconnect, kill):
+    rng = np.random.default_rng(trace_seed)
+    centroids = rng.standard_normal((16, 8)).astype(np.float32)
+    pool = rng.standard_normal((24, 8)).astype(np.float32)
+    trace = make_zipf_trace(rng, pool, n_req, _T_KS, rate=400.0,
+                            deadline=0.5, n_probe=4)
+    wire = flt.WireSchedule(seed=wire_seed, drop=drop, dup=dup, slow=slow,
+                            truncate=truncate, disconnect=disconnect)
+    core = MasterCore(MasterConfig(n_workers=n_workers,
+                                   ceilings=k_ceilings(_T_KS)), centroids)
+    sim = LoopbackSim(core, _t_exec, lambda b: 0.001 + b.k * 1e-6,
+                      wire=wire,
+                      kill_at={0: 0.05} if kill else None)
+    return trace, core, sim.run(trace)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    trace_seed=st.integers(0, 2**31 - 1),
+    wire_seed=st.integers(0, 2**31 - 1),
+    n_workers=st.integers(1, 4),
+    n_req=st.integers(8, 60),
+    drop=st.floats(0.0, 0.1),
+    dup=st.floats(0.0, 0.05),
+    slow=st.floats(0.0, 0.2),
+    truncate=st.floats(0.0, 0.03),
+    disconnect=st.floats(0.0, 0.03),
+    kill=st.booleans(),
+)
+def test_property_transport_conserves_under_wire_faults(
+        trace_seed, wire_seed, n_workers, n_req, drop, dup, slow,
+        truncate, disconnect, kill):
+    """Whatever the wire does — dropped frames, duplicate delivery, seeded
+    latency jitter, truncation-induced disconnects, a worker kill — every
+    offered request terminates exactly once:
+    completed + shed + failed + rejected == offered."""
+    trace, core, outcomes = _t_run(
+        trace_seed, wire_seed, n_workers, n_req, drop, dup, slow,
+        truncate, disconnect, kill)
+    rids = [o.request.rid for o in outcomes]
+    assert len(rids) == len(set(rids)) == len(trace)
+    s = sv.summarize(outcomes)
+    assert s["conserved"], s
+    assert s["completed"] + s["shed"] + s["failed"] + s["rejected"] \
+        == len(trace)
+    # duplicate deliveries never double-reply or double-count
+    assert core.stats["offered"] == len(trace)
+    for o in outcomes:
+        if o.status in (sv.OK, sv.DEGRADED):
+            d, i = _t_exec(o.request.q, o.request.k, o.request.n_probe)
+            np.testing.assert_array_equal(o.ids, i)
+        else:
+            assert o.ids is None and o.dists is None
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    trace_seed=st.integers(0, 2**31 - 1),
+    wire_seed=st.integers(0, 2**31 - 1),
+    n_req=st.integers(8, 40),
+)
+def test_property_transport_faulted_run_is_deterministic(
+        trace_seed, wire_seed, n_req):
+    """Same trace + same wire seed => byte-identical outcome digest and
+    identical decision log, faults and all."""
+    a = _t_run(trace_seed, wire_seed, 3, n_req, 0.05, 0.02, 0.1, 0.02,
+               0.02, True)
+    b = _t_run(trace_seed, wire_seed, 3, n_req, 0.05, 0.02, 0.1, 0.02,
+               0.02, True)
+    assert outcome_digest(a[2]) == outcome_digest(b[2])
+    assert a[1].assignments == b[1].assignments
+    assert a[1].stats == b[1].stats

@@ -1,0 +1,552 @@
+"""Unit + property tests for the transport tier (no sockets, no jax).
+
+Everything here runs against the pure pieces: the frame codec (including
+a deterministic corruption fuzz over real encoded frames), the LRU
+caches, the injectable clocks, the seeded wire-fault schedule, and the
+``MasterCore`` state machine driven through the virtual-clock
+``LoopbackSim`` — conservation, backpressure, draining, caching,
+corruption recovery, and sim-level record/replay digest identity.
+The real-socket integration tests live in test_transport_net.py.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import faults as flt
+from repro.serving import server as srv
+from repro.serving.batcher import k_ceilings
+from repro.serving.clock import ManualClock, SystemClock
+from repro.serving.health import DOWN, HEALTHY, HealthView
+from repro.serving.queue import Request, make_zipf_trace, zipf_query_ids
+from repro.serving.router import RetryPolicy, outcome_digest
+from repro.transport import frames
+from repro.transport.cache import LruCache, ResultCache, RouteMemo
+from repro.transport.core import MasterConfig, MasterCore
+from repro.transport.replay import replay_transcript
+from repro.transport.sim import LoopbackSim
+from repro.transport.wire import Transcript, WireShim
+
+CODECS = ["json"] + (["msgpack"] if frames.msgpack is not None else [])
+
+
+# --------------------------------------------------------------------------
+# frames
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_frame_roundtrip(codec):
+    frame = {"kind": "req", "rid": 7, "k": 100, "n_probe": 8,
+             "q": frames.pack_array(np.arange(6, dtype=np.float32)),
+             "note": "héllo"}
+    data = frames.encode_frame(frame, codec)
+    reader = frames.FrameReader()
+    out = reader.feed(data)
+    assert len(out) == 1
+    got = out[0]
+    assert got["kind"] == "req" and got["rid"] == 7
+    arr = frames.unpack_array(got["q"])
+    np.testing.assert_array_equal(arr, np.arange(6, dtype=np.float32))
+    assert arr.dtype == np.float32
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_frame_reader_incremental_and_pipelined(codec):
+    f1 = frames.encode_frame({"kind": "a", "x": 1}, codec)
+    f2 = frames.encode_frame({"kind": "b", "y": [1, 2]}, codec)
+    reader = frames.FrameReader()
+    blob = f1 + f2
+    got = []
+    for i in range(len(blob)):          # byte-at-a-time: never raises
+        got.extend(reader.feed(blob[i:i + 1]))
+    assert [g["kind"] for g in got] == ["a", "b"]
+    assert reader.pending() == 0
+
+
+def test_frame_reader_rejects_bad_length_and_codec():
+    reader = frames.FrameReader(max_frame=1024)
+    with pytest.raises(frames.FrameError):
+        reader.feed((2048).to_bytes(4, "big") + b"J{}")
+    reader = frames.FrameReader()
+    with pytest.raises(frames.FrameError):
+        reader.feed((3).to_bytes(4, "big") + b"Zxx")
+    reader = frames.FrameReader()
+    with pytest.raises(frames.FrameError):                  # zero length
+        reader.feed((0).to_bytes(4, "big"))
+
+
+def test_frame_payload_must_be_dict_with_kind():
+    body = json.dumps([1, 2, 3]).encode()
+    data = (len(body) + 1).to_bytes(4, "big") + b"J" + body
+    with pytest.raises(frames.FrameError):
+        frames.FrameReader().feed(data)
+    body = json.dumps({"nokind": 1}).encode()
+    data = (len(body) + 1).to_bytes(4, "big") + b"J" + body
+    with pytest.raises(frames.FrameError):
+        frames.FrameReader().feed(data)
+    with pytest.raises(frames.FrameError):
+        frames.encode_frame({"no": "kind"})
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_frame_fuzz_corruption_is_contained(codec):
+    """Arbitrary byte corruption of a real frame stream either decodes
+    cleanly or raises FrameError — never hangs, never escapes as another
+    exception type.  Deterministic: seeded corruption positions."""
+    rng = np.random.default_rng(1234)
+    base = b"".join(frames.encode_frame(
+        {"kind": "req", "rid": i,
+         "q": frames.pack_array(rng.standard_normal(4).astype(np.float32))},
+        codec) for i in range(4))
+    for trial in range(200):
+        blob = bytearray(base)
+        for _ in range(rng.integers(1, 6)):
+            pos = int(rng.integers(0, len(blob)))
+            blob[pos] = int(rng.integers(0, 256))
+        reader = frames.FrameReader(max_frame=1 << 20)
+        try:
+            out = reader.feed(bytes(blob))
+            for f in out:               # decoded frames are well-formed
+                assert isinstance(f, dict) and isinstance(f["kind"], str)
+        except frames.FrameError:
+            assert reader.pending() == 0    # poisoned reader cleared
+
+
+def test_frame_oversize_encode_rejected():
+    big = {"kind": "x", "data": b"\x00" * (2 * frames.MAX_FRAME)}
+    with pytest.raises(frames.FrameError):
+        frames.encode_frame(big, "json")
+
+
+def test_unpack_array_validates_untrusted_input():
+    good = frames.pack_array(np.arange(4, dtype=np.int64))
+    np.testing.assert_array_equal(frames.unpack_array(good),
+                                  np.arange(4, dtype=np.int64))
+    for bad in [
+        None, 42, "x",
+        {"dtype": "object", "shape": [1], "data": b"x"},
+        {"dtype": "float32", "shape": [], "data": b""},
+        {"dtype": "float32", "shape": [-1], "data": b""},
+        {"dtype": "float32", "shape": ["a"], "data": b""},
+        {"dtype": "float32", "shape": [2], "data": b"\x00" * 7},
+        {"dtype": "float32", "shape": [2], "data": "notbytes"},
+        {"dtype": "float32", "shape": [1 << 30], "data": b""},
+    ]:
+        with pytest.raises(frames.FrameError):
+            frames.unpack_array(bad)
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def test_lru_eviction_and_refresh():
+    c = LruCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1              # refreshes "a"
+    c.put("c", 3)                       # evicts "b", the LRU
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    s = c.stats()
+    assert s["evictions"] == 1 and s["size"] == 2
+    assert 0.0 < s["hit_rate"] < 1.0
+    with pytest.raises(ValueError):
+        LruCache(0)
+
+
+def test_result_cache_exact_key_and_isolation():
+    rc = ResultCache(8)
+    q = np.arange(4, dtype=np.float32)
+    dists, ids = np.zeros(3, np.float32), np.arange(3, dtype=np.int64)
+    rc.put(q, 3, 8, dists, ids)
+    ids[0] = 99                         # caller mutation must not leak in
+    hit = rc.get(q, 3, 8)
+    assert hit is not None and hit[1][0] == 0
+    assert rc.get(q, 3, 9) is None      # n_probe is part of the key
+    assert rc.get(q.astype(np.float64), 3, 8) is None   # dtype too
+    q2 = q.copy()
+    q2[0] += np.float32(1e-7)           # last-bit difference: different key
+    assert rc.get(q2, 3, 8) is None
+
+
+def test_route_memo():
+    rm = RouteMemo(4)
+    q = np.arange(3, dtype=np.float32)
+    assert rm.get(q) is None
+    rm.put(q, 2)
+    assert rm.get(np.arange(3, dtype=np.float32)) == 2
+
+
+# --------------------------------------------------------------------------
+# clocks + time-handling (satellite: no scattered time.time())
+# --------------------------------------------------------------------------
+
+def test_manual_clock_is_monotonic():
+    c = ManualClock(5.0)
+    assert c.now() == 5.0
+    c.advance(1.5)
+    assert c.now() == 6.5
+    c.set(7.0)
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+    with pytest.raises(ValueError):
+        c.set(6.0)
+
+
+def test_system_clock_monotone():
+    c = SystemClock()
+    assert c.now() <= c.now()
+
+
+def test_health_view_with_injected_clock():
+    clock = ManualClock(0.0)
+    hv = HealthView(1, hb_interval=0.1, clock=clock)
+    hv.start()
+    assert hv.status(0) == HEALTHY
+    clock.advance(10.0)                 # miss_factor exceeded
+    assert hv.status(0) == DOWN
+    hv.beat(0)
+    assert hv.status(0) == HEALTHY
+    # explicit now still wins over the clock
+    assert hv.status(0, now=clock.now() + 100.0) == DOWN
+    with pytest.raises(ValueError):
+        HealthView(1).status(0)         # no clock, no explicit now
+
+
+def test_retry_policy_relative_vs_anchored():
+    anchored = RetryPolicy(timeout_mult=2.0)
+    relative = RetryPolicy(timeout_mult=2.0, relative=True)
+    # anchored: base is the deadline (discrete-event tier semantics)
+    assert anchored.timeout_at(1.0, 5.0, est=0.1) == pytest.approx(5.2)
+    # relative: base is now (transport/TCP-RTO semantics)
+    assert relative.timeout_at(1.0, 5.0, est=0.1) == pytest.approx(1.2)
+
+
+# --------------------------------------------------------------------------
+# request validation + zipf trace (satellites)
+# --------------------------------------------------------------------------
+
+def _req(q, **kw):
+    kw.setdefault("rid", 0)
+    kw.setdefault("k", 4)
+    kw.setdefault("n_probe", 2)
+    kw.setdefault("arrival", 0.0)
+    kw.setdefault("deadline", 1.0)
+    return Request(q=q, **kw)
+
+
+def test_request_rejects_bad_embeddings():
+    _req(np.arange(4, dtype=np.float32))            # fine
+    for bad in [np.array([1.0, np.nan]), np.array([np.inf, 0.0]),
+                np.zeros((2, 2), np.float32), np.array([], np.float32),
+                np.array(["a", "b"])]:
+        with pytest.raises(ValueError):
+            _req(bad)
+
+
+def test_zipf_trace_head_heavy_and_pool_level_k():
+    rng = np.random.default_rng(0)
+    pool = rng.standard_normal((32, 8)).astype(np.float32)
+    trace = make_zipf_trace(rng, pool, 300, [10, 100], rate=100.0,
+                            deadline=1.0, n_probe=4)
+    assert len(trace) == 300
+    assert [r.rid for r in trace] == list(range(300))
+    # head-heavy: the most common query dominates
+    counts = {}
+    k_of = {}
+    for r in trace:
+        key = r.q.tobytes()
+        counts[key] = counts.get(key, 0) + 1
+        # exact-key cache regime: a repeated query repeats its k
+        assert k_of.setdefault(key, r.k) == r.k
+    assert max(counts.values()) >= 0.15 * len(trace)
+    ids = zipf_query_ids(np.random.default_rng(1), 1000, 32)
+    assert ids.min() >= 0 and ids.max() < 32
+    # determinism
+    ids2 = zipf_query_ids(np.random.default_rng(1), 1000, 32)
+    np.testing.assert_array_equal(ids, ids2)
+
+
+# --------------------------------------------------------------------------
+# wire-fault schedule
+# --------------------------------------------------------------------------
+
+def test_wire_schedule_seeded_and_timing_independent():
+    ws = flt.WireSchedule(seed=3, drop=0.2, dup=0.1, slow=0.3)
+    a = [ws.decide(0, "up", s).kind for s in range(200)]
+    # same (seed, worker, direction, seq) -> same decision, any order
+    ws2 = flt.WireSchedule(seed=3, drop=0.2, dup=0.1, slow=0.3)
+    b = [ws2.decide(0, "up", s).kind for s in reversed(range(200))]
+    assert a == list(reversed(b))
+    assert set(a) > {None}              # faults actually fire at these rates
+    # different key dimensions decouple
+    assert a != [ws.decide(1, "up", s).kind for s in range(200)]
+    assert a != [ws.decide(0, "down", s).kind for s in range(200)]
+    d = flt.WireSchedule(seed=0, slow=1.0, slow_base=0.002,
+                         slow_jitter=0.004).decide(0, "up", 0)
+    assert d.kind == flt.WIRE_SLOW and 0.002 <= d.delay <= 0.006
+
+
+def test_wire_schedule_parse_and_validation():
+    ws = flt.WireSchedule.parse("drop=0.02,slow=0.1,slow_ms=2:8,seed=7")
+    assert ws.seed == 7
+    assert ws.rates[flt.WIRE_DROP] == 0.02
+    assert ws.rates[flt.WIRE_SLOW] == 0.1
+    assert ws.slow_base == pytest.approx(0.002)
+    assert ws.slow_jitter == pytest.approx(0.008)
+    assert flt.WireSchedule.parse("dup=0.5").rates[flt.WIRE_DUP] == 0.5
+    assert json.dumps(ws.to_dict())     # JSON-able
+    with pytest.raises(ValueError):
+        flt.WireSchedule(drop=1.5)
+    with pytest.raises(ValueError):
+        flt.WireSchedule(drop=0.6, dup=0.6)     # sum > 1
+    with pytest.raises(ValueError):
+        flt.WireSchedule.parse("bogus=1")
+    assert not flt.WireSchedule()       # rate-free schedule is falsy
+
+
+def test_wire_shim_consumes_one_decision_per_frame():
+    shim = WireShim(flt.WireSchedule(seed=1, drop=0.5))
+    kinds = [shim.decide(0, "up").kind for _ in range(50)]
+    assert flt.WIRE_DROP in kinds
+    assert shim.fault_counts().get("drop") == \
+        sum(k == flt.WIRE_DROP for k in kinds)
+    clean = WireShim(None)
+    assert clean.decide(0, "up").kind is None
+
+
+# --------------------------------------------------------------------------
+# MasterCore via the loopback sim
+# --------------------------------------------------------------------------
+
+KS = (10, 100)
+CEILINGS = k_ceilings(KS)
+SUM_KEYS = ("requests", "completed", "shed", "failed", "rejected",
+            "conserved")
+
+
+def _exec_fn(q, k, n_probe):
+    h = int(np.abs(np.asarray(q, dtype=np.float64)).sum() * 1e3) % 997
+    ids = np.arange(k, dtype=np.int64) + h
+    dists = np.float32(h % 7) + np.arange(k, dtype=np.float32) * 0.01
+    return dists, ids
+
+
+def _service_fn(bucket):
+    return 0.001 + bucket.k * 1e-6
+
+
+def _setup(n_req=120, *, cfg=None, wire=None, kill_at=None, record=False,
+           trace_seed=0, rate=300.0, deadline=0.5):
+    rng = np.random.default_rng(trace_seed)
+    centroids = rng.standard_normal((16, 8)).astype(np.float32)
+    pool = rng.standard_normal((24, 8)).astype(np.float32)
+    trace = make_zipf_trace(rng, pool, n_req, KS, rate=rate,
+                            deadline=deadline, n_probe=4)
+    cfg = cfg or MasterConfig(n_workers=3, ceilings=CEILINGS)
+    core = MasterCore(cfg, centroids)
+    sim = LoopbackSim(core, _exec_fn, _service_fn, wire=wire,
+                      kill_at=kill_at, record=record)
+    return core, sim, trace, cfg, centroids
+
+
+def test_core_clean_run_conserves_and_matches_direct():
+    core, sim, trace, _, _ = _setup()
+    outs = sim.run(trace)
+    s = srv.summarize(outs)
+    assert s["conserved"] and s["completed"] == len(trace)
+    for o in outs:
+        d, i = _exec_fn(o.request.q, o.request.k, o.request.n_probe)
+        np.testing.assert_array_equal(o.ids, i)
+
+
+def test_core_conserves_under_wire_faults_and_kill():
+    wire = flt.WireSchedule(seed=11, drop=0.05, dup=0.03, slow=0.1,
+                            truncate=0.02, disconnect=0.02)
+    core, sim, trace, _, _ = _setup(wire=wire, kill_at={1: 0.05})
+    outs = sim.run(trace)
+    s = srv.summarize(outs)
+    assert s["conserved"], s
+    assert s["completed"] + s["shed"] + s["failed"] + s["rejected"] \
+        == len(trace)
+    assert sim.shim.fault_counts()      # the schedule actually fired
+    # completions still match the direct call exactly, faults or not
+    for o in outs:
+        if o.completed:
+            _, i = _exec_fn(o.request.q, o.request.k, o.request.n_probe)
+            np.testing.assert_array_equal(o.ids, i)
+
+
+def test_core_backpressure_rejects_when_bounded_queues_full():
+    cfg = MasterConfig(n_workers=1, ceilings=CEILINGS, lane_depth=1,
+                       max_pending=2)
+    core, sim, trace, _, _ = _setup(n_req=60, cfg=cfg, rate=5000.0)
+    outs = sim.run(trace)
+    s = srv.summarize(outs)
+    assert s["conserved"]
+    assert s["rejected"] > 0
+    assert core.stats["rejected_backpressure"] > 0
+    # rejected outcomes carry no payload
+    for o in outs:
+        if o.status == srv.REJECTED:
+            assert o.ids is None and o.dists is None
+    # and the client was told to retry later via a RETRY_AFTER frame
+    retry_frames = [f for _, f in sim.replies
+                    if f["kind"] == frames.RETRY_AFTER]
+    assert len(retry_frames) == s["rejected"]
+    assert all(f["delay_s"] > 0 for f in retry_frames)
+
+
+def test_core_drain_rejects_new_keeps_old():
+    core, sim, trace, _, _ = _setup(n_req=40, rate=200.0)
+    # inject a drain event halfway through the trace timeline
+    t_mid = trace[len(trace) // 2].arrival
+    sim._push(t_mid, "core", {"ev": "drain"})
+    outs = sim.run(trace)
+    s = srv.summarize(outs)
+    assert s["conserved"]
+    assert core.stats["rejected_draining"] > 0
+    # everything admitted before the drain still completed
+    for o in outs:
+        if o.request.arrival < t_mid and o.status != srv.REJECTED:
+            assert o.completed
+
+
+def test_core_cache_identical_results_with_hits():
+    core_off, sim_off, trace, cfg, centroids = _setup(n_req=150)
+    outs_off = sim_off.run(trace)
+    cfg_on = MasterConfig(n_workers=3, ceilings=CEILINGS, cache_size=64)
+    core_on = MasterCore(cfg_on, centroids)
+    sim_on = LoopbackSim(core_on, _exec_fn, _service_fn)
+    outs_on = sim_on.run(trace)
+    assert core_on.results.stats()["hit_rate"] > 0
+    a = {o.request.rid: o for o in outs_off if o.completed}
+    b = {o.request.rid: o for o in outs_on if o.completed}
+    for rid in set(a) & set(b):
+        np.testing.assert_array_equal(a[rid].ids, b[rid].ids)
+        np.testing.assert_array_equal(a[rid].dists, b[rid].dists)
+
+
+def test_core_malformed_request_typed_error_no_outcome():
+    core, sim, trace, _, _ = _setup(n_req=5)
+    t0 = trace[0].arrival
+    # non-finite embedding arrives as a raw event (bypasses Request's own
+    # constructor, like a real wire payload would)
+    bad_q = np.array([np.nan] * 8, dtype=np.float32)
+    sim._push(t0, "core", {"ev": "req", "conn": 0, "crid": 777, "q": bad_q,
+                           "k": 10, "n_probe": 4, "deadline_s": 1.0})
+    outs = sim.run(trace)
+    assert core.stats["malformed"] == 1
+    errs = [f for _, f in sim.replies if f["kind"] == frames.ERR
+            and f["rid"] == 777]
+    assert len(errs) == 1 and errs[0]["code"] == "bad_request"
+    assert all(o.request.rid != 777 for o in outs)
+    s = srv.summarize(outs)
+    assert s["conserved"]
+
+
+def test_core_corrupt_response_retries_then_succeeds():
+    rng = np.random.default_rng(0)
+    centroids = rng.standard_normal((8, 8)).astype(np.float32)
+    cfg = MasterConfig(n_workers=1, ceilings=CEILINGS)
+    core = MasterCore(cfg, centroids)
+    core.start(0.0)
+    core.handle({"ev": "up", "t": 0.0, "wid": 0})
+    q = np.arange(8, dtype=np.float32)
+    acts = core.handle({"ev": "req", "t": 0.0, "conn": 1, "crid": 5,
+                        "q": q, "k": 10, "n_probe": 4, "deadline_s": 1.0})
+    sends = [a for a in acts if a[0] == "send"]
+    assert len(sends) == 1
+    rid = sends[0][2]["rid"]
+    dists, ids = _exec_fn(q, 10, 4)
+    # corrupt: checksum does not match the payload
+    acts = core.handle({"ev": "resp", "t": 0.01, "wid": 0, "rid": rid,
+                        "dists": dists, "ids": ids, "checksum": 1})
+    assert core.stats["corrupt_detected"] == 1
+    retry_timers = [a for a in acts if a[0] == "timer"
+                    and a[2]["ev"] == "retry"]
+    assert len(retry_timers) == 1
+    acts = core.handle({**retry_timers[0][2], "t": retry_timers[0][1]})
+    sends = [a for a in acts if a[0] == "send"]
+    assert len(sends) == 1
+    good = flt.payload_checksum(dists, ids)
+    acts = core.handle({"ev": "resp", "t": 0.05, "wid": 0, "rid": rid,
+                        "dists": dists, "ids": ids, "checksum": good})
+    replies = [a for a in acts if a[0] == "reply"]
+    assert len(replies) == 1 and replies[0][2]["kind"] == frames.RESP
+    out = core.outcomes[rid]
+    assert out.completed and out.retries == 1
+
+
+def test_core_short_payload_detected_as_corrupt():
+    rng = np.random.default_rng(0)
+    cfg = MasterConfig(n_workers=1, ceilings=CEILINGS, retry=RetryPolicy(
+        relative=True, max_retries=0))
+    core = MasterCore(cfg, rng.standard_normal((8, 8)).astype(np.float32))
+    core.start(0.0)
+    core.handle({"ev": "up", "t": 0.0, "wid": 0})
+    q = np.arange(8, dtype=np.float32)
+    acts = core.handle({"ev": "req", "t": 0.0, "conn": 1, "crid": 5,
+                        "q": q, "k": 10, "n_probe": 4, "deadline_s": 1.0})
+    rid = [a for a in acts if a[0] == "send"][0][2]["rid"]
+    # truncated-but-parseable: 3 rows instead of 10, checksum consistent
+    d3 = np.zeros(3, np.float32)
+    i3 = np.arange(3, dtype=np.int64)
+    acts = core.handle({"ev": "resp", "t": 0.01, "wid": 0, "rid": rid,
+                        "dists": d3, "ids": i3,
+                        "checksum": flt.payload_checksum(d3, i3)})
+    assert core.stats["corrupt_detected"] == 1
+    assert core.outcomes[rid].status == srv.FAILED   # max_retries=0
+
+
+def test_core_requires_relative_retry_policy():
+    with pytest.raises(ValueError):
+        MasterConfig(n_workers=1, ceilings=CEILINGS,
+                     retry=RetryPolicy(relative=False))
+
+
+def test_sim_deterministic_and_replayable():
+    wire_kw = dict(seed=5, drop=0.04, dup=0.02, slow=0.12, truncate=0.01,
+                   disconnect=0.01)
+    core1, sim1, trace, cfg, centroids = _setup(
+        wire=flt.WireSchedule(**wire_kw), kill_at={2: 0.08}, record=True)
+    outs1 = sim1.run(trace)
+    core2, sim2, trace2, _, _ = _setup(
+        wire=flt.WireSchedule(**wire_kw), kill_at={2: 0.08})
+    outs2 = sim2.run(trace2)
+    d1 = outcome_digest(outs1)
+    assert d1 == outcome_digest(outs2)
+    assert core1.assignments == core2.assignments
+    assert core1.stats == core2.stats
+    # record -> serialize -> load -> replay: byte-identical digest
+    tr = Transcript.loads(sim1.transcript.dumps())
+    res = replay_transcript(tr, cfg, centroids, _exec_fn)
+    assert res.digest == d1
+    assert res.checksum_mismatches == []
+    assert res.core.stats == core1.stats
+
+
+def test_replay_strict_catches_nondeterministic_engine():
+    core, sim, trace, cfg, centroids = _setup(n_req=20, record=True)
+    sim.run(trace)
+    tr = Transcript.loads(sim.transcript.dumps())
+
+    def drifted(q, k, n_probe):         # a different engine build
+        d, i = _exec_fn(q, k, n_probe)
+        return d, i + 1
+    from repro.transport.replay import ReplayError
+    with pytest.raises(ReplayError):
+        replay_transcript(tr, cfg, centroids, drifted)
+    res = replay_transcript(tr, cfg, centroids, drifted, strict=False)
+    assert res.checksum_mismatches
+
+
+def test_transcript_strips_payloads_but_keeps_facts():
+    core, sim, trace, *_ = _setup(n_req=30, record=True)
+    sim.run(trace)
+    resps = [e for e in sim.transcript.entries if e.get("ev") == "resp"]
+    assert resps
+    for e in resps:
+        assert "dists" not in e and "ids" not in e
+        assert "checksum" in e and "n_ids" in e and "ck_ok" in e
